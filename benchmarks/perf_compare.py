@@ -1,0 +1,48 @@
+"""§Perf helper: compare dry-run variants of a cell (hypothesis -> change ->
+before -> after), printing the three roofline terms side by side.
+
+  python benchmarks/perf_compare.py kimi-k2-1t-a32b train_4k base a2a
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRY = os.path.join(ROOT, "benchmarks", "results", "dryrun")
+
+
+def load(arch, shape, mesh, variant):
+    p = os.path.join(DRY, f"{arch}__{shape}__{mesh}__{variant}.json")
+    return json.load(open(p))
+
+
+def compare(arch, shape, variants, mesh="pod1"):
+    recs = [load(arch, shape, mesh, v) for v in variants]
+    keys = [("t_compute", 1e3, "ms"), ("t_memory", 1e3, "ms"),
+            ("t_collective", 1e3, "ms"), ("t_total", 1e3, "ms"),
+            ("flops_per_dev", 1e-12, "TF"), ("bytes_per_dev", 1e-9, "GB"),
+            ("coll_bytes_per_dev", 1e-9, "GB"),
+            ("hbm_gb_per_dev", 1, "GB"), ("useful_ratio", 1, "x")]
+    print(f"{arch} x {shape} ({mesh})")
+    hdr = f"{'metric':22s}" + "".join(f"{v:>16s}" for v in variants)
+    print(hdr)
+    for k, scale, unit in keys:
+        row = f"{k:22s}"
+        base = None
+        for r in recs:
+            val = r.get(k, float('nan')) * scale
+            base = base if base is not None else val
+            delta = "" if r is recs[0] or not base else \
+                f" ({(val/base-1)*100:+.0f}%)"
+            row += f"{val:10.3f}{unit}{delta:>5s}"[:16].rjust(16)
+        print(row)
+    for r, v in zip(recs, variants):
+        print(f"  [{v}] bottleneck={r['bottleneck']} "
+              f"coll={ {k: round(b/1e9,1) for k,b in r['coll_detail'].items()} }")
+
+
+if __name__ == "__main__":
+    arch, shape = sys.argv[1], sys.argv[2]
+    compare(arch, shape, sys.argv[3:] or ["base"])

@@ -1,0 +1,64 @@
+"""§Roofline table generator: reads the dry-run records and emits the
+per-(arch x shape x mesh) roofline analysis for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRY = os.path.join(ROOT, "benchmarks", "results", "dryrun")
+
+
+def load(variant="base", mesh=None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRY, f"*__{variant}.json"))):
+        d = json.load(open(f))
+        if mesh and d.get("mesh") != mesh:
+            continue
+        recs.append(d)
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def table(variant="base", mesh="pod1") -> str:
+    recs = [r for r in load(variant, mesh) if r["status"] == "ok"]
+    hdr = ("| arch | shape | kind | t_comp | t_mem | t_coll | bottleneck | "
+           "HBM/dev | fits v5e | useful |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{fmt_s(r['t_compute'])} | {fmt_s(r['t_memory'])} | "
+            f"{fmt_s(r['t_collective'])} | **{r['bottleneck']}** | "
+            f"{r['hbm_gb_per_dev']:.1f}GB | "
+            f"{'yes' if r['fits_v5e'] else 'NO'} | "
+            f"{r['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def rows(variant="base"):
+    out = []
+    for r in load(variant):
+        if r["status"] != "ok":
+            out.append((f"dryrun/{r['arch']}/{r['shape']}/{r['mesh']}", -1,
+                        f"FAILED {r.get('error','')[:60]}"))
+        else:
+            out.append((
+                f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                r["t_total"] * 1e6,
+                f"bottleneck={r['bottleneck']} useful={r['useful_ratio']:.2f}"
+                f" hbm={r['hbm_gb_per_dev']:.1f}GB"))
+    return out
+
+
+if __name__ == "__main__":
+    print(table())

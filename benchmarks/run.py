@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper result + the roofline table.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call is the natural
+scalar of each row: wall-clock us, energy, %, or roofline time).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    import benchmarks.bench_governor as bg
+    import benchmarks.bench_kernels as bk
+    import benchmarks.bench_pareto as bp
+    import benchmarks.bench_switching as bs
+    import benchmarks.roofline_table as rt
+
+    suites = [
+        ("pareto (paper: Dynamic-OFA vs static)", bp.run),
+        ("governor (paper: energy vs Linux governors)", bg.run),
+        ("switching (paper: runtime architecture switching)", bs.run),
+        ("kernels (elastic matmul / flash attention)", bk.run),
+        ("roofline (dry-run derived)", rt.rows),
+    ]
+    failures = 0
+    print("name,us_per_call,derived")
+    for title, fn in suites:
+        print(f"# --- {title}")
+        try:
+            for name, val, derived in fn():
+                print(f"{name},{val:.3f},{derived}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

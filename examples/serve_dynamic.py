@@ -1,0 +1,13 @@
+"""Serve a dynamic supernet with the runtime resource manager in the loop —
+the paper's deployed system (Fig. 1), end to end:
+
+  request queue -> dynamic batching -> governor picks (subnet, DVFS point)
+  under changing latency targets / thermal throttling / co-running apps ->
+  sliced-executable cache switch -> response.
+
+    PYTHONPATH=src python examples/serve_dynamic.py
+"""
+from repro.launch import serve
+
+serve.main(["--arch", "dynamic-ofa-supernet", "--smoke",
+            "--requests", "48", "--trace-steps", "150"])

@@ -1,0 +1,3 @@
+"""Architecture configs: one module per assigned arch + the paper's own."""
+from repro.configs.registry import (ArchDef, ShapeSpec, get_arch, list_archs,
+                                    load_all)

@@ -1,0 +1,9 @@
+"""Core of the paper's contribution: elastic (dynamic) networks.
+
+Sub-network description (SubnetSpec / ElasticSpace), the masked/sliced
+execution duality, sandwich-rule training utilities, in-place distillation
+and Pareto-front construction used by the runtime resource manager.
+"""
+from repro.core.types import SubnetSpec, ElasticSpace, FULL, round_channels
+from repro.core.elastic import (active_mask, mask_dim, take_dim,
+                                sandwich_specs, spec_to_dynamic)

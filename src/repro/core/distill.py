@@ -1,0 +1,51 @@
+"""In-place distillation for supernet training (sandwich rule).
+
+The largest sub-network acts as the teacher within the same training step
+(Yu et al. 2019; Cai et al. 2020 progressive shrinking): sub-network logits
+are trained against soft teacher targets, the teacher against ground truth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kd_loss(student_logits: jax.Array, teacher_logits: jax.Array,
+            temperature: float = 1.0) -> jax.Array:
+    """KL(teacher || student) with stop-gradient teacher, mean over tokens."""
+    t = jax.lax.stop_gradient(teacher_logits) / temperature
+    s = student_logits / temperature
+    p_t = jax.nn.softmax(t, -1)
+    logp_t = jax.nn.log_softmax(t, -1)
+    logp_s = jax.nn.log_softmax(s, -1)
+    kl = jnp.sum(p_t * (logp_t - logp_s), axis=-1)
+    return jnp.mean(kl) * temperature ** 2
+
+
+def ce_loss(logits: jax.Array, labels: jax.Array,
+            mask: jax.Array | None = None) -> jax.Array:
+    """Token-mean cross entropy; labels int32, optional validity mask."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)
+
+
+def sandwich_loss(apply_fn, params, batch, specs, *, kd_weight: float = 1.0,
+                  temperature: float = 1.0):
+    """Sandwich-rule loss: teacher (max) on labels + students on KD.
+
+    ``apply_fn(params, batch, spec) -> logits``.  ``specs`` must start with
+    the max spec.  Returns (total_loss, metrics).
+    """
+    teacher_logits = apply_fn(params, batch, specs[0])
+    loss = ce_loss(teacher_logits, batch["labels"])
+    metrics = {"loss_teacher": loss}
+    for i, spec in enumerate(specs[1:]):
+        logits = apply_fn(params, batch, spec)
+        l_kd = kd_loss(logits, teacher_logits, temperature)
+        l_ce = ce_loss(logits, batch["labels"])
+        loss = loss + kd_weight * l_kd + (1.0 - min(kd_weight, 1.0)) * l_ce
+        metrics[f"loss_subnet{i}"] = l_kd
+    return loss, metrics

@@ -1,0 +1,143 @@
+"""Mask/slice duality for elastic layers.
+
+Two execution modes implement the paper's dynamic DNN:
+
+* masked mode (training) — active sizes are traced scalars; inactive
+  channels are exact zeros.  One executable covers every sub-network, so
+  the sandwich rule costs a single compile.
+* sliced mode (serving) — active sizes are Python ints; parameters are
+  sliced at trace time so compute genuinely shrinks (the runtime governor
+  switches between per-subnet cached executables).
+
+The invariant that makes both modes agree exactly: every activation tensor
+carries zeros beyond its active channel count, and normalisation layers
+compute statistics over active channels only.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Active, is_static
+
+
+def active_mask(a: "jax.Array | int", size: int, dtype=jnp.float32) -> jax.Array:
+    """[size] vector: 1.0 for channels < a, else 0.0."""
+    return (jnp.arange(size) < a).astype(dtype)
+
+
+def mask_dim(x: jax.Array, a: Active, axis: int = -1) -> jax.Array:
+    """Zero channels >= a along ``axis`` (no-op for None / full static)."""
+    if a is None:
+        return x
+    size = x.shape[axis]
+    if is_static(a) and int(a) == size:
+        return x
+    m = active_mask(a, size, x.dtype)
+    shape = [1] * x.ndim
+    shape[axis] = size
+    return x * m.reshape(shape)
+
+
+def take_dim(p: jax.Array, a: Active, axis: int) -> jax.Array:
+    """STATIC slice of a parameter along ``axis`` to the first ``a`` rows."""
+    if a is None:
+        return p
+    assert is_static(a), "take_dim needs a static active size"
+    a = int(a)
+    if a == p.shape[axis]:
+        return p
+    idx = [slice(None)] * p.ndim
+    idx[axis] = slice(0, a)
+    return p[tuple(idx)]
+
+
+def resolve(a: Active, full: int) -> "jax.Array | int":
+    """Concrete active count (static int or traced scalar)."""
+    if a is None:
+        return full
+    return a
+
+
+def count_or_none(a: Active, full: int):
+    """None if the dim is full/static-full, else the active count."""
+    if a is None or (is_static(a) and int(a) == full):
+        return None
+    return a
+
+
+# ---------------------------------------------------------------------------
+# Sandwich-rule sampling (Yu et al., Slimmable Networks; used by OFA-style
+# progressive shrinking).  Host-side sampling keeps the step function static;
+# the sampled widths enter the jitted step as *traced* scalars (masked mode).
+# ---------------------------------------------------------------------------
+
+def sandwich_specs(space, rng: np.random.Generator, n_random: int = 2):
+    """[max, min, n_random x random] — the sandwich rule batch of subnets."""
+    out = [space.max_spec(), space.min_spec()]
+    for _ in range(n_random):
+        out.append(space.sample(rng))
+    return out
+
+
+def spec_to_dynamic(spec, dims: dict) -> dict:
+    """Turn a SubnetSpec into traced active counts for masked-mode apply.
+
+    ``dims`` maps knob name -> full size, e.g. {"d_model": 768, "d_ff": 3072,
+    "n_heads": 12, "n_layers": 12}.  Returns int32 scalars (device arrays) so
+    a single executable handles any spec.
+    """
+    out = {}
+    if "d_model" in dims:
+        out["a_model"] = jnp.asarray(
+            _round(dims["d_model"], spec.width_mult), jnp.int32)
+    if "d_ff" in dims:
+        out["a_ff"] = jnp.asarray(_round(dims["d_ff"], spec.ffn_mult), jnp.int32)
+    if "n_heads" in dims:
+        out["a_heads"] = jnp.asarray(
+            _round(dims["n_heads"], spec.heads_mult), jnp.int32)
+    if "n_layers" in dims:
+        out["a_layers"] = jnp.asarray(
+            _round(dims["n_layers"], spec.depth_mult), jnp.int32)
+    if "n_experts" in dims and spec.num_experts is not None:
+        out["a_experts"] = jnp.asarray(spec.num_experts, jnp.int32)
+    return out
+
+
+def _round(full: int, mult: float) -> int:
+    return max(1, int(round(full * mult)))
+
+
+def spec_to_static(spec, dims: dict, multiple_of: int = 1) -> dict:
+    """SubnetSpec -> STATIC active counts (python ints) for sliced mode.
+
+    Like :func:`spec_to_dynamic` but returns hashable ints, so the result
+    selects a specialised executable (the serving engine's compile cache).
+    ``multiple_of`` keeps sliced dims divisible by the tensor sharding.
+    """
+    def rnd(full, mult):
+        n = max(multiple_of, int(round(full * mult / multiple_of))
+                * multiple_of)
+        return min(n, full)
+
+    out = {}
+    if "d_model" in dims:
+        out["a_model"] = rnd(dims["d_model"], spec.width_mult)
+    if "d_ff" in dims:
+        out["a_ff"] = rnd(dims["d_ff"], spec.ffn_mult)
+    if "n_heads" in dims:
+        n_kv = dims.get("n_kv_heads", dims["n_heads"])
+        h = max(1, int(round(dims["n_heads"] * spec.heads_mult)))
+        if dims["n_heads"] % n_kv == 0 and n_kv < dims["n_heads"]:
+            h = max(n_kv, (h // n_kv) * n_kv)     # keep GQA groups even
+        out["a_heads"] = min(h, dims["n_heads"])
+    if "n_layers" in dims:
+        out["a_layers"] = _round(dims["n_layers"], spec.depth_mult)
+    if "n_experts" in dims and spec.num_experts is not None:
+        out["a_experts"] = int(spec.num_experts)
+    if spec.top_k is not None:
+        out["top_k"] = int(spec.top_k)
+    return out

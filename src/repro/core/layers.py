@@ -1,0 +1,519 @@
+"""Elastic layers (pure JAX, functional: init -> params dict, apply).
+
+Every layer supports three regimes for each elastic dimension:
+  * ``None``            — full size;
+  * static ``int``      — sliced parameters (serving mode, compute shrinks);
+  * traced scalar       — masked channels (training mode, single executable).
+
+Masked-mode invariant: activations are exact zeros beyond the active count,
+and normalisation statistics are computed over active channels only, so the
+two regimes produce bit-comparable results (property-tested).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.elastic import active_mask, count_or_none, mask_dim, resolve, take_dim
+from repro.core.types import is_static
+
+
+def _cast(p, dtype):
+    return p.astype(dtype) if p.dtype != dtype else p
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = True,
+               dtype=jnp.float32, scale: Optional[float] = None) -> dict:
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    k_w, _ = jax.random.split(key)
+    p = {"kernel": jax.random.normal(k_w, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p: dict, x: jax.Array, *, a_in=None, a_out=None) -> jax.Array:
+    """x: (..., d_in). Elastic in/out channels.
+
+    In masked mode the input is assumed already zero beyond ``a_in`` (the
+    zeros kill the extra rows of the kernel), so only the output needs a
+    mask.  In sliced mode both kernel dims are sliced.
+    """
+    w, b = p["kernel"], p.get("bias")
+    if a_in is not None and is_static(a_in):
+        w = take_dim(w, a_in, 0)
+    if a_out is not None and is_static(a_out):
+        w = take_dim(w, a_out, 1)
+        if b is not None:
+            b = take_dim(b, a_out, 0)
+    y = x @ _cast(w, x.dtype)
+    if b is not None:
+        y = y + _cast(b, x.dtype)
+    if a_out is not None and not is_static(a_out):
+        y = mask_dim(y, a_out, -1)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+def layernorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p: dict, x: jax.Array, *, a=None, eps: float = 1e-6) -> jax.Array:
+    d = x.shape[-1]
+    scale, bias = p["scale"], p["bias"]
+    if a is not None and is_static(a):
+        # sliced mode: caller already sliced x to (..., a)
+        scale, bias = take_dim(scale, a, 0), take_dim(bias, a, 0)
+        a = None
+    if a is None:
+        mean = jnp.mean(x, -1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mean), -1, keepdims=True)
+        y = (x - mean) * jax.lax.rsqrt(var + eps)
+        return y * _cast(scale, x.dtype) + _cast(bias, x.dtype)
+    # masked statistics over active channels only
+    n = a.astype(x.dtype)
+    m = active_mask(a, d, x.dtype)
+    mean = jnp.sum(x * m, -1, keepdims=True) / n
+    var = jnp.sum(jnp.square((x - mean) * m), -1, keepdims=True) / n
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * _cast(scale, x.dtype) + _cast(bias, x.dtype)
+    return y * m
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p: dict, x: jax.Array, *, a=None, eps: float = 1e-6) -> jax.Array:
+    d = x.shape[-1]
+    scale = p["scale"]
+    if a is not None and is_static(a):
+        scale = take_dim(scale, a, 0)
+        a = None
+    if a is None:
+        ms = jnp.mean(jnp.square(x), -1, keepdims=True)
+        return x * jax.lax.rsqrt(ms + eps) * _cast(scale, x.dtype)
+    n = a.astype(x.dtype)
+    m = active_mask(a, d, x.dtype)
+    ms = jnp.sum(jnp.square(x * m), -1, keepdims=True) / n
+    return x * jax.lax.rsqrt(ms + eps) * _cast(scale, x.dtype) * m
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"embedding": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embedding_apply(p: dict, ids: jax.Array, *, a=None, dtype=jnp.bfloat16) -> jax.Array:
+    tbl = p["embedding"]
+    if a is not None and is_static(a):
+        tbl = take_dim(tbl, a, 1)
+        a = None
+    y = _cast(tbl, dtype)[ids]
+    return mask_dim(y, a, -1) if a is not None else y
+
+
+def embedding_attend(p: dict, x: jax.Array, *, a=None) -> jax.Array:
+    """Tied-embedding logits: x (..., d) @ embedding.T -> (..., vocab)."""
+    tbl = p["embedding"]
+    if a is not None and is_static(a):
+        tbl = take_dim(tbl, a, 1)
+    return x @ _cast(tbl, x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# MLP blocks (dense FFN)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, *, gated: bool = True,
+             bias: bool = False, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], d_model, d_ff, bias=bias, dtype=dtype),
+         "wo": dense_init(ks[1], d_ff, d_model, bias=bias, dtype=dtype)}
+    if gated:
+        p["wg"] = dense_init(ks[2], d_model, d_ff, bias=bias, dtype=dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jax.Array, *, a_model=None, a_ff=None,
+              act: str = "silu") -> jax.Array:
+    """Gated (SwiGLU) or plain FFN with elastic hidden and model dims."""
+    h = dense_apply(p["wi"], x, a_in=a_model, a_out=a_ff)
+    fn = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[act]
+    if "wg" in p:
+        g = dense_apply(p["wg"], x, a_in=a_model, a_out=a_ff)
+        h = fn(g) * h
+    else:
+        h = fn(h)
+    if a_ff is not None and not is_static(a_ff):
+        h = mask_dim(h, a_ff, -1)   # act(0)=0 for relu/silu but not gelu-tanh
+    return dense_apply(p["wo"], h, a_in=a_ff, a_out=a_model)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, ..., D) with D even; positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B,S,half)
+    # broadcast over head dims between S and D
+    extra = x.ndim - 3
+    ang = ang.reshape(ang.shape[:2] + (1,) * extra + (half,))
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, elastic query heads, ref / blocked / causal-blocked impls)
+# ---------------------------------------------------------------------------
+#
+# Query heads are laid out as (R groups, K kv-heads): flat head h = r*K + k.
+# Slicing or masking the first ``a_heads`` heads then keeps every kv head
+# with an equal number of groups, so GQA stays well formed for every width.
+
+def attention_init(key, d_model: int, n_heads: int, n_kv: int, d_head: int,
+                   *, qkv_bias: bool = False, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "q": dense_init(ks[0], d_model, n_heads * d_head, bias=qkv_bias, dtype=dtype),
+        "k": dense_init(ks[1], d_model, n_kv * d_head, bias=qkv_bias, dtype=dtype),
+        "v": dense_init(ks[2], d_model, n_kv * d_head, bias=qkv_bias, dtype=dtype),
+        "o": dense_init(ks[3], n_heads * d_head, d_model, bias=qkv_bias, dtype=dtype),
+    }
+
+
+def _split_heads(x, n, d_head):
+    return x.reshape(x.shape[:-1] + (n, d_head))
+
+
+def _attn_core(q, k, v, *, causal: bool, q_offset, scale: float,
+               kv_len=None) -> jax.Array:
+    """q: (B,S,R,K,D); k,v: (B,T,K,D) -> (B,S,R,K,D). fp32 softmax."""
+    scores = jnp.einsum("bsrkd,btkd->brkst", q, k).astype(jnp.float32) * scale
+    T = k.shape[1]
+    tpos = jnp.arange(T)
+    neg = jnp.finfo(jnp.float32).min
+    if causal:
+        qpos = jnp.arange(q.shape[1]) + q_offset
+        scores = jnp.where(qpos[:, None] >= tpos[None, :], scores, neg)
+    if kv_len is not None:  # decode: only the first kv_len cache slots valid
+        scores = jnp.where(tpos[None, :] < kv_len, scores, neg)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("brkst,btkd->bsrkd", w, v)
+
+
+def _attn_blocked(q, k, v, *, causal: bool, scale: float, block_q: int,
+                  block_kv: int, exact_causal: bool) -> jax.Array:
+    """Memory-efficient online-softmax attention (pure XLA flash pattern).
+
+    ``exact_causal=True`` unrolls query blocks and truncates each one's KV
+    extent, so HLO FLOPs match the causal optimum (~2x saving vs the masked
+    scan).  This is the XLA fallback; the Pallas kernel is the TPU fast path.
+    """
+    B, S, R, K, D = q.shape
+    T = k.shape[1]
+    nq, nkv = S // block_q, T // block_kv
+    assert S % block_q == 0 and T % block_kv == 0
+
+    def q_block(qi, qb):
+        # qb: (B, bq, R, K, D); iterate kv blocks with running max/denominator.
+        if exact_causal and causal:
+            hi = qi + 1  # static python int — kv extent truncated per q block
+        else:
+            hi = nkv
+        ks_ = k[:, : hi * block_kv].reshape(B, hi, block_kv, K, D)
+        vs_ = v[:, : hi * block_kv].reshape(B, hi, block_kv, K, D)
+
+        def inner(carry, inp):
+            m_prev, l_prev, acc = carry
+            kj, vj, j = inp
+            s = jnp.einsum("bsrkd,btkd->brkst", qb, kj).astype(jnp.float32) * scale
+            if causal:
+                qpos = qi * block_q + jnp.arange(block_q)
+                tpos = j * block_kv + jnp.arange(block_kv)
+                s = jnp.where(qpos[:, None] >= tpos[None, :], s,
+                              jnp.finfo(jnp.float32).min)
+            m = jnp.maximum(m_prev, s.max(-1))
+            p = jnp.exp(s - m[..., None])
+            corr = jnp.exp(m_prev - m)
+            l = l_prev * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "brkst,btkd->brksd", p.astype(qb.dtype), vj).astype(jnp.float32)
+            return (m, l, acc), None
+
+        m0 = jnp.full((B, R, K, block_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, R, K, block_q), jnp.float32)
+        a0 = jnp.zeros((B, R, K, block_q, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            lambda c, i: inner(c, i), (m0, l0, a0),
+            (ks_.swapaxes(0, 1), vs_.swapaxes(0, 1), jnp.arange(hi)))
+        out = acc / l[..., None]
+        return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,bq,R,K,D)
+
+    if exact_causal and causal:
+        outs = [q_block(i, q[:, i * block_q:(i + 1) * block_q]) for i in range(nq)]
+        return jnp.concatenate(outs, axis=1)
+    qb = q.reshape(B, nq, block_q, R, K, D).swapaxes(0, 1)
+    # scan over q blocks (masked-causal variant)
+    def scan_q(_, inp):
+        qi, qblk = inp
+        return None, _q_block_masked(qi, qblk, k, v, causal, scale, block_q,
+                                     block_kv)
+    _, outs = jax.lax.scan(scan_q, None, (jnp.arange(nq), qb))
+    return outs.swapaxes(0, 1).reshape(B, S, R, K, D)
+
+
+def _q_block_masked(qi, qb, k, v, causal, scale, block_q, block_kv):
+    """One query block over ALL kv blocks with masking (qi may be traced)."""
+    B, bq, R, K, D = qb.shape
+    T = k.shape[1]
+    nkv = T // block_kv
+    ks_ = k.reshape(B, nkv, block_kv, K, D).swapaxes(0, 1)
+    vs_ = v.reshape(B, nkv, block_kv, K, D).swapaxes(0, 1)
+
+    def inner(carry, inp):
+        m_prev, l_prev, acc = carry
+        kj, vj, j = inp
+        s = jnp.einsum("bsrkd,btkd->brkst", qb, kj).astype(jnp.float32) * scale
+        if causal:
+            qpos = qi * block_q + jnp.arange(bq)
+            tpos = j * block_kv + jnp.arange(block_kv)
+            s = jnp.where(qpos[:, None] >= tpos[None, :], s,
+                          jnp.finfo(jnp.float32).min)
+        m = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m[..., None])
+        corr = jnp.exp(m_prev - m)
+        l = l_prev * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "brkst,btkd->brksd", p.astype(qb.dtype), vj).astype(jnp.float32)
+        return (m, l, acc), None
+
+    m0 = jnp.full((B, R, K, bq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, R, K, bq), jnp.float32)
+    a0 = jnp.zeros((B, R, K, bq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0), (ks_, vs_, jnp.arange(nkv)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).astype(qb.dtype)
+
+
+def attention_apply(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
+                    d_head: int, causal: bool = True,
+                    positions: Optional[jax.Array] = None,
+                    rope_theta: Optional[float] = 10000.0,
+                    a_model=None, a_heads=None,
+                    kv_cache: Optional[dict] = None,
+                    impl: str = "ref", block_q: int = 512,
+                    block_kv: int = 512, return_kv: bool = False,
+                    decode_impl: str = "xla", mesh=None) -> tuple:
+    """Returns (out (B,S,d_model_active), new_kv_cache | None).
+
+    kv_cache: {"k": (B,T,K,D), "v": (B,T,K,D), "len": scalar int32} — decode
+    appends the new token at position ``len`` and attends to len+1 entries.
+    """
+    B, S, _ = x.shape
+    H = n_heads
+    mha = n_kv == n_heads
+    # --- static head slicing -------------------------------------------------
+    # MHA: kv heads shrink together with query heads.  GQA/MQA: kv heads stay
+    # (they are cheap); query groups per kv head shrink, so active heads must
+    # be a multiple of n_kv.
+    sliced_heads = None
+    kv_active = n_kv
+    if a_heads is not None and is_static(a_heads):
+        sliced_heads = int(a_heads)
+        H = sliced_heads
+        if mha:
+            kv_active = sliced_heads
+        else:
+            assert sliced_heads % n_kv == 0, \
+                "active heads must keep GQA groups even"
+    R = H // kv_active
+
+    q = dense_apply(p["q"], x, a_in=a_model, a_out=(None if sliced_heads is None
+                                                    else sliced_heads * d_head))
+    a_kv = None if (sliced_heads is None or not mha) else kv_active * d_head
+    k = dense_apply(p["k"], x, a_in=a_model, a_out=a_kv)
+    v = dense_apply(p["v"], x, a_in=a_model, a_out=a_kv)
+    q = _split_heads(q, H, d_head).reshape(B, S, R, kv_active, d_head)
+    k = _split_heads(k, kv_active, d_head)
+    v = _split_heads(v, kv_active, d_head)
+
+    if positions is None:
+        if kv_cache is not None:
+            positions = kv_cache["len"] + jnp.arange(S)[None, :]
+        else:
+            positions = jnp.arange(S)[None, :]
+    if rope_theta is not None:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+
+    scale = 1.0 / math.sqrt(d_head)
+    new_cache = None
+    if return_kv:
+        new_cache = {"k": k, "v": v, "len": jnp.asarray(S, jnp.int32)}
+    if kv_cache is not None:
+        idx = kv_cache["len"]
+        if decode_impl == "sharded" and mesh is not None \
+                and "model" in mesh.axis_names:
+            # two-pass softmax over the sequence-sharded cache (§Perf).
+            # axis choice mirrors launch.steps cache specs: big batches
+            # shard seq over 'model' only, tiny batches over every axis.
+            from repro.distributed.decode_attn import sharded_decode_attention
+            seq_axes = (("model",) if B >= 16
+                        else ("pod", "data", "model"))
+            out, ck, cv = sharded_decode_attention(
+                q, k, v, kv_cache["k"], kv_cache["v"], idx, mesh=mesh,
+                seq_axes=seq_axes)
+            new_cache = {"k": ck, "v": cv, "len": idx + S}
+        else:
+            # decode: write k/v at position len, attend over the whole cache
+            ck = jax.lax.dynamic_update_slice(
+                kv_cache["k"], k.astype(kv_cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                kv_cache["v"], v.astype(kv_cache["v"].dtype), (0, idx, 0, 0))
+            new_cache = {"k": ck, "v": cv, "len": idx + S}
+            out = _attn_core(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                             causal=False, q_offset=idx, scale=scale,
+                             kv_len=idx + S)
+    elif impl == "ref" or S <= block_q:
+        out = _attn_core(q, k, v, causal=causal, q_offset=0, scale=scale)
+    else:
+        out = _attn_blocked(q, k, v, causal=causal, scale=scale,
+                            block_q=block_q, block_kv=block_kv,
+                            exact_causal=(impl == "blocked_causal"))
+
+    # --- masked-mode head gating (inactive heads must contribute zeros) ------
+    if a_heads is not None and not is_static(a_heads):
+        hm = active_mask(a_heads, n_heads, out.dtype).reshape(R, n_kv)
+        out = out * hm[None, None, :, :, None]
+    out = out.reshape(B, S, H * d_head)
+    a_in_o = None if sliced_heads is None else sliced_heads * d_head
+    y = dense_apply(p["o"], out, a_in=a_in_o, a_out=a_model)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Convolutions (NHWC) + switchable batch norm (slimmable-nets trick)
+# ---------------------------------------------------------------------------
+
+def conv_init(key, ksize: int, c_in: int, c_out: int, *, groups: int = 1,
+              bias: bool = False, dtype=jnp.float32) -> dict:
+    fan_in = ksize * ksize * c_in // groups
+    w = jax.random.normal(key, (ksize, ksize, c_in // groups, c_out), dtype)
+    p = {"kernel": w * (1.0 / math.sqrt(fan_in))}
+    if bias:
+        p["bias"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def conv_apply(p: dict, x: jax.Array, *, stride: int = 1, groups: int = 1,
+               a_in=None, a_out=None, a_kernel: Optional[int] = None,
+               padding: str = "SAME") -> jax.Array:
+    """NHWC conv with elastic channels and (static) elastic kernel size.
+
+    Elastic kernel = OFA-style centre crop of the full kernel.  Depthwise
+    convs pass groups == c_in; elastic channels then slice/mask both sides
+    in lockstep (a_in == a_out).
+    """
+    w, b = p["kernel"], p.get("bias")
+    kh = w.shape[0]
+    if a_kernel is not None and a_kernel < kh:
+        off = (kh - a_kernel) // 2
+        w = w[off:off + a_kernel, off:off + a_kernel]
+    depthwise = groups > 1
+    if not depthwise and a_in is None and x.shape[-1] < w.shape[2]:
+        a_in = x.shape[-1]   # auto-slice: input already narrowed upstream
+    if a_in is not None and is_static(a_in):
+        if not depthwise:
+            w = take_dim(w, a_in, 2)
+    if a_out is not None and is_static(a_out):
+        w = take_dim(w, a_out, 3)
+        if b is not None:
+            b = take_dim(b, a_out, 0)
+        if depthwise:
+            groups = int(a_out)
+    y = jax.lax.conv_general_dilated(
+        x, _cast(w, x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    if b is not None:
+        y = y + _cast(b, x.dtype)
+    if a_out is not None and not is_static(a_out):
+        y = mask_dim(y, a_out, -1)
+    return y
+
+
+def groupnorm_init(c: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def groupnorm_apply(p: dict, x: jax.Array, *, groups: int = 32,
+                    eps: float = 1e-5) -> jax.Array:
+    """x: (..., C) normalised per group over (spatial..., C/groups)."""
+    c = x.shape[-1]
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    lead = x.shape[:1]
+    xg = x.reshape(lead + (-1, g, c // g))
+    mean = jnp.mean(xg, axis=(1, 3), keepdims=True)
+    var = jnp.mean(jnp.square(xg - mean), axis=(1, 3), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    y = xg.reshape(x.shape)
+    return y * _cast(p["scale"], x.dtype) + _cast(p["bias"], x.dtype)
+
+
+def sbn_init(c: int, n_settings: int = 1, dtype=jnp.float32) -> dict:
+    """Switchable BatchNorm: independent affine+stats per width setting."""
+    return {
+        "scale": jnp.ones((n_settings, c), dtype),
+        "bias": jnp.zeros((n_settings, c), dtype),
+        "mean": jnp.zeros((n_settings, c), dtype),
+        "var": jnp.ones((n_settings, c), dtype),
+    }
+
+
+def sbn_apply(p: dict, x: jax.Array, *, setting: int = 0, train: bool = False,
+              a=None, eps: float = 1e-5, momentum: float = 0.9):
+    """Returns (y, new_stats | None).  ``setting`` indexes the width option."""
+    scale, bias = p["scale"][setting], p["bias"][setting]
+    if a is not None and is_static(a):
+        scale, bias = take_dim(scale, a, 0), take_dim(bias, a, 0)
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axes)
+        var = jnp.mean(jnp.square(x), axes) - jnp.square(mean)
+        new_stats = (mean, var)
+    else:
+        mean, var = p["mean"][setting], p["var"][setting]
+        if a is not None and is_static(a):
+            mean, var = take_dim(mean, a, 0), take_dim(var, a, 0)
+        new_stats = None
+    y = (x - _cast(mean, x.dtype)) * jax.lax.rsqrt(_cast(var, x.dtype) + eps)
+    y = y * _cast(scale, x.dtype) + _cast(bias, x.dtype)
+    if a is not None and not is_static(a):
+        y = mask_dim(y, a, -1)
+    return y, new_stats

@@ -1,0 +1,45 @@
+"""Pareto frontier construction over (latency, accuracy, energy).
+
+The runtime manager deploys only Pareto-optimal (sub-network x hw-state)
+points — the paper's "pre-selected sub-networks with different
+latency-accuracy trade-offs".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class OpPoint:
+    """One operating point: a sub-network under a hardware state."""
+    subnet: object            # SubnetSpec
+    hw_state: object          # HwState
+    latency_ms: float
+    energy_mj: float
+    accuracy: float
+
+    def dominates(self, other: "OpPoint") -> bool:
+        no_worse = (self.latency_ms <= other.latency_ms
+                    and self.energy_mj <= other.energy_mj
+                    and self.accuracy >= other.accuracy)
+        better = (self.latency_ms < other.latency_ms
+                  or self.energy_mj < other.energy_mj
+                  or self.accuracy > other.accuracy)
+        return no_worse and better
+
+
+def pareto_front(points: Sequence[OpPoint]) -> List[OpPoint]:
+    """O(n^2) non-dominated filter (tables are small: |subnets| x |hw|)."""
+    front = [p for p in points
+             if not any(q.dominates(p) for q in points if q is not p)]
+    return sorted(front, key=lambda p: p.latency_ms)
+
+
+def accuracy_latency_front(points: Sequence[OpPoint]) -> List[OpPoint]:
+    """2-D (latency, accuracy) frontier — the paper's Fig.-style curve."""
+    best: List[OpPoint] = []
+    for p in sorted(points, key=lambda p: (p.latency_ms, -p.accuracy)):
+        if not best or p.accuracy > best[-1].accuracy:
+            best.append(p)
+    return best

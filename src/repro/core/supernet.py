@@ -1,0 +1,64 @@
+"""Sandwich-rule supernet training step (the paper's training recipe).
+
+One masked-mode executable evaluates the max sub-network (teacher, CE on
+labels), the min sub-network and ``n_random`` random sub-networks
+(students, in-place distillation from the teacher) every step — Slimmable
+Networks' sandwich rule as used by Dynamic-OFA.
+
+The random widths enter the jitted step as TRACED scalars, so one compile
+covers the whole elastic space; the host samples specs per step.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distill import ce_loss, kd_loss
+from repro.core.elastic import sandwich_specs, spec_to_dynamic
+from repro.core.types import ElasticSpace
+from repro.optim import clip_by_global_norm
+
+
+def make_sandwich_step(apply_fn: Callable, update_fn: Callable,
+                       dims: Dict[str, int], *, n_random: int = 2,
+                       kd_weight: float = 1.0, temperature: float = 1.0,
+                       clip: float = 1.0):
+    """Returns (step_fn, sample_fn).
+
+    ``apply_fn(params, batch, E) -> logits``;
+    ``step_fn(params, opt, batch, E_stack, step)`` jit-able;
+    ``sample_fn(rng) -> E_stack`` host-side sandwich sampling producing a
+    dict of stacked int32 arrays with leading dim (1 + n_random)
+    [min, random...] — the teacher (max) runs unmasked.
+    """
+    n_students = 1 + n_random
+
+    def step_fn(params, opt, batch, E_stack, step):
+        def loss_fn(p):
+            teacher = apply_fn(p, batch, None)
+            loss = ce_loss(teacher, batch["labels"])
+            for i in range(n_students):
+                E = {k: v[i] for k, v in E_stack.items()}
+                logits = apply_fn(p, batch, E)
+                loss = loss + kd_weight * kd_loss(logits, teacher,
+                                                  temperature) / n_students
+            return loss
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, gn = clip_by_global_norm(grads, clip)
+        params, opt = update_fn(params, grads, opt, step)
+        return params, opt, {"loss": loss, "gnorm": gn}
+
+    def sample_fn(space: ElasticSpace, rng: np.random.Generator):
+        specs = [space.min_spec()] + [space.sample(rng)
+                                      for _ in range(n_random)]
+        stacks: Dict[str, list] = {}
+        for spec in specs:
+            E = spec_to_dynamic(spec, dims)
+            for k, v in E.items():
+                stacks.setdefault(k, []).append(v)
+        return {k: jnp.stack(v) for k, v in stacks.items()}
+
+    return step_fn, sample_fn

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (Prefetcher, host_shard, memmap_token_batches,
+                                 synthetic_image_batches,
+                                 synthetic_lm_batches)

@@ -1,0 +1,106 @@
+"""Fault tolerance: watchdog, straggler detection, restart driver.
+
+At thousand-node scale the failure model is: chips/hosts vanish (preempt,
+ECC, fabric), steps stall (network), or hosts slow down (thermal).  The
+SPMD program itself cannot survive a member loss — recovery is
+checkpoint/restart, possibly on a SMALLER mesh (elastic restore).  This
+module provides the pieces the launcher composes:
+
+* :class:`Watchdog` — heartbeat thread; a stalled step (> timeout) fires a
+  callback (in production: abort the job so the scheduler reschedules it —
+  here: raise in the main thread via a flag).
+* :class:`StragglerMonitor` — per-step wall-time tracker; flags hosts/steps
+  slower than k x rolling median.  On TPU SPMD a straggler host slows every
+  step globally, so mitigation = flag + (at the fleet level) replace the
+  host and restart from the last checkpoint; the monitor provides the
+  detection signal and records it.
+* :func:`run_with_restarts` — supervisor loop: run the train function,
+  catch failures (incl. injected :class:`SimulatedFailure`), restore from
+  the latest checkpoint and continue, up to ``max_restarts``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Callable, Optional
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected by tests/examples to exercise the restart path."""
+
+
+class Watchdog:
+    def __init__(self, timeout_s: float = 300.0,
+                 on_stall: Optional[Callable[[], None]] = None):
+        self.timeout_s = timeout_s
+        self.on_stall = on_stall
+        self._last_beat = time.monotonic()
+        self._stop = threading.Event()
+        self.stalled = False
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+
+    def start(self):
+        self._last_beat = time.monotonic()
+        self._thread.start()
+        return self
+
+    def beat(self):
+        self._last_beat = time.monotonic()
+
+    def stop(self):
+        self._stop.set()
+
+    def _loop(self):
+        while not self._stop.wait(min(self.timeout_s / 4, 5.0)):
+            if time.monotonic() - self._last_beat > self.timeout_s:
+                self.stalled = True
+                if self.on_stall:
+                    self.on_stall()
+                return
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 50, threshold: float = 2.0):
+        self.times = deque(maxlen=window)
+        self.threshold = threshold
+        self.flags = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is a straggler outlier."""
+        import statistics
+        is_straggler = False
+        if len(self.times) >= 10:
+            med = statistics.median(self.times)
+            if seconds > self.threshold * med:
+                is_straggler = True
+                self.flags.append({"step": step, "seconds": seconds,
+                                   "median": med})
+        self.times.append(seconds)
+        return is_straggler
+
+
+def run_with_restarts(train_fn, *, manager, max_restarts: int = 3,
+                      logger=print):
+    """Supervisor: ``train_fn(start_step, restored_state|None) -> state``.
+
+    On failure, restores the latest checkpoint and re-invokes train_fn.
+    Returns (final_state, n_restarts).
+    """
+    restarts = 0
+    while True:
+        start_step, state = 0, None
+        latest = manager.latest_step()
+        if latest is not None:
+            start_step, state = manager.restore_latest()
+            start_step += 1
+            logger(f"[fault] resuming from checkpoint step {start_step - 1}")
+        try:
+            return train_fn(start_step, state), restarts
+        except (SimulatedFailure, OSError, RuntimeError) as e:
+            restarts += 1
+            logger(f"[fault] failure at restart {restarts}: {e!r}")
+            if hasattr(manager, "wait"):
+                manager.wait()   # drain in-flight async saves before restore
+            if restarts > max_restarts:
+                raise

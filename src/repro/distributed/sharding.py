@@ -1,0 +1,179 @@
+"""Path-pattern sharding rules -> PartitionSpec per parameter.
+
+t5x-style logical rules, implemented as predicates over the parameter path
+string and shape.  ``fsdp`` axes additionally shard the largest
+non-model dim of big parameters (ZeRO-3 semantics under GSPMD: per-layer
+all-gathers inside the scan).
+
+Specs may name axes ("pod") missing from a given mesh; ``clean_spec``
+drops them so one rule set serves single- and multi-pod meshes.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def clean_spec(spec: P, mesh) -> P:
+    names = set(mesh.axis_names)
+
+    def keep(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a in names)
+            return kept if kept else None
+        return e if e in names else None
+
+    return P(*[keep(e) for e in spec])
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _stacked(path_s: str) -> bool:
+    """Stacked-layer params (leading L dim from vmap init / scan)."""
+    return "layers/" in path_s and "exit_heads" not in path_s
+
+
+def lm_rules(path_s: str, shape: Tuple[int, ...], fsdp) -> P:
+    base = None
+    if path_s.endswith("embed/embedding"):
+        return P("model", fsdp)
+    if path_s.endswith("lm_head/kernel"):
+        return P(fsdp, "model")
+    if "/attn/" in path_s or "/attn1/" in path_s:
+        if path_s.endswith("o/kernel"):
+            base = P("model", fsdp)
+        elif path_s.endswith("kernel"):
+            base = P(fsdp, "model")
+        elif path_s.endswith("o/bias"):
+            base = P(None)
+        elif path_s.endswith("bias"):
+            base = P("model")
+    elif "/moe/" in path_s:
+        if "router" in path_s:
+            base = P(None, None)
+        elif "/shared/" in path_s:
+            if path_s.endswith("wo/kernel"):
+                base = P("model", fsdp)
+            elif path_s.endswith("kernel"):
+                base = P(fsdp, "model")
+            else:
+                base = P("model")
+        elif path_s.endswith("wo"):
+            base = P("model", None, fsdp)
+        elif path_s.endswith("wi") or path_s.endswith("wg"):
+            base = P("model", fsdp, None)
+    elif "/mlp/" in path_s:
+        if path_s.endswith("wo/kernel"):
+            base = P("model", fsdp)
+        elif path_s.endswith("kernel"):
+            base = P(fsdp, "model")
+        elif path_s.endswith("wo/bias"):
+            base = P(None)
+        elif path_s.endswith("bias"):
+            base = P("model")
+    if base is None:
+        base = P(*([None] * len(shape)))
+        if _stacked(path_s):
+            return base
+        return base
+    if _stacked(path_s):
+        return P(None, *base)
+    return base
+
+
+def vision_rules(path_s: str, shape: Tuple[int, ...], fsdp) -> P:
+    # transformer-style leaves reuse the LM rules
+    if any(t in path_s for t in ("/attn/", "/attn1/", "/mlp/", "embed/")):
+        return lm_rules(path_s, shape, fsdp)
+    if any(path_s.endswith(s) for s in ("q2/kernel", "kv2/kernel")):
+        spec = P(None, "model")
+    elif path_s.endswith("o2/kernel"):
+        spec = P("model", None)
+    elif path_s.endswith("ada/kernel"):
+        spec = P(None, "model")
+    elif "conv" in path_s or "patch_embed" in path_s or "/dw/" in path_s \
+            or any(t in path_s for t in ("expand/", "project/", "stem/",
+                                         "head/", "down/", "up/", "skip/",
+                                         "proj/", "se_")):
+        if len(shape) == 4 and shape[-1] >= 256:
+            spec = P(None, None, None, "model")
+        else:
+            spec = P(*([None] * len(shape)))
+    elif path_s.endswith("fc/kernel") and shape[0] >= 1024:
+        spec = P("model", None)
+    else:
+        spec = P(*([None] * len(shape)))
+    if _stacked(path_s) and len(spec) == len(shape) - 1:
+        return P(None, *spec)
+    if len(spec) != len(shape):
+        spec = P(*([None] * len(shape)))
+    return spec
+
+
+def param_specs(shapes_tree, family: str, *, fsdp_axes=("pod", "data"),
+                fsdp_min_size: int = 1 << 22):
+    """pytree of PartitionSpec matching ``shapes_tree`` (of SDS/arrays)."""
+    fsdp = tuple(fsdp_axes) if fsdp_axes else None
+
+    def one(path, leaf):
+        path_s = _path_str(path)
+        shape = tuple(leaf.shape)
+        rules = lm_rules if family == "lm" else vision_rules
+        spec = rules(path_s, shape, fsdp)
+        if len(spec) != len(shape):
+            spec = P(*([None] * len(shape)))
+        # drop fsdp sharding for small params (all-gather latency not worth it)
+        if fsdp and int(np.prod(shape)) < fsdp_min_size:
+            spec = P(*[None if e == fsdp or e == tuple(fsdp) else e
+                       for e in spec])
+        # drop axes a dim can't divide evenly (max shards: 16 per single
+        # axis, 32 for the ("pod","data") fsdp pair on the multi-pod mesh)
+        def fits(dim, entry):
+            if entry is None:
+                return True
+            req = 32 if isinstance(entry, (tuple, list)) else 16
+            return dim % req == 0
+        spec = P(*[e if fits(shape[i], e) else None
+                   for i, e in enumerate(spec)])
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, shapes_tree)
+
+
+def opt_specs_like(param_specs_tree, opt_state_shapes, params_shapes):
+    """Derive optimizer-state PartitionSpecs from the param specs.
+
+    Elementwise states inherit the param spec; adafactor's factored moments
+    drop the corresponding trailing dim of the spec.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(params_shapes)
+    spec_flat = treedef.flatten_up_to(param_specs_tree)
+    state_flat = treedef.flatten_up_to(opt_state_shapes["s"])
+
+    out = []
+    for p, spec, st in zip(leaves, spec_flat, state_flat):
+        d = {}
+        for k, v in st.items():
+            if v.shape == p.shape:
+                d[k] = spec
+            elif k == "vr":                      # p.shape[:-1]
+                d[k] = P(*spec[:-1])
+            elif k == "vc":                      # p.shape[:-2] + last
+                d[k] = P(*(tuple(spec[:-2]) + (spec[-1],)))
+            else:
+                d[k] = P(*([None] * v.ndim))
+        out.append(d)
+    return {"s": jax.tree_util.tree_unflatten(treedef, out)}
+
+
+def to_named(specs_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, clean_spec(s, mesh)), specs_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: width-elastic matmul — the paper's hot spot.
+
+A Dynamic-OFA sub-network runs y = x[:, :k_act] @ W[:k_act, :n_act] where
+(k_act, n_act) change at RUNTIME (channel scaling).  Recompiling per width
+(sliced mode) is the fastest steady-state option, but switching then costs
+a compile.  This kernel gives the third point on that trade-off curve: ONE
+compiled executable whose MXU work scales with the active width.
+
+TPU mapping (HW adaptation, DESIGN.md §2):
+  * grid (M/bm, N/bn, K/bk), K innermost; fp32 VMEM accumulator scratch;
+  * (k_act, n_act) arrive via scalar prefetch (SMEM) so both the index_map
+    and the kernel body can read them;
+  * tiles with n-offset >= n_act or k-offset >= k_act SKIP their MXU work
+    (pl.when) and their index_map re-points the DMA at an already-resident
+    block, so skipped tiles cost neither bandwidth nor compute;
+  * the boundary tile masks lanes beyond the active count, so results are
+    bit-comparable to slicing (property-tested against ref.py).
+
+Block sizes default to (128, 128, 128) — MXU-aligned (128x128 systolic
+array, lane width 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(scalars_ref, x_ref, w_ref, o_ref, acc_ref, *, bm, bk, bn,
+            n_k_tiles):
+    k_act = scalars_ref[0]
+    n_act = scalars_ref[1]
+    ni = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # is this (n, k) tile inside the active region?
+    live = jnp.logical_and(ni * bn < n_act, ki * bk < k_act)
+
+    @pl.when(live)
+    def _compute():
+        x = x_ref[...]
+        w = w_ref[...]
+        # boundary k tile: zero lanes beyond k_act
+        k_off = ki * bk
+        kmask = (k_off + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+                 < k_act)
+        w = jnp.where(kmask, w, jnp.zeros_like(w))
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k_tiles - 1)
+    def _emit():
+        n_off = ni * bn
+        nmask = (n_off + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+                 < n_act)
+        out = jnp.where(nmask, acc_ref[...], jnp.zeros_like(acc_ref))
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def elastic_matmul(x: jax.Array, w: jax.Array, k_act, n_act, *,
+                   bm: int = 128, bk: int = 128, bn: int = 128,
+                   interpret: bool = False) -> jax.Array:
+    """y[m, n] = sum_{k<k_act} x[m, k] w[k, n] for n < n_act, else 0.
+
+    x: (M, K), w: (K, N); k_act/n_act: int32 scalars (traced ok).
+    M, K, N must be multiples of the block sizes (ops.py pads).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and M % bm == 0 and K % bk == 0 and N % bn == 0
+    nm, nn, nk = M // bm, N // bn, K // bk
+    scalars = jnp.asarray([k_act, n_act], jnp.int32)
+
+    def x_map(i, j, k, scal):
+        # skipped tiles re-fetch block (i, 0): no fresh DMA traffic
+        live_k = k * bk < scal[0]
+        return (i, jax.lax.select(live_k, k, 0))
+
+    def w_map(i, j, k, scal):
+        live = jnp.logical_and(j * bn < scal[1], k * bk < scal[0])
+        return (jax.lax.select(live, k, 0), jax.lax.select(live, j, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), x_map),
+            pl.BlockSpec((bk, bn), w_map),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, scal: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    kernel = functools.partial(_kernel, bm=bm, bk=bk, bn=bn, n_k_tiles=nk)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(scalars, x, w)

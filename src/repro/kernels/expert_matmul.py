@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: expert-gated grouped matmul (MoE hot path).
+
+Dispatched MoE activations arrive as (E, C, d) — one capacity-padded slab
+per expert.  The FFN is then E independent matmuls, but at runtime many
+slabs are partially or fully EMPTY (capacity padding; decode-scale token
+counts; *elastic expert counts* — the paper's knob applied to MoE).  A
+plain batched einsum burns MXU cycles on all of them.
+
+This kernel takes the per-expert token counts via scalar prefetch and
+  * skips experts with zero tokens (and experts >= the elastic a_experts),
+  * skips token tiles beyond the expert's count,
+re-pointing skipped DMAs at resident blocks, so MXU work tracks the REAL
+load: compute scales with sum(counts), not E*C.
+
+Grid: (E, C/bc, f/bf); fp32 VMEM accumulator; 128-aligned tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(counts_ref, x_ref, w_ref, o_ref, acc_ref, *, bc, bf, n_f):
+    e = pl.program_id(0)
+    ci = pl.program_id(1)
+    live = ci * bc < counts_ref[e]
+
+    @pl.when(live)
+    def _compute():
+        x = x_ref[0]                      # (bc, d)
+        w = w_ref[0]                      # (d, bf)
+        # zero rows beyond this expert's token count (boundary tile)
+        row = ci * bc + jax.lax.broadcasted_iota(jnp.int32, (bc, 1), 0)
+        x = jnp.where(row < counts_ref[e], x, jnp.zeros_like(x))
+        o_ref[0] = jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+    @pl.when(jnp.logical_not(live))
+    def _skip():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+
+def expert_matmul(x: jax.Array, w: jax.Array, counts: jax.Array, *,
+                  bc: int = 128, bf: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """out[e, c] = x[e, c] @ w[e] for c < counts[e], else 0.
+
+    x: (E, C, d); w: (E, d, F); counts: (E,) int32 (traced ok — one
+    executable covers every load/elastic-expert setting).
+    C % bc == 0 and F % bf == 0 (ops.py pads).
+    """
+    E, C, d = x.shape
+    _, _, F = w.shape
+    assert C % bc == 0 and F % bf == 0
+    nc, nf = C // bc, F // bf
+
+    def x_map(e, ci, fi, cnt):
+        live = ci * bc < cnt[e]
+        return (e, jax.lax.select(live, ci, 0), 0)
+
+    def w_map(e, ci, fi, cnt):
+        live = ci * bc < cnt[e]
+        return (jax.lax.select(live, e, e), 0, fi)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(E, nc, nf),
+        in_specs=[
+            pl.BlockSpec((1, bc, d), x_map),
+            pl.BlockSpec((1, d, bf), w_map),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf),
+                               lambda e, ci, fi, cnt: (e, ci, fi)),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+    )
+    kernel = functools.partial(_kernel, bc=bc, bf=bf, n_f=nf)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        interpret=interpret,
+    )(counts.astype(jnp.int32), x, w)
+
+
+def expert_matmul_ref(x: jax.Array, w: jax.Array,
+                      counts: jax.Array) -> jax.Array:
+    """Pure-jnp oracle."""
+    E, C, _ = x.shape
+    mask = (jnp.arange(C)[None, :] < counts[:, None]).astype(x.dtype)
+    return jnp.einsum("ecd,edf->ecf", x * mask[..., None],
+                      w.astype(x.dtype))

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: blocked causal flash attention (online softmax).
+
+The serving shapes (prefill_32k, long_500k) need sub-quadratic memory; on
+TPU the natural mapping is KV-blocked online softmax with the running
+(max, denominator, accumulator) kept in VMEM scratch across the innermost
+grid dimension.  Causally-dead KV tiles are skipped (pl.when), so compute
+matches the causal optimum.
+
+Grid: (batch*heads, S/bq, T/bkv), KV innermost.  fp32 softmax state; bf16
+or f32 inputs.  GQA callers pass q already grouped per kv head.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq, bkv, n_kv, causal, scale):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0]                       # (bq, d)
+        k = k_ref[0]                       # (bkv, d)
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(qpos >= kpos, s, _NEG)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1)[:, None]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)[:, None]
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+
+    if causal:
+        # causally-dead tile: every key index > every query index — skip
+        pl.when(ki * bkv <= qi * bq + bq - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_kv - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 256, bkv: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, S, D), k/v: (BH, T, D) -> (BH, S, D).
+
+    S % bq == 0 and T % bkv == 0 (ops.py pads); D should be a multiple of
+    128 for MXU alignment (not enforced — interpret mode tests sweep odd
+    sizes too).
+    """
+    BH, S, D = q.shape
+    _, T, _ = k.shape
+    assert S % bq == 0 and T % bkv == 0
+    nq, nkv = S // bq, T // bkv
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_kernel, bq=bq, bkv=bkv, n_kv=nkv,
+                               causal=causal, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def elastic_matmul_ref(x: jax.Array, w: jax.Array, k_act, n_act) -> jax.Array:
+    """y = x[:, :k_act] @ w[:k_act, :n_act], zero beyond n_act."""
+    K = x.shape[1]
+    N = w.shape[1]
+    kmask = (jnp.arange(K) < k_act).astype(x.dtype)
+    nmask = (jnp.arange(N) < n_act).astype(x.dtype)
+    y = (x * kmask[None, :]) @ w.astype(x.dtype)
+    return y * nmask[None, :]
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """Naive attention: q/k/v (BH, S|T, D)."""
+    D = q.shape[-1]
+    s = jnp.einsum("bsd,btd->bst", q, k).astype(jnp.float32)
+    s = s / math.sqrt(D)
+    if causal:
+        S, T = q.shape[1], k.shape[1]
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p.astype(q.dtype), v)

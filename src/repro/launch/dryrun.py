@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import — jax locks the device
+count on first init.  Only this entry point forces 512 host devices; smoke
+tests and benchmarks see the real device count.
+
+For every cell we record, into benchmarks/results/dryrun/<cell>.json:
+  * memory_analysis()  — per-device bytes (proves it fits / flags overflow)
+  * cost_analysis()    — per-device HLO FLOPs & bytes (roofline terms)
+  * collective bytes   — parsed from the post-SPMD HLO text
+  * MODEL_FLOPS        — analytic useful-compute yardstick
+
+Usage:
+  python -m repro.launch.dryrun                     # all cells, both meshes
+  python -m repro.launch.dryrun --arch qwen1.5-110b --shape train_4k
+  python -m repro.launch.dryrun --mesh single        # 16x16 only
+  python -m repro.launch.dryrun --variant a2a        # MoE all-to-all path
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_arch, list_archs
+from repro.distributed import use_mesh
+from repro.launch import roofline as rl
+from repro.launch.flops import model_flops
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.runtime.hwmodel import HwState, roofline
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             variant: str = "base", overrides=None, force: bool = False,
+             accum=None, kv_dtype="bfloat16", drop_tp: bool = False,
+             batch_all: bool = False, fsdp: bool = True, subnet=None):
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    out_path = RESULTS / f"{arch_id}__{shape_name}__{mesh_tag}__{variant}.json"
+    if out_path.exists() and not force:
+        rec = json.loads(out_path.read_text())
+        if rec.get("status") == "ok":   # failures are retried after fixes
+            print(f"[cached] {out_path.name}: ok")
+            return rec
+
+    arch = get_arch(arch_id)
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_tag,
+           "variant": variant, "status": "error"}
+    t0 = time.time()
+    try:
+        import jax.numpy as jnp
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cfg_overrides = dict(overrides or {})
+        with use_mesh(mesh):
+            cell = build_cell(arch, shape_name, mesh=mesh,
+                              cfg_overrides=cfg_overrides or None,
+                              accum=accum, kv_dtype=jnp.dtype(kv_dtype),
+                              drop_tp=drop_tp, batch_all=batch_all,
+                              fsdp=fsdp,
+                              subnet_E=(json.loads(subnet) if subnet
+                                        else None))
+            lowered = cell.lower(mesh)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        cost = rl.cost_summary(compiled)          # XLA's own (loop bodies x1)
+        mem = rl.memory_summary(compiled)
+        from repro.launch.hlo_analysis import analyze_hlo
+        hlo = analyze_hlo(compiled.as_text())     # trip-count-aware
+        n_chips = mesh.size
+        mf = model_flops(arch, cell.cfg, cell.shape)
+        hw = HwState(chips=n_chips, freq=1.0)
+        terms = roofline(hlo["flops"], hlo["traffic_bytes"],
+                         hlo["coll_bytes_total"], hw)
+
+        rec.update(
+            status="ok", chips=n_chips,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            kind=cell.kind,
+            flops_per_dev=hlo["flops"], bytes_per_dev=hlo["traffic_bytes"],
+            coll_bytes_per_dev=hlo["coll_bytes_total"],
+            coll_detail={k: v for k, v in hlo["coll_bytes"].items() if v},
+            top_ops=hlo["top_ops"],
+            xla_cost_analysis=cost,
+            memory=mem,
+            model_flops_global=mf,
+            model_flops_per_dev=mf / n_chips,
+            useful_ratio=(mf / n_chips) / hlo["flops"] if hlo["flops"] else 0,
+            t_compute=terms.t_compute, t_memory=terms.t_memory,
+            t_collective=terms.t_collective, t_total=terms.t_total,
+            bottleneck=terms.bottleneck,
+            hbm_gb_per_dev=mem["per_device_total"] / 1e9,
+            fits_v5e=mem["per_device_total"] < 16e9,
+        )
+        print(f"[ok] {out_path.name}: compile={rec['compile_s']}s "
+              f"bottleneck={rec['bottleneck']} t={rec['t_total']:.4f}s "
+              f"hbm={rec['hbm_gb_per_dev']:.1f}GB useful={rec['useful_ratio']:.2f}")
+    except Exception as e:  # noqa: BLE001 — record failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {out_path.name}: {rec['error'][:200]}")
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--moe-dispatch", default=None,
+                    help="override MoE dispatch (einsum|a2a)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (repeatable); values "
+                         "parsed as python literals where possible")
+    ap.add_argument("--accum", type=int, default=None,
+                    help="grad-accumulation override")
+    ap.add_argument("--kv-dtype", default="bfloat16",
+                    help="decode KV-cache dtype (e.g. int8 for quantised)")
+    ap.add_argument("--drop-tp", action="store_true",
+                    help="replicate over the model axis (DP-only serving)")
+    ap.add_argument("--batch-all", action="store_true",
+                    help="serve with the batch spread over every mesh axis")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="disable ZeRO-3 param sharding (serving configs)")
+    ap.add_argument("--subnet", default=None,
+                    help='JSON dict of static active dims, e.g. '
+                         '\'{"a_model":384,"a_layers":6}\' — the paper\'s '
+                         'sub-network knob applied to the dry-run cell')
+    ap.add_argument("--skip-assigned", action="store_true",
+                    help="skip the paper's own supernet config")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else [
+        a for a in list_archs()
+        if not (args.skip_assigned and a == "dynamic-ofa-supernet")]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch_id in archs:
+        arch = get_arch(arch_id)
+        shapes = [args.shape] if args.shape else list(arch.shapes)
+        for shape_name in shapes:
+            for mp in meshes:
+                overrides = {}
+                if args.moe_dispatch and arch.family == "lm" \
+                        and arch.make_config().moe is not None:
+                    cfg = arch.make_config()
+                    overrides["moe"] = dataclasses.replace(
+                        cfg.moe, dispatch=args.moe_dispatch)
+                for kv in args.set:
+                    k, v = kv.split("=", 1)
+                    try:
+                        import ast
+                        v = ast.literal_eval(v)
+                    except (ValueError, SyntaxError):
+                        pass
+                    overrides[k] = v
+                rec = run_cell(arch_id, shape_name, mp, variant=args.variant,
+                               overrides=overrides, force=args.force,
+                               accum=args.accum, kv_dtype=args.kv_dtype,
+                               drop_tp=args.drop_tp, batch_all=args.batch_all,
+                               fsdp=not args.no_fsdp, subnet=args.subnet)
+                n_fail += rec["status"] != "ok"
+    print(f"\ndone; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,297 @@
+"""Trip-count-aware HLO analysis (the dry-run 'profiler').
+
+XLA's ``compiled.cost_analysis()`` counts a ``lax.scan`` body ONCE — an
+80-layer scanned transformer reports ~1/80th of its FLOPs.  This module
+parses the post-optimization HLO text instead and walks the call graph,
+multiplying each computation by its execution count (``while`` trip counts
+come from ``backend_config={"known_trip_count":...}``).
+
+Counted:
+  * flops      — dot + convolution (MXU work; elementwise is memory-bound
+                 and shows up in the traffic term instead).  Counted in
+                 every computation, including fusion-called ones.
+  * traffic    — per-op operand+result bytes, as a post-fusion HBM model:
+                 only 'executed' computations (entry, while bodies,
+                 conditional branches) contribute; a fusion op counts its
+                 operands/results once, with slicing ops capped so a
+                 dynamic-slice of a stacked-params tensor doesn't count the
+                 whole stack.
+  * collectives— result bytes by kind (all-reduce / all-gather / ...).
+  * top_ops    — largest contributors, for hillclimbing.
+
+All numbers are per-device (the HLO is the per-partition SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s4": 1, "u4": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+_SKIP_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                 "bitcast", "while", "call", "conditional", "iota",
+                 "after-all", "partition-id", "replica-id", "custom-call",
+                 "rng-bit-generator", "convert", "reshape", "broadcast",
+                 "compare", "select", "add", "multiply", "subtract", "divide",
+                 "maximum", "minimum", "exponential", "tanh", "rsqrt", "sqrt",
+                 "negate", "abs", "and", "or", "not", "xor", "clamp", "sign",
+                 "floor", "ceil", "log", "log-plus-one", "exponential-minus-one"}
+# (bare elementwise ops appear when XLA leaves them unfused; they are tiny
+#  next to fusions and skipping them avoids double counting)
+_SLICING = {"dynamic-slice", "slice", "gather"}
+
+
+def _shape_numel_bytes(text: str) -> Tuple[int, int]:
+    n_total, b_total = 0, 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        n_total += n
+        b_total += n * _DTYPE_BYTES[dt]
+    return n_total, b_total
+
+
+def _dims_of(shape_text: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+class _Instr:
+    __slots__ = ("name", "shape", "op", "args", "attrs", "line")
+
+    def __init__(self, name, shape, op, args, attrs, line):
+        self.name, self.shape, self.op = name, shape, op
+        self.args, self.attrs, self.line = args, attrs, line
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\([^()]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([\w\-]+)\(")
+
+
+def _parse_instr(line: str):
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, shape, op = m.groups()
+    rest = line[m.end():]
+    depth, i = 1, 0
+    while i < len(rest) and depth:
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+        i += 1
+    arg_region, attrs = rest[: i - 1], rest[i:]
+    args = re.findall(r"%([\w.\-]+)", arg_region)
+    return _Instr(name, shape, op, args, attrs, line)
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, List[_Instr]], str]:
+    comps: Dict[str, List[_Instr]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        hdr = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{$", s)
+        if hdr and not s.startswith("//"):
+            cur = hdr.group(2)
+            comps[cur] = []
+            if hdr.group(1):
+                entry = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None or " = " not in s:
+            continue
+        ins = _parse_instr(s)
+        if ins:
+            comps[cur].append(ins)
+    return comps, entry
+
+
+def _dot_flops(ins: _Instr, shapes: Dict[str, str]) -> float:
+    out_n, _ = _shape_numel_bytes(ins.shape)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    if not m or not ins.args:
+        return 2.0 * out_n
+    dims = _dims_of(shapes.get(ins.args[0], ""))
+    k = 1
+    for d in (m.group(1).split(",") if m.group(1) else []):
+        di = int(d)
+        if di < len(dims):
+            k *= dims[di]
+    return 2.0 * out_n * k
+
+
+def _conv_flops(ins: _Instr, shapes: Dict[str, str]) -> float:
+    out_n, _ = _shape_numel_bytes(ins.shape)
+    if len(ins.args) < 2:
+        return 2.0 * out_n
+    rhs = _dims_of(shapes.get(ins.args[1], ""))
+    m = re.search(r"dim_labels=[^,]*_([0-9a-z]+)->", ins.attrs)
+    k = 1
+    if m and rhs:
+        for pos, ch in enumerate(m.group(1)):
+            if (ch.isdigit() or ch == "i") and pos < len(rhs):
+                k *= rhs[pos]
+    return 2.0 * out_n * k
+
+
+def _instr_traffic(ins: _Instr, shapes: Dict[str, str]) -> float:
+    """Post-fusion HBM traffic estimate for one top-level instruction."""
+    if ins.op in _SKIP_TRAFFIC:
+        return 0.0
+    _, out_b = _shape_numel_bytes(ins.shape)
+    if ins.op in _SLICING:
+        return 2.0 * out_b
+    if ins.op == "dynamic-update-slice":
+        upd = shapes.get(ins.args[1], "") if len(ins.args) > 1 else ""
+        _, ub = _shape_numel_bytes(upd)
+        return 2.0 * ub
+    if ins.op == "scatter":
+        return 2.0 * out_b
+    if ins.op == "fusion" and "dynamic-update-slice" in ins.name:
+        # in-place scan-stash write: count only the updated slice (the
+        # operand(s) smaller than the carried buffer), read+write
+        small = 0.0
+        for a in ins.args:
+            _, ab = _shape_numel_bytes(shapes.get(a, ""))
+            if ab < out_b:
+                small += ab
+        return 2.0 * small
+    in_b = 0.0
+    kind = re.search(r"kind=k(\w+)", ins.attrs)
+    reduction_like = ins.op in ("reduce", "reduce-window", "sort") or (
+        ins.op == "fusion" and kind and kind.group(1) == "Input")
+    for a in ins.args:
+        _, ab = _shape_numel_bytes(shapes.get(a, ""))
+        if not reduction_like and ins.op == "fusion":
+            # loop fusions touch at most O(out) of each operand (slices of
+            # stacked params would otherwise count the whole stack)
+            ab = min(ab, 2.0 * out_b)
+        in_b += ab
+    return out_b + in_b
+
+
+def analyze_hlo(hlo: str, top_k: int = 12) -> dict:
+    comps, entry = parse_module(hlo)
+
+    stats = {}
+    exec_edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    fuse_edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    for cname, instrs in comps.items():
+        shapes = {i.name: i.shape for i in instrs}
+        flops = 0.0
+        traffic = 0.0
+        coll = defaultdict(float)
+        per_op = []
+        for ins in instrs:
+            if ins.op == "dot":
+                f = _dot_flops(ins, shapes)
+                flops += f
+                per_op.append((f, "flops", ins.line[:140]))
+            elif ins.op == "convolution":
+                f = _conv_flops(ins, shapes)
+                flops += f
+                per_op.append((f, "flops", ins.line[:140]))
+            # call graph
+            if ins.op == "while":
+                tm = re.search(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)',
+                               ins.attrs)
+                trip = float(tm.group(1)) if tm else 1.0
+                for key, mult in (("body", trip), ("condition", trip)):
+                    mm = re.search(rf"{key}=%?([\w.\-]+)", ins.attrs)
+                    if mm:
+                        exec_edges[cname].append((mm.group(1), mult))
+            elif ins.op == "conditional":
+                for grp in re.findall(r"branch_computations=\{([^}]*)\}",
+                                      ins.attrs):
+                    for c in re.findall(r"%?([\w.\-]+)", grp):
+                        exec_edges[cname].append((c, 1.0))
+            elif ins.op == "call":
+                for c in re.findall(r"to_apply=%?([\w.\-]+)", ins.attrs):
+                    exec_edges[cname].append((c, 1.0))
+            else:
+                for key in ("calls", "to_apply"):
+                    for c in re.findall(rf"{key}=%?([\w.\-]+)", ins.attrs):
+                        fuse_edges[cname].append((c, 1.0))
+            # traffic & collectives (per-computation; weighted later)
+            t = _instr_traffic(ins, shapes)
+            traffic += t
+            if t > 0 and ins.op not in ("dot", "convolution"):
+                per_op.append((t, "bytes", ins.line[:140]))
+            for c in _COLLECTIVES:
+                if ins.op == c or ins.op == c + "-start":
+                    _, out_b = _shape_numel_bytes(ins.shape)
+                    coll[c] += out_b
+                    per_op.append((out_b, "coll", ins.line[:140]))
+        stats[cname] = {"flops": flops, "traffic": traffic, "coll": coll,
+                        "per_op": per_op}
+
+    # execution counts: flops flow through ALL edges; traffic/collectives
+    # only through exec edges (fusion-called computations are materialized
+    # by their fusion op, already counted at the call site).
+    def propagate(edge_sets):
+        counts = defaultdict(float)
+        stack = [(entry, 1.0)]
+        guard = 0
+        while stack:
+            guard += 1
+            if guard > 200000:
+                break
+            cname, mult = stack.pop()
+            counts[cname] += mult
+            for edges in edge_sets:
+                for callee, m in edges.get(cname, ()):
+                    if callee in comps:
+                        stack.append((callee, mult * m))
+        return counts
+
+    flop_counts = propagate((exec_edges, fuse_edges))
+    exec_counts = propagate((exec_edges,))
+
+    total_flops = sum(stats[c]["flops"] * n for c, n in flop_counts.items()
+                      if c in stats)
+    total_traffic = sum(stats[c]["traffic"] * n for c, n in exec_counts.items()
+                        if c in stats)
+    coll_tot = defaultdict(float)
+    for c, n in exec_counts.items():
+        if c not in stats:
+            continue
+        for k, v in stats[c]["coll"].items():
+            coll_tot[k] += v * n
+
+    contributors = []
+    for c in stats:
+        for val, kind, line in stats[c]["per_op"]:
+            n = flop_counts.get(c, 0) if kind == "flops" else exec_counts.get(c, 0)
+            if n and val * n > 0:
+                contributors.append((val * n, kind, f"x{n:g} {line}"))
+    contributors.sort(key=lambda t: -t[0])
+
+    return {
+        "flops": total_flops,
+        "traffic_bytes": total_traffic,
+        "coll_bytes": dict(coll_tot),
+        "coll_bytes_total": sum(coll_tot.values()),
+        "top_ops": [(round(v, 3), k, l) for v, k, l in contributors[:top_k]],
+        "n_computations": len(comps),
+    }

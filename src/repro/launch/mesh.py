@@ -1,0 +1,29 @@
+"""Production mesh definitions.
+
+Functions, not module-level constants — importing this module never touches
+jax device state.  The dry-run (and only the dry-run) forces 512 host
+devices via XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh helper (tests use (1,1) or (2,2) CPU meshes)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n_devices: int | None = None):
+    """Small local mesh over however many devices exist (smoke/serving)."""
+    n = n_devices or len(jax.devices())
+    return make_mesh((n, 1), ("data", "model"))

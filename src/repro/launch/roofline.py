@@ -1,0 +1,95 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+``cost_analysis()`` provides per-device HLO FLOPs and bytes; collective
+bytes are NOT in cost_analysis, so we parse the post-SPMD HLO text and sum
+the operand/result sizes of every collective op.  All quantities are
+per-device (the HLO is the per-partition program), matching
+  collective term = collective_bytes / link_bw
+(the brief's /chips with global bytes is the same quantity).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved by each collective kind (result sizes).
+
+    ``-start`` async forms are counted; their ``-done`` halves are skipped.
+    Returns {kind: bytes, ..., "total": bytes, "count": n_ops}.
+    """
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    count = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if " = " not in line:
+            continue
+        lhs, rhs = line.split(" = ", 1)
+        m = re.match(r"(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+                     r"([a-z0-9-]+)", rhs)
+        if not m:
+            continue
+        ret, op = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        count += 1
+        out[kind] += _shape_bytes(ret)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["count"] = count
+    return out
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    """Per-device flops/bytes from compiled.cost_analysis()."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):   # older API returned one dict per computation
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        out[k] = float(getattr(ma, k, 0) or 0)
+    out["per_device_total"] = (out["argument_size_in_bytes"]
+                               + out["output_size_in_bytes"]
+                               + out["temp_size_in_bytes"]
+                               - out["alias_size_in_bytes"])
+    return out

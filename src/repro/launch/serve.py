@@ -1,0 +1,105 @@
+"""Serving launcher: the paper's deployed system.
+
+``python -m repro.launch.serve --arch dynamic-ofa-supernet --smoke``
+
+Brings up the DynamicServer (sub-network executable cache + dynamic
+batching) with the JointGovernor in the loop, drives it with the paper's
+workload trace (changing latency targets, thermal throttling, co-running
+apps) and prints the monitor summary next to the Linux-governor baselines.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.types import SubnetSpec
+from repro.runtime import (Constraints, DynamicServer, JointGovernor, Monitor,
+                           PerformanceGovernor, SchedutilGovernor,
+                           StaticPrunedGovernor, measured_lut, model_lut,
+                           paper_trace, run_governor)
+from repro.runtime import hwmodel as hm
+
+
+def build_server(arch, cfg, *, max_batch=8):
+    key = jax.random.PRNGKey(0)
+    if arch.arch_id.startswith(("deit", "vit", "dynamic-ofa")):
+        from repro.models.vit import vit_apply, vit_init
+        params = vit_init(key, cfg)
+        dims = {"d_model": cfg.d_model, "d_ff": cfg.d_ff,
+                "n_heads": cfg.n_heads, "n_layers": cfg.n_layers}
+        apply_fn = lambda p, x, E: vit_apply(p, x, cfg, E=E)[0]
+    else:
+        raise SystemExit("serve launcher: vision transformer archs only "
+                         "(the paper serves image classification)")
+    return DynamicServer(apply_fn, params, dims, max_batch=max_batch)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dynamic-ofa-supernet")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--trace-steps", type=int, default=200)
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    cfg = arch.make_smoke() if args.smoke else arch.make_config()
+    server = build_server(arch, cfg)
+
+    # Pareto subnets of the elastic space
+    specs = list(dict.fromkeys(
+        [cfg.elastic.max_spec(), cfg.elastic.min_spec()]
+        + list(cfg.elastic.enumerate(limit=24))))
+    x = np.random.default_rng(0).normal(
+        size=(server.max_batch, cfg.img_res, cfg.img_res, 3)).astype(np.float32)
+
+    # measured LUT on this host (freq modelled; latency real wall-clock)
+    def measure(spec, hw):
+        lat = server.measure(spec, x) / hw.freq
+        terms = hm.RooflineTerms(lat / 1e3, 0.0, 0.0)
+        return lat, hm.step_energy_mj(terms, hw)
+
+    lut = measured_lut(specs, measure)
+    print(f"profiled {len(lut.points)} operating points over "
+          f"{len(specs)} subnets")
+
+    full = SubnetSpec()
+    base_ms = np.median([p.latency_ms for p in lut.points
+                         if p.subnet == full])
+    governors = {
+        "joint (paper)": JointGovernor(lut),
+        "performance": PerformanceGovernor(lut, full),
+        "schedutil": SchedutilGovernor(lut, full),
+        "static-pruned": StaticPrunedGovernor(
+            lut, worst_case=Constraints(target_latency_ms=base_ms * 0.8,
+                                        chips_available=1)),
+    }
+    print(f"\nworkload trace: {args.trace_steps} steps, base target "
+          f"{base_ms:.2f}ms")
+    for name, gov in governors.items():
+        mon = run_governor(gov, paper_trace(args.trace_steps, chips=1,
+                                            base_target_ms=base_ms))
+        print(f"  {name:16s} {mon.summary()}")
+
+    # serve real batched requests through the governor
+    gov = governors["joint (paper)"]
+    constraints = lambda: Constraints(target_latency_ms=base_ms,
+                                      chips_available=1)
+    server.governor = gov
+    server.start(constraints_fn=constraints)
+    futs = [server.submit(x[0]) for _ in range(args.requests)]
+    outs = [f.get(timeout=30) for f in futs]
+    server.stop()
+    lats = [o["latency_ms"] for o in outs]
+    print(f"\nserved {len(outs)} requests  p50={np.percentile(lats,50):.1f}ms "
+          f"p99={np.percentile(lats,99):.1f}ms  "
+          f"subnets used: {sorted(set(o['subnet'] for o in outs))}")
+    print(f"switches: {len(server.switch_log)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,434 @@
+"""Step builders: (arch x shape x mesh) -> jit-able step + specs.
+
+One entry point, :func:`build_cell`, returns everything the dry-run, the
+trainer and the benchmarks need for a cell:
+
+  * ``fn``            the step function (train / prefill / decode / denoise /
+                      serve), closing over the model config,
+  * ``args``          ShapeDtypeStruct stand-ins for every input,
+  * ``in_shardings`` / ``out_shardings``  PartitionSpec trees (cleaned
+                      against the mesh at jit time).
+
+No device allocation happens here — params enter as ShapeDtypeStructs via
+``jax.eval_shape`` so trillion-parameter configs lower on a laptop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ArchDef, ShapeSpec
+from repro.core.distill import ce_loss
+from repro.distributed.sharding import (clean_spec, opt_specs_like,
+                                        param_specs, to_named)
+from repro.models import diffusion as diff
+from repro.optim import clip_by_global_norm, make_optimizer
+
+BATCH = ("pod", "data")
+
+# Grad-accumulation defaults: microbatches per step, chosen so per-device
+# activation memory fits 16 GB v5e HBM at the production mesh (see
+# EXPERIMENTS.md §Dry-run).  Overridable via build_cell(accum=...).
+ACCUM_DEFAULTS = {
+    ("qwen1.5-110b", "train_4k"): 16,
+    ("kimi-k2-1t-a32b", "train_4k"): 16,
+    ("granite-20b", "train_4k"): 16,
+    ("deepseek-moe-16b", "train_4k"): 4,
+    ("unet-sdxl", "train_1024"): 2,
+    ("unet-sdxl", "train_256"): 2,
+    ("dit-l2", "train_1024"): 2,
+}
+
+
+def _accum_grads(loss_fn, params, batch, accum: int):
+    """Microbatched grad accumulation: scan over ``accum`` chunks of the
+    global batch; grads accumulate in fp32 with the params' sharding."""
+    if accum <= 1:
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def split(x):
+        return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+    mbs = jax.tree_util.tree_map(split, batch)
+    g0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        gsum, lsum = carry
+        loss, g = jax.value_and_grad(loss_fn)(params, mb)
+        gsum = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(jnp.float32), gsum, g)
+        return (gsum, lsum + loss), None
+
+    (gsum, lsum), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)), mbs)
+    grads = jax.tree_util.tree_map(lambda g: g / accum, gsum)
+    return lsum / accum, grads
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: ArchDef
+    cfg: Any
+    shape: ShapeSpec
+    fn: Any
+    args: tuple                 # ShapeDtypeStructs
+    in_specs: tuple             # PartitionSpec trees (aligned with args)
+    out_specs: Any
+    kind: str
+
+    def jit(self, mesh):
+        from jax.sharding import NamedSharding
+        in_s = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, clean_spec(s, mesh)),
+            self.in_specs, is_leaf=lambda x: isinstance(x, P))
+        out_s = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, clean_spec(s, mesh)),
+            self.out_specs, is_leaf=lambda x: isinstance(x, P))
+        return jax.jit(self.fn, in_shardings=in_s, out_shardings=out_s)
+
+    def lower(self, mesh):
+        return self.jit(mesh).lower(*self.args)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _n_batch_shards(mesh) -> int:
+    if mesh is None:
+        return 1
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                        if a in BATCH]))
+
+
+def _image_spec(B: int, spatial: int, mesh, ndim: int = 4):
+    """Batch-leading image/latent spec: shard batch when divisible, else
+    shard the height dim spatially (GSPMD halo-exchanges convs), else
+    replicate.  Returns (tensor_spec, scalar_batch_spec)."""
+    shards = _n_batch_shards(mesh)
+    if B % shards == 0:
+        return (P(BATCH, *([None] * (ndim - 1))), P(BATCH))
+    if spatial % shards == 0:
+        return (P(None, BATCH, *([None] * (ndim - 2))), P(None))
+    return (P(*([None] * ndim)), P(None))
+
+
+def _replicate_like(tree):
+    return jax.tree_util.tree_map(lambda x: P(*([None] * x.ndim)), tree)
+
+
+def _metric_specs(metrics_tree):
+    return jax.tree_util.tree_map(lambda x: P(), metrics_tree)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch: ArchDef, cfg, shape: ShapeSpec, *, mesh=None,
+             fsdp_axes=BATCH, opt_hp=None, subnet_E=None,
+             accum: int = 1, kv_dtype=jnp.bfloat16) -> Cell:
+    from repro.models.transformer import lm_apply, lm_init, make_decode_caches
+
+    key = jax.random.PRNGKey(0)
+    pshapes = jax.eval_shape(lambda: lm_init(key, cfg))
+    pspecs = param_specs(pshapes, "lm", fsdp_axes=fsdp_axes)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        init_fn, update_fn = make_optimizer(arch.optimizer, **(opt_hp or {}))
+        oshapes = jax.eval_shape(init_fn, pshapes)
+        ospecs = opt_specs_like(pspecs, oshapes, pshapes)
+
+        def train_step(params, opt, batch, step):
+            def loss_fn(p, mb):
+                logits, aux, _ = lm_apply(p, mb["tokens"], cfg, E=subnet_E,
+                                          mesh=mesh)
+                return ce_loss(logits, mb["labels"]) + aux
+            loss, grads = _accum_grads(loss_fn, params, batch, accum)
+            grads, gn = clip_by_global_norm(grads, 1.0)
+            params, opt = update_fn(params, grads, opt, step)
+            return params, opt, {"loss": loss, "gnorm": gn}
+
+        batch_sds = {"tokens": _sds((B, S), jnp.int32),
+                     "labels": _sds((B, S), jnp.int32)}
+        batch_spec = {"tokens": P(BATCH, None), "labels": P(BATCH, None)}
+        args = (pshapes, oshapes, batch_sds, _sds((), jnp.int32))
+        in_specs = (pspecs, ospecs, batch_spec, P())
+        out_specs = (pspecs, ospecs, {"loss": P(), "gnorm": P()})
+        return Cell(arch, cfg, shape, train_step, args, in_specs, out_specs,
+                    "train")
+
+    if shape.kind == "prefill":
+        def prefill(params, tokens):
+            logits, _, _ = lm_apply(params, tokens, cfg, E=subnet_E, mesh=mesh)
+            return logits[:, -1, :]
+        args = (pshapes, _sds((B, S), jnp.int32))
+        in_specs = (pspecs, P(BATCH, None))
+        out_specs = P(BATCH, "model")
+        return Cell(arch, cfg, shape, prefill, args, in_specs, out_specs,
+                    "prefill")
+
+    # decode: one new token against a seq_len KV cache
+    cshapes = jax.eval_shape(
+        lambda: make_decode_caches(cfg, B, S, dtype=kv_dtype,
+                                   filled=S - 1))
+    n_data = 16  # production data-axis width; cleaned specs adapt smaller
+    if B >= n_data:
+        seq_axes = ("model",)
+        b_axes = BATCH
+    else:
+        seq_axes = ("pod", "data", "model")
+        b_axes = None
+
+    cspecs = jax.tree_util.tree_map(
+        lambda x: (P(None, b_axes, seq_axes, None, None) if x.ndim == 5
+                   else P(None)), cshapes)
+
+    def decode(params, caches, tokens):
+        logits, _, caches = lm_apply(params, tokens, cfg, E=subnet_E,
+                                     caches=caches, mesh=mesh)
+        return logits[:, -1, :], caches
+
+    args = (pshapes, cshapes, _sds((B, 1), jnp.int32))
+    in_specs = (pspecs, cspecs, P(b_axes, None))
+    out_specs = (P(b_axes, "model"), cspecs)
+    return Cell(arch, cfg, shape, decode, args, in_specs, out_specs, "decode")
+
+
+# ---------------------------------------------------------------------------
+# Diffusion cells (DiT / UNet)
+# ---------------------------------------------------------------------------
+
+def _diff_cell(arch: ArchDef, cfg, shape: ShapeSpec, *, mesh=None,
+               fsdp_axes=BATCH, opt_hp=None, subnet_E=None,
+               accum: int = 1, batch_all: bool = False) -> Cell:
+    is_dit = arch.arch_id.startswith("dit")
+    if is_dit:
+        from repro.models.dit import dit_apply, dit_init
+        cfg = dataclasses.replace(cfg, img_res=shape.img_res)
+        init = functools.partial(dit_init, jax.random.PRNGKey(0), cfg)
+        lat = (shape.global_batch, cfg.latent_res, cfg.latent_res,
+               cfg.in_channels)
+        lat_spec, b_spec = _image_spec(shape.global_batch, cfg.latent_res,
+                                       mesh)
+        cond_sds = {"y": _sds((shape.global_batch,), jnp.int32)}
+        cond_spec = {"y": b_spec}
+
+        def denoise(params, latents, t, cond):
+            return dit_apply(params, latents, t, cond["y"], cfg, E=subnet_E)
+    else:
+        from repro.models.unet import unet_apply, unet_init
+        cfg = dataclasses.replace(cfg, img_res=shape.img_res)
+        init = functools.partial(unet_init, jax.random.PRNGKey(0), cfg)
+        lat = (shape.global_batch, cfg.latent_res, cfg.latent_res,
+               cfg.in_channels)
+        lat_spec, b_spec = _image_spec(shape.global_batch, cfg.latent_res,
+                                       mesh)
+        cond_sds = {"ctx": _sds((shape.global_batch, 77, cfg.ctx_dim),
+                                jnp.bfloat16),
+                    "pooled": _sds((shape.global_batch, cfg.pooled_dim),
+                                   jnp.bfloat16)}
+        cond_spec = {"ctx": P(*b_spec, None, None),
+                     "pooled": P(*b_spec, None)}
+
+        def denoise(params, latents, t, cond):
+            return unet_apply(params, latents, t, cond["ctx"], cond["pooled"],
+                              cfg, E=subnet_E)
+
+    pshapes = jax.eval_shape(init)
+    pspecs = param_specs(pshapes, "vision", fsdp_axes=fsdp_axes)
+    B = shape.global_batch
+    if batch_all:
+        # pure data parallelism: batch over every axis, weights replicated
+        all_ax = ("pod", "data", "model")
+        lat_spec, b_spec = (P(all_ax, None, None, None), P(all_ax))
+        if is_dit:
+            cond_spec = {"y": b_spec}
+        else:
+            cond_spec = {"ctx": P(*b_spec, None, None),
+                         "pooled": P(*b_spec, None)}
+    sched = diff.make_schedule()
+
+    if shape.kind == "diff_train":
+        init_fn, update_fn = make_optimizer(arch.optimizer, **(opt_hp or {}))
+        oshapes = jax.eval_shape(init_fn, pshapes)
+        ospecs = opt_specs_like(pspecs, oshapes, pshapes)
+
+        def train_step(params, opt, batch, step):
+            def loss_fn(p, mb):
+                x_t = diff.q_sample(sched, mb["latents"], mb["t"], mb["noise"])
+                eps = denoise(p, x_t, mb["t"], mb["cond"])
+                eps = eps[..., : mb["latents"].shape[-1]]
+                return jnp.mean(jnp.square(eps.astype(jnp.float32)
+                                           - mb["noise"].astype(jnp.float32)))
+            loss, grads = _accum_grads(loss_fn, params, batch, accum)
+            grads, gn = clip_by_global_norm(grads, 1.0)
+            params, opt = update_fn(params, grads, opt, step)
+            return params, opt, {"loss": loss, "gnorm": gn}
+
+        batch_sds = {"latents": _sds(lat, jnp.float32),
+                     "noise": _sds(lat, jnp.float32),
+                     "t": _sds((B,), jnp.int32), "cond": cond_sds}
+        batch_spec = {"latents": lat_spec, "noise": lat_spec,
+                      "t": b_spec, "cond": cond_spec}
+        args = (pshapes, oshapes, batch_sds, _sds((), jnp.int32))
+        in_specs = (pspecs, ospecs, batch_spec, P())
+        out_specs = (pspecs, ospecs, {"loss": P(), "gnorm": P()})
+        return Cell(arch, cfg, shape, train_step, args, in_specs, out_specs,
+                    "train")
+
+    # one denoising step of the sampler (x steps = full generation)
+    def gen_step(params, latents, t, cond):
+        return denoise(params, latents, t, cond)
+
+    args = (pshapes, _sds(lat, jnp.bfloat16), _sds((B,), jnp.int32), cond_sds)
+    in_specs = (pspecs, lat_spec, b_spec, cond_spec)
+    out_specs = lat_spec
+    return Cell(arch, cfg, shape, gen_step, args, in_specs, out_specs,
+                "denoise")
+
+
+# ---------------------------------------------------------------------------
+# Vision cells
+# ---------------------------------------------------------------------------
+
+def _vis_cell(arch: ArchDef, cfg, shape: ShapeSpec, *, mesh=None,
+              fsdp_axes=(), opt_hp=None, subnet_E=None,
+              accum: int = 1, batch_all: bool = False) -> Cell:
+    fam = arch.arch_id
+    B, r = shape.global_batch, shape.img_res
+
+    if fam.startswith(("deit", "vit", "dynamic-ofa")):
+        from repro.models.vit import vit_apply, vit_init
+        if r != cfg.img_res:
+            cfg = dataclasses.replace(cfg, img_res=r)
+        init = functools.partial(vit_init, jax.random.PRNGKey(0), cfg)
+
+        def fwd(params, images):
+            logits, _ = vit_apply(params, images, cfg, E=subnet_E)
+            return logits
+    elif fam.startswith("resnet"):
+        from repro.models.resnet import resnet_apply, resnet_init
+        init = functools.partial(resnet_init, jax.random.PRNGKey(0), cfg)
+
+        def fwd(params, images, train=False):
+            logits, _ = resnet_apply(params, images, cfg, train=train)
+            return logits
+    else:
+        from repro.models.efficientnet import effnet_apply, effnet_init
+        if r != cfg.img_res:
+            cfg = dataclasses.replace(cfg, img_res=r)
+        init = functools.partial(effnet_init, jax.random.PRNGKey(0), cfg)
+
+        def fwd(params, images, train=False):
+            logits, _ = effnet_apply(params, images, cfg, train=train)
+            return logits
+
+    pshapes = jax.eval_shape(init)
+    pspecs = param_specs(pshapes, "vision", fsdp_axes=fsdp_axes)
+    img_sds = _sds((B, r, r, 3), jnp.bfloat16)
+    img_spec, vb_spec = _image_spec(B, r, mesh)
+    if batch_all:
+        # serving: batch over the data axes AND image height over 'model'
+        # (replicated weights, halo-exchanged patch conv) — all 256 chips
+        # busy without tensor-parallel collectives per layer
+        img_spec, vb_spec = P(BATCH, "model", None, None), P(BATCH)
+
+    if shape.kind == "vis_train":
+        init_fn, update_fn = make_optimizer(arch.optimizer, **(opt_hp or {}))
+        oshapes = jax.eval_shape(init_fn, pshapes)
+        ospecs = opt_specs_like(pspecs, oshapes, pshapes)
+        needs_train_flag = fam.startswith(("resnet", "efficientnet"))
+
+        def train_step(params, opt, batch, step):
+            def loss_fn(p, mb):
+                if needs_train_flag:
+                    logits = fwd(p, mb["images"], train=True)
+                else:
+                    logits = fwd(p, mb["images"])
+                return ce_loss(logits, mb["labels"])
+            loss, grads = _accum_grads(loss_fn, params, batch, accum)
+            grads, gn = clip_by_global_norm(grads, 1.0)
+            params, opt = update_fn(params, grads, opt, step)
+            return params, opt, {"loss": loss, "gnorm": gn}
+
+        batch_sds = {"images": img_sds, "labels": _sds((B,), jnp.int32)}
+        batch_spec = {"images": img_spec, "labels": vb_spec}
+        args = (pshapes, oshapes, batch_sds, _sds((), jnp.int32))
+        in_specs = (pspecs, ospecs, batch_spec, P())
+        out_specs = (pspecs, ospecs, {"loss": P(), "gnorm": P()})
+        return Cell(arch, cfg, shape, train_step, args, in_specs, out_specs,
+                    "train")
+
+    def serve(params, images):
+        return fwd(params, images)
+
+    args = (pshapes, img_sds)
+    in_specs = (pspecs, img_spec)
+    out_specs = P(*vb_spec, None)
+    return Cell(arch, cfg, shape, serve, args, in_specs, out_specs, "serve")
+
+
+# ---------------------------------------------------------------------------
+
+def _drop_axis(specs_tree, axis: str):
+    """Remove one mesh axis from every PartitionSpec in a tree (e.g. serve
+    small models data-parallel-only: replicate instead of tensor-parallel)."""
+    def fix(spec):
+        def keep(e):
+            if e == axis:
+                return None
+            if isinstance(e, (tuple, list)):
+                kept = tuple(a for a in e if a != axis)
+                return kept if kept else None
+            return e
+        return P(*[keep(e) for e in spec])
+    return jax.tree_util.tree_map(fix, specs_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: ArchDef, shape_name: str, *, smoke: bool = False,
+               mesh=None, cfg_overrides: Optional[Dict] = None,
+               opt_hp=None, subnet_E=None, fsdp: bool = True,
+               accum: Optional[int] = None, drop_tp: bool = False,
+               batch_all: bool = False,
+               kv_dtype=jnp.bfloat16, smoke_batch: int = 2) -> Cell:
+    cfg = arch.make_smoke() if smoke else arch.make_config()
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = arch.shape(shape_name)
+    if smoke:  # reduced-shape smoke variant of the same kind
+        shape = dataclasses.replace(
+            shape,
+            global_batch=min(shape.global_batch, smoke_batch),
+            seq_len=min(shape.seq_len, 64) if shape.seq_len else 0,
+            img_res=getattr(cfg, "img_res", 0) if shape.img_res else 0,
+            steps=min(shape.steps, 4) if shape.steps else 0)
+    if accum is None:
+        accum = 1 if smoke else ACCUM_DEFAULTS.get((arch.arch_id, shape_name), 1)
+    fsdp_axes = BATCH if fsdp else ()
+    if arch.family == "lm":
+        cell = _lm_cell(arch, cfg, shape, mesh=mesh, fsdp_axes=fsdp_axes,
+                        opt_hp=opt_hp, subnet_E=subnet_E, accum=accum,
+                        kv_dtype=kv_dtype)
+    elif arch.family == "diffusion":
+        cell = _diff_cell(arch, cfg, shape, mesh=mesh, fsdp_axes=fsdp_axes,
+                          opt_hp=opt_hp, subnet_E=subnet_E, accum=accum,
+                          batch_all=batch_all)
+    else:
+        cell = _vis_cell(
+            arch, cfg, shape, mesh=mesh,
+            fsdp_axes=fsdp_axes if arch.arch_id == "unet-sdxl" else (),
+            opt_hp=opt_hp, subnet_E=subnet_E, accum=accum,
+            batch_all=batch_all)
+    if drop_tp:
+        cell.in_specs = _drop_axis(cell.in_specs, "model")
+        cell.out_specs = _drop_axis(cell.out_specs, "model")
+    return cell

@@ -1,0 +1,201 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Composes the full substrate: config registry -> step builder (pjit) ->
+data pipeline -> checkpoint manager -> watchdog/straggler monitor ->
+restart supervisor.  ``--smoke`` runs the reduced config end-to-end on
+this host; the full configs are meant for the production mesh (see
+scripts/launch_pod.sh for the multi-host bring-up with
+``jax.distributed.initialize``).
+
+Supernet (sandwich-rule) training for the paper's technique lives in
+``--sandwich`` mode: max + min + 2 random sub-networks per step with
+in-place distillation (masked mode: one executable).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_arch
+from repro.core.elastic import sandwich_specs, spec_to_dynamic
+from repro.data import Prefetcher, synthetic_image_batches, synthetic_lm_batches
+from repro.distributed import use_mesh
+from repro.distributed.fault import (SimulatedFailure, StragglerMonitor,
+                                     Watchdog, run_with_restarts)
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import build_cell
+from repro.optim import make_optimizer
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default=None, help="e.g. train_4k / cls_224")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--sandwich", action="store_true",
+                    help="sandwich-rule supernet training (paper technique)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--mesh", choices=("host", "pod", "multipod"),
+                    default="host")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step (tests recovery)")
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port for jax.distributed.initialize")
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    if args.coordinator:
+        jax.distributed.initialize(args.coordinator, args.num_processes,
+                                   args.process_id)
+
+    arch = get_arch(args.arch)
+    shape_name = args.shape or next(
+        n for n, s in arch.shapes.items() if "train" in s.kind)
+    mesh = {"host": make_host_mesh,
+            "pod": lambda: make_production_mesh(multi_pod=False),
+            "multipod": lambda: make_production_mesh(multi_pod=True)}[
+        args.mesh]()
+
+    with use_mesh(mesh):
+        cell = build_cell(arch, shape_name, smoke=args.smoke, mesh=mesh)
+        cfg = cell.cfg
+        B = cell.shape.global_batch
+
+        sandwich = None
+        if args.sandwich:
+            if not arch.arch_id.startswith(("deit", "vit", "dynamic-ofa")):
+                raise SystemExit("--sandwich: vision-transformer archs only")
+            from repro.core.supernet import make_sandwich_step
+            from repro.models.vit import vit_apply
+            from repro.optim import make_optimizer as _mo
+            _, update_fn = _mo(arch.optimizer)
+            dims = {"d_model": cfg.d_model, "d_ff": cfg.d_ff,
+                    "n_heads": cfg.n_heads, "n_layers": cfg.n_layers}
+            apply_fn = lambda p, b, E: vit_apply(p, b["images"], cfg, E=E)[0]
+            s_step, s_sample = make_sandwich_step(apply_fn, update_fn, dims)
+            sandwich = (jax.jit(s_step), s_sample, dims)
+        step_jit = cell.jit(mesh)
+
+        # data
+        if arch.family == "lm":
+            def data_at(step):
+                return Prefetcher(synthetic_lm_batches(
+                    global_batch=B, seq_len=cell.shape.seq_len,
+                    vocab=cfg.vocab_size, start_step=step))
+        else:
+            n_classes = getattr(cfg, "n_classes", 10)
+            res = cell.shape.img_res or cfg.img_res
+
+            def data_at(step):
+                return Prefetcher(synthetic_image_batches(
+                    global_batch=B, img_res=res, n_classes=n_classes,
+                    start_step=step))
+
+        manager = CheckpointManager(args.ckpt_dir,
+                                    save_every=args.save_every)
+        straggler = StragglerMonitor()
+        watchdog = Watchdog(timeout_s=600).start()
+
+        init_fn, _ = make_optimizer(arch.optimizer)
+
+        def init_state():
+            params = _init_params(arch, cfg)
+            return {"params": params, "opt": init_fn(params)}
+
+        def train(start_step, state):
+            state = state or init_state()
+            params, opt = state["params"], state["opt"]
+            data = data_at(start_step)
+            rng = np.random.default_rng(start_step)
+            for step in range(start_step, args.steps):
+                batch = next(data)
+                batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+                if arch.family == "diffusion":
+                    batch = _diffusionize(batch, cfg, step)
+                t0 = time.time()
+                if args.fail_at is not None and step == args.fail_at:
+                    args.fail_at = None  # only once
+                    raise SimulatedFailure(f"injected at step {step}")
+                if sandwich is not None:
+                    s_step, s_sample, _dims = sandwich
+                    E_stack = s_sample(cfg.elastic, rng)
+                    params, opt, metrics = s_step(
+                        params, opt, batch, E_stack, jax.numpy.asarray(step))
+                else:
+                    params, opt, metrics = step_jit(
+                        params, opt, batch, jax.numpy.asarray(step))
+                jax.block_until_ready(metrics["loss"])
+                dt = time.time() - t0
+                watchdog.beat()
+                if straggler.record(step, dt):
+                    print(f"[straggler] step {step} took {dt:.2f}s")
+                manager.maybe_save(step, {"params": params, "opt": opt})
+                if step % args.log_every == 0:
+                    print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                          f"gnorm {float(metrics['gnorm']):.2f} {dt*1e3:.0f}ms")
+            manager.wait()
+            return {"params": params, "opt": opt}
+
+        state, restarts = run_with_restarts(train, manager=manager)
+        watchdog.stop()
+        print(f"done: {args.steps} steps, {restarts} restarts, "
+              f"straggler flags: {len(straggler.flags)}")
+        return state
+
+
+def _init_params(arch, cfg):
+    key = jax.random.PRNGKey(0)
+    if arch.family == "lm":
+        from repro.models.transformer import lm_init
+        return lm_init(key, cfg)
+    if arch.family == "diffusion":
+        if arch.arch_id.startswith("dit"):
+            from repro.models.dit import dit_init
+            return dit_init(key, cfg)
+        from repro.models.unet import unet_init
+        return unet_init(key, cfg)
+    if arch.arch_id.startswith(("deit", "vit", "dynamic-ofa")):
+        from repro.models.vit import vit_init
+        return vit_init(key, cfg)
+    if arch.arch_id.startswith("resnet"):
+        from repro.models.resnet import resnet_init
+        return resnet_init(key, cfg)
+    from repro.models.efficientnet import effnet_init
+    return effnet_init(key, cfg)
+
+
+def _diffusionize(batch, cfg, step):
+    """Vision batch -> diffusion batch (latents + noise + t + cond)."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng((7, step))
+    imgs = batch["images"]
+    B = imgs.shape[0]
+    res = getattr(cfg, "latent_res", imgs.shape[1] // 8)
+    lat = rng.normal(size=(B, res, res, 4)).astype(np.float32)
+    out = {"latents": jnp.asarray(lat),
+           "noise": jnp.asarray(rng.normal(size=lat.shape).astype(np.float32)),
+           "t": jnp.asarray(rng.integers(0, 1000, B).astype(np.int32))}
+    if hasattr(cfg, "ctx_dim"):
+        out["cond"] = {
+            "ctx": jnp.asarray(rng.normal(
+                size=(B, 77, cfg.ctx_dim)).astype(np.float32)),
+            "pooled": jnp.asarray(rng.normal(
+                size=(B, cfg.pooled_dim)).astype(np.float32))}
+    else:
+        out["cond"] = {"y": batch["labels"]}
+    return out
+
+
+if __name__ == "__main__":
+    main()

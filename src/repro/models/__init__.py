@@ -1,0 +1,8 @@
+"""Architecture zoo — all elastic-aware (the paper's dynamic-DNN knobs).
+
+transformer — decoder LMs: dense + MoE, GQA/MQA, scan-over-layers
+moe         — top-k routing: dense-oracle / GShard-einsum / shard_map-a2a
+vit         — ViT / DeiT (distill token, early-exit heads)
+resnet / efficientnet — slimmable convnets with switchable BN
+unet / dit  — diffusion backbones; diffusion.py has schedules + DDIM
+"""

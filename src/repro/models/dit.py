@@ -1,0 +1,194 @@
+"""DiT (Diffusion Transformer, Peebles & Xie) with adaLN-zero conditioning.
+
+Assigned `dit-l2`: patch 2, 24 layers, d_model 1024, 16 heads, over VAE
+latents (img_res/8).  Elastic width/depth apply as in ViT; the diffusion-
+native latency knob is the sampler step count (see runtime governor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core.types import ElasticSpace, is_static
+from repro.distributed import wsc
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    name: str
+    img_res: int = 256
+    patch: int = 2
+    in_channels: int = 4          # VAE latent channels
+    n_layers: int = 24
+    d_model: int = 1024
+    n_heads: int = 16
+    n_classes: int = 1000
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "none"
+    elastic: ElasticSpace = ElasticSpace()
+
+    @property
+    def latent_res(self) -> int:
+        return self.img_res // 8
+
+    @property
+    def d_ff(self) -> int:
+        return self.d_model * 4
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+def timestep_embedding(t: jax.Array, dim: int, max_period: float = 10000.0):
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def _block_init(key, cfg: DiTConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    d_head = cfg.d_model // cfg.n_heads
+    return {
+        "ln1": L.layernorm_init(cfg.d_model, cfg.pdtype()),
+        "attn": L.attention_init(ks[0], cfg.d_model, cfg.n_heads, cfg.n_heads,
+                                 d_head, qkv_bias=True, dtype=cfg.pdtype()),
+        "ln2": L.layernorm_init(cfg.d_model, cfg.pdtype()),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, gated=False, bias=True,
+                          dtype=cfg.pdtype()),
+        # adaLN-zero: 6 x d_model modulation from conditioning (zero-init)
+        "ada": {"kernel": jnp.zeros((cfg.d_model, 6 * cfg.d_model), cfg.pdtype()),
+                "bias": jnp.zeros((6 * cfg.d_model,), cfg.pdtype())},
+    }
+
+
+def dit_init(key, cfg: DiTConfig) -> dict:
+    ks = jax.random.split(key, 7)
+    np_ = (cfg.latent_res // cfg.patch) ** 2
+    params = {
+        "patch_embed": L.conv_init(ks[0], cfg.patch, cfg.in_channels,
+                                   cfg.d_model, bias=True, dtype=cfg.pdtype()),
+        "pos": jax.random.normal(ks[1], (np_, cfg.d_model), cfg.pdtype()) * 0.02,
+        "t_mlp1": L.dense_init(ks[2], 256, cfg.d_model, dtype=cfg.pdtype()),
+        "t_mlp2": L.dense_init(ks[3], cfg.d_model, cfg.d_model, dtype=cfg.pdtype()),
+        "y_embed": L.embedding_init(ks[4], cfg.n_classes + 1, cfg.d_model,
+                                    cfg.pdtype()),
+        "final_ln": L.layernorm_init(cfg.d_model, cfg.pdtype()),
+        "final": L.dense_init(ks[5], cfg.d_model,
+                              cfg.patch * cfg.patch * cfg.in_channels * 2,
+                              dtype=cfg.pdtype()),
+        "final_ada": {"kernel": jnp.zeros((cfg.d_model, 2 * cfg.d_model),
+                                          cfg.pdtype()),
+                      "bias": jnp.zeros((2 * cfg.d_model,), cfg.pdtype())},
+    }
+    keys = jax.random.split(ks[6], cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: _block_init(k, cfg))(keys)
+    return params
+
+
+def _modulate(x, shift, scale):
+    return x * (1 + scale[:, None]) + shift[:, None]
+
+
+def dit_apply(params, latents, t, y, cfg: DiTConfig, *, E=None):
+    """latents (B,H,W,C), t (B,), y (B,) labels -> noise/var pred (B,H,W,2C)."""
+    E = dict(E or {})
+    a_model = E.get("a_model")
+    a_layers = E.get("a_layers")
+    B = latents.shape[0]
+    cdt = cfg.cdtype()
+
+    x = L.conv_apply(params["patch_embed"], latents.astype(cdt),
+                     stride=cfg.patch, padding="VALID")
+    hw = x.shape[1]
+    x = x.reshape(B, -1, cfg.d_model) + params["pos"].astype(cdt)[None]
+
+    temb = timestep_embedding(t, 256).astype(cdt)
+    c = L.dense_apply(params["t_mlp2"],
+                      jax.nn.silu(L.dense_apply(params["t_mlp1"], temb)))
+    c = c + L.embedding_apply(params["y_embed"], y, dtype=cdt)
+    c = jax.nn.silu(c)
+
+    if a_model is not None:
+        if is_static(a_model):
+            x, c = x[..., : int(a_model)], c[..., : int(a_model)]
+        else:
+            from repro.core.elastic import mask_dim
+            x, c = mask_dim(x, a_model, -1), mask_dim(c, a_model, -1)
+    x = wsc(x, ("pod", "data"), None, None)
+
+    stack = params["layers"]
+    if a_layers is not None and is_static(a_layers):
+        stack = jax.tree_util.tree_map(lambda p: p[: int(a_layers)], stack)
+        a_layers = None
+
+    d_head = cfg.d_model // cfg.n_heads
+    am = a_model
+
+    def ada(pp, cc, n_chunks):
+        # modulation params: keep full width then slice/mask per chunk
+        out = dense_like(pp, cc)
+        return jnp.split(out, n_chunks, axis=-1)
+
+    def dense_like(pp, cc):
+        w = pp["kernel"]
+        if am is not None and is_static(am):
+            n_chunks = w.shape[1] // w.shape[0]
+            w = w.reshape(w.shape[0], n_chunks, w.shape[0])[: int(am), :, : int(am)]
+            w = w.reshape(int(am), n_chunks * int(am))
+            b = pp["bias"].reshape(n_chunks, -1)[:, : int(am)].reshape(-1)
+            return cc @ w.astype(cc.dtype) + b.astype(cc.dtype)
+        y0 = cc @ pp["kernel"].astype(cc.dtype) + pp["bias"].astype(cc.dtype)
+        if am is not None:
+            from repro.core.elastic import active_mask
+            n_chunks = pp["kernel"].shape[1] // pp["kernel"].shape[0]
+            m = active_mask(am, cfg.d_model, y0.dtype)
+            y0 = y0 * jnp.tile(m, n_chunks)
+        return y0
+
+    def body(carry, xs):
+        h = carry
+        lp, idx = xs
+        gate = None
+        if a_layers is not None:
+            gate = (idx < a_layers).astype(h.dtype)
+        mods = ada(lp["ada"], c, 6)
+        sh1, sc1, g1, sh2, sc2, g2 = mods
+        hn = _modulate(L.layernorm_apply(lp["ln1"], h, a=am), sh1, sc1)
+        att, _ = L.attention_apply(lp["attn"], hn, n_heads=cfg.n_heads,
+                                   n_kv=cfg.n_heads, d_head=d_head,
+                                   causal=False, rope_theta=None,
+                                   a_model=am, a_heads=E.get("a_heads"))
+        att = att * g1[:, None]
+        h = h + (att if gate is None else att * gate)
+        hn = _modulate(L.layernorm_apply(lp["ln2"], h, a=am), sh2, sc2)
+        ff = L.mlp_apply(lp["mlp"], hn, a_model=am, a_ff=E.get("a_ff"),
+                         act="gelu")
+        ff = ff * g2[:, None]
+        h = h + (ff if gate is None else ff * gate)
+        return wsc(h, ("pod", "data"), None, None), None
+
+    fn = body
+    if cfg.remat != "none":
+        fn = jax.checkpoint(body, prevent_cse=False)
+    n = jax.tree_util.tree_leaves(stack)[0].shape[0]
+    x, _ = jax.lax.scan(fn, x, (stack, jnp.arange(n)))
+
+    sh, sc = ada(params["final_ada"], c, 2)
+    x = _modulate(L.layernorm_apply(params["final_ln"], x, a=am), sh, sc)
+    out = L.dense_apply(params["final"], x, a_in=am)
+    # unpatchify
+    p_, C = cfg.patch, cfg.in_channels * 2
+    grid = cfg.latent_res // p_
+    out = out.reshape(B, grid, grid, p_, p_, C)
+    out = out.transpose(0, 1, 3, 2, 4, 5).reshape(B, grid * p_, grid * p_, C)
+    return out

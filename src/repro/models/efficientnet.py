@@ -1,0 +1,180 @@
+"""EfficientNet (MBConv + SE) with compound scaling — the assigned
+`efficientnet-b7` (width_mult 2.0, depth_mult 3.1, 600px).
+
+EfficientNet *is* a statically-scaled family; the paper's dynamic technique
+adds runtime width settings (slimmable, switchable BN) and depth settings
+on top of the compound-scaled B7 supernet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core.types import ElasticSpace, round_channels
+
+# (expand_ratio, channels, repeats, stride, kernel) — EfficientNet-B0 stages
+_B0_STAGES = (
+    (1, 16, 1, 1, 3),
+    (6, 24, 2, 2, 3),
+    (6, 40, 2, 2, 5),
+    (6, 80, 3, 2, 3),
+    (6, 112, 3, 1, 5),
+    (6, 192, 4, 2, 5),
+    (6, 320, 1, 1, 3),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EffNetConfig:
+    name: str
+    width_mult: float = 1.0
+    depth_mult: float = 1.0
+    img_res: int = 224
+    n_classes: int = 1000
+    se_ratio: float = 0.25
+    width_settings: Tuple[float, ...] = (1.0,)   # runtime slimmable widths
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    elastic: ElasticSpace = ElasticSpace()
+
+    def round_filters(self, c: int) -> int:
+        c = c * self.width_mult
+        new_c = max(8, int(c + 4) // 8 * 8)
+        if new_c < 0.9 * c:
+            new_c += 8
+        return new_c
+
+    def round_repeats(self, r: int) -> int:
+        return int(math.ceil(r * self.depth_mult))
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+def _mbconv_init(key, c_in, c_out, expand, ksize, se_ratio, n_set, dtype):
+    ks = jax.random.split(key, 6)
+    c_mid = c_in * expand
+    c_se = max(1, int(c_in * se_ratio))
+    p = {}
+    if expand != 1:
+        p["expand"] = L.conv_init(ks[0], 1, c_in, c_mid, dtype=dtype)
+        p["bn0"] = L.sbn_init(c_mid, n_set, dtype)
+    p["dw"] = L.conv_init(ks[1], ksize, c_mid, c_mid, groups=c_mid, dtype=dtype)
+    p["bn1"] = L.sbn_init(c_mid, n_set, dtype)
+    p["se_reduce"] = L.conv_init(ks[2], 1, c_mid, c_se, bias=True, dtype=dtype)
+    p["se_expand"] = L.conv_init(ks[3], 1, c_se, c_mid, bias=True, dtype=dtype)
+    p["project"] = L.conv_init(ks[4], 1, c_mid, c_out, dtype=dtype)
+    p["bn2"] = L.sbn_init(c_out, n_set, dtype)
+    return p
+
+
+def effnet_init(key, cfg: EffNetConfig) -> dict:
+    n_set = len(cfg.width_settings)
+    stem_c = cfg.round_filters(32)
+    head_c = cfg.round_filters(1280)
+    ks = jax.random.split(key, 4 + len(_B0_STAGES))
+    params = {
+        "stem": L.conv_init(ks[0], 3, 3, stem_c, dtype=cfg.pdtype()),
+        "bn_stem": L.sbn_init(stem_c, n_set, cfg.pdtype()),
+        "head": L.conv_init(ks[1], 1, cfg.round_filters(_B0_STAGES[-1][1]),
+                            head_c, dtype=cfg.pdtype()),
+        "bn_head": L.sbn_init(head_c, n_set, cfg.pdtype()),
+        "fc": L.dense_init(ks[2], head_c, cfg.n_classes, dtype=cfg.pdtype()),
+    }
+    c_in = stem_c
+    for s, (expand, c, r, stride, ksz) in enumerate(_B0_STAGES):
+        c_out = cfg.round_filters(c)
+        blocks = []
+        bkeys = jax.random.split(ks[3 + s], cfg.round_repeats(r))
+        for b in range(cfg.round_repeats(r)):
+            blocks.append(_mbconv_init(bkeys[b], c_in, c_out, expand, ksz,
+                                       cfg.se_ratio, n_set, cfg.pdtype()))
+            c_in = c_out
+        params[f"stage{s}"] = blocks
+    return params
+
+
+def _mbconv_apply(p, x, *, expand, ksize, stride, setting, train, wm, stats,
+                  a_kernel=None):
+    c_in_full = x.shape[-1]
+
+    def bn(name, h, a):
+        y, st = L.sbn_apply(p[name], h, setting=setting, train=train, a=a)
+        if stats is not None:
+            stats.append((name, st))
+        return y
+
+    h = x
+    if "expand" in p:
+        c_mid_full = p["expand"]["kernel"].shape[-1]
+        a_mid = round_channels(c_mid_full, wm, 8)
+        h = L.conv_apply(p["expand"], h, a_out=a_mid)
+        h = jax.nn.silu(bn("bn0", h, a_mid))
+    else:
+        c_mid_full = c_in_full
+        a_mid = h.shape[-1]
+    h = L.conv_apply(p["dw"], h, stride=stride, groups=h.shape[-1],
+                     a_in=a_mid if "expand" in p else None,
+                     a_out=a_mid if "expand" in p else None,
+                     a_kernel=a_kernel)
+    h = jax.nn.silu(bn("bn1", h, a_mid if "expand" in p else None))
+    # squeeze-excite (kernel dims sliced to match the active mid width)
+    se = jnp.mean(h, axis=(1, 2), keepdims=True)
+    se = jax.nn.silu(L.conv_apply(p["se_reduce"], se, a_in=se.shape[-1]))
+    se = jax.nn.sigmoid(L.conv_apply(p["se_expand"], se, a_out=h.shape[-1]))
+    h = h * se
+    c_out_full = p["project"]["kernel"].shape[-1]
+    a_out = round_channels(c_out_full, wm, 8)
+    h = L.conv_apply(p["project"], h, a_in=h.shape[-1], a_out=a_out)
+    h = bn("bn2", h, a_out)
+    if stride == 1 and h.shape[-1] == x.shape[-1]:
+        h = h + x
+    return h
+
+
+def effnet_apply(params, images, cfg: EffNetConfig, *, setting: int = 0,
+                 depth_mult: float = 1.0, kernel_size=None,
+                 train: bool = False, collect_stats: bool = False):
+    """images (B,H,W,3) -> (logits, stats|None)."""
+    wm = cfg.width_settings[setting]
+    stats = [] if (train and collect_stats) else None
+    x = images.astype(cfg.cdtype())
+    stem_full = params["stem"]["kernel"].shape[-1]
+    a_stem = round_channels(stem_full, wm, 8)
+    h = L.conv_apply(params["stem"], x, stride=2, a_out=a_stem)
+    hb, st = L.sbn_apply(params["bn_stem"], h, setting=setting, train=train,
+                         a=a_stem)
+    if stats is not None:
+        stats.append(("bn_stem", st))
+    h = jax.nn.silu(hb)
+    for s, (expand, c, r, stride, ksz) in enumerate(_B0_STAGES):
+        blocks = params[f"stage{s}"]
+        n_active = max(1, int(round(len(blocks) * depth_mult)))
+        for b, blk in enumerate(blocks):
+            if b >= n_active and b > 0:
+                continue
+            ak = None
+            if kernel_size is not None and ksz > kernel_size:
+                ak = kernel_size
+            h = _mbconv_apply(blk, h, expand=expand, ksize=ksz,
+                              stride=stride if b == 0 else 1, setting=setting,
+                              train=train, wm=wm, stats=stats, a_kernel=ak)
+    head_full = params["head"]["kernel"].shape[-1]
+    a_head = round_channels(head_full, wm, 8)
+    h = L.conv_apply(params["head"], h, a_in=h.shape[-1], a_out=a_head)
+    hb, st = L.sbn_apply(params["bn_head"], h, setting=setting, train=train,
+                         a=a_head)
+    if stats is not None:
+        stats.append(("bn_head", st))
+    h = jax.nn.silu(hb)
+    pooled = jnp.mean(h, axis=(1, 2))
+    logits = L.dense_apply(params["fc"], pooled, a_in=a_head)
+    return logits, stats

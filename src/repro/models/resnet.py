@@ -1,0 +1,141 @@
+"""ResNet (bottleneck) with slimmable width via switchable BatchNorm.
+
+Channel scaling follows the slimmable-networks recipe: a discrete set of
+width settings, each with its own BN statistics (calibrated post-training).
+Depth scaling drops trailing blocks per stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core.types import ElasticSpace, round_channels
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str
+    depths: Tuple[int, ...] = (3, 8, 36, 3)
+    width: int = 64
+    n_classes: int = 1000
+    img_res: int = 224
+    width_settings: Tuple[float, ...] = (1.0,)   # slimmable widths
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    elastic: ElasticSpace = ElasticSpace()
+
+    def stage_channels(self, i: int) -> int:
+        return self.width * (2 ** i) * 4          # bottleneck expansion 4
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+def _bottleneck_init(key, c_in, c_mid, c_out, n_set, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "conv1": L.conv_init(ks[0], 1, c_in, c_mid, dtype=dtype),
+        "bn1": L.sbn_init(c_mid, n_set, dtype),
+        "conv2": L.conv_init(ks[1], 3, c_mid, c_mid, dtype=dtype),
+        "bn2": L.sbn_init(c_mid, n_set, dtype),
+        "conv3": L.conv_init(ks[2], 1, c_mid, c_out, dtype=dtype),
+        "bn3": L.sbn_init(c_out, n_set, dtype),
+    }
+    if c_in != c_out:
+        p["proj"] = L.conv_init(ks[3], 1, c_in, c_out, dtype=dtype)
+        p["bn_proj"] = L.sbn_init(c_out, n_set, dtype)
+    return p
+
+
+def resnet_init(key, cfg: ResNetConfig) -> dict:
+    n_set = len(cfg.width_settings)
+    ks = jax.random.split(key, 3 + len(cfg.depths))
+    params = {
+        "stem": L.conv_init(ks[0], 7, 3, cfg.width, dtype=cfg.pdtype()),
+        "bn_stem": L.sbn_init(cfg.width, n_set, cfg.pdtype()),
+        "fc": L.dense_init(ks[1], cfg.stage_channels(len(cfg.depths) - 1),
+                           cfg.n_classes, dtype=cfg.pdtype()),
+    }
+    c_in = cfg.width
+    for s, depth in enumerate(cfg.depths):
+        c_out = cfg.stage_channels(s)
+        c_mid = c_out // 4
+        blocks = []
+        bkeys = jax.random.split(ks[2 + s], depth)
+        for b in range(depth):
+            blocks.append(_bottleneck_init(bkeys[b], c_in, c_mid, c_out,
+                                           n_set, cfg.pdtype()))
+            c_in = c_out
+        params[f"stage{s}"] = blocks
+    return params
+
+
+def _bottleneck_apply(p, x, *, stride, setting, train, widths, stats):
+    """widths = (a_mid, a_out) active channels (static, from width setting)."""
+    a_mid, a_out = widths
+
+    def bn(pp, name, h, a):
+        y, st = L.sbn_apply(pp[name], h, setting=setting, train=train, a=a)
+        if train and stats is not None:
+            stats.append((name, st))
+        return y
+
+    h = L.conv_apply(p["conv1"], x, a_out=a_mid)
+    h = jax.nn.relu(bn(p, "bn1", h, a_mid))
+    h = L.conv_apply(p["conv2"], h, stride=stride, a_in=a_mid, a_out=a_mid)
+    h = jax.nn.relu(bn(p, "bn2", h, a_mid))
+    h = L.conv_apply(p["conv3"], h, a_in=a_mid, a_out=a_out)
+    h = bn(p, "bn3", h, a_out)
+    if "proj" in p:
+        sc = L.conv_apply(p["proj"], x, stride=stride, a_out=a_out)
+        sc = bn(p, "bn_proj", sc, a_out)
+    else:
+        sc = x if stride == 1 else x[:, ::stride, ::stride]
+    return jax.nn.relu(h + sc)
+
+
+def resnet_apply(params, images, cfg: ResNetConfig, *, setting: int = 0,
+                 depth_mult: float = 1.0, train: bool = False,
+                 collect_stats: bool = False):
+    """images (B,H,W,3) -> (logits, stats|None).
+
+    ``setting`` indexes cfg.width_settings (slimmable width + its BN set);
+    ``depth_mult`` drops trailing non-transition blocks per stage.
+    """
+    wm = cfg.width_settings[setting]
+    stats = [] if (train and collect_stats) else None
+    x = images.astype(cfg.cdtype())
+    a_stem = round_channels(cfg.width, wm, 8)
+    h = L.conv_apply(params["stem"], x, stride=2, a_out=a_stem)
+    hbn, st = L.sbn_apply(params["bn_stem"], h, setting=setting, train=train,
+                          a=a_stem)
+    if stats is not None:
+        stats.append(("bn_stem", st))
+    h = jax.nn.relu(hbn)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    prev_a = a_stem
+    for s, depth in enumerate(cfg.depths):
+        c_out = cfg.stage_channels(s)
+        a_mid = round_channels(c_out // 4, wm, 8)
+        a_out = round_channels(c_out, wm, 8)
+        n_active = max(1, int(round(depth * depth_mult)))
+        for b in range(depth):
+            if b >= n_active and b > 0:
+                continue  # layer scaling: drop trailing blocks
+            stride = 2 if (b == 0 and s > 0) else 1
+            blk = params[f"stage{s}"][b]
+            h = _bottleneck_apply(blk, h, stride=stride, setting=setting,
+                                  train=train, widths=(a_mid, a_out),
+                                  stats=stats)
+        prev_a = a_out
+    pooled = jnp.mean(h, axis=(1, 2))
+    logits = L.dense_apply(params["fc"], pooled, a_in=prev_a)
+    return logits, stats

@@ -1,0 +1,277 @@
+"""Decoder-only LM (dense and MoE) with scan-over-layers and elastic knobs.
+
+Covers the four assigned LM architectures (kimi-k2, deepseek-moe-16b,
+qwen1.5-110b, granite-20b): GQA/MQA, optional QKV bias, SwiGLU or plain
+FFN, optional MoE blocks with ``first_k_dense`` leading dense layers.
+
+Elastic (the paper's technique): width (d_ff / heads), depth (layer
+scaling), and for MoE archs expert-count / top-k scaling.  Masked mode
+serves supernet training; sliced mode serves the runtime governor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core.elastic import active_mask
+from repro.core.types import ElasticSpace, is_static
+from repro.distributed import wsc
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    qkv_bias: bool = False
+    gated_mlp: bool = True
+    act: str = "silu"
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    first_k_dense: int = 0
+    d_ff_dense: Optional[int] = None     # FFN width of leading dense layers
+    attn_impl: str = "ref"               # ref | blocked_scan | blocked_causal
+    decode_impl: str = "xla"             # xla | sharded (two-pass softmax)
+    block_q: int = 512
+    block_kv: int = 512
+    remat: str = "none"                  # none | full | dots
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    elastic: ElasticSpace = ElasticSpace()
+
+    @property
+    def n_moe_layers(self) -> int:
+        return self.n_layers - self.first_k_dense if self.moe else 0
+
+    @property
+    def n_dense_layers(self) -> int:
+        return self.first_k_dense if self.moe else self.n_layers
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense_layer_init(key, cfg: LMConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    d_ff = cfg.d_ff_dense or cfg.d_ff
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg.pdtype()),
+        "attn": L.attention_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.d_head, qkv_bias=cfg.qkv_bias,
+                                 dtype=cfg.pdtype()),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg.pdtype()),
+        "mlp": L.mlp_init(k2, cfg.d_model, d_ff, gated=cfg.gated_mlp,
+                          dtype=cfg.pdtype()),
+    }
+
+
+def _moe_layer_init(key, cfg: LMConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg.pdtype()),
+        "attn": L.attention_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.d_head, qkv_bias=cfg.qkv_bias,
+                                 dtype=cfg.pdtype()),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg.pdtype()),
+        "moe": moe_init(k2, cfg.d_model, cfg.moe, dtype=cfg.pdtype()),
+    }
+
+
+def lm_init(key, cfg: LMConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    params = {"embed": L.embedding_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                        cfg.pdtype()),
+              "final_norm": L.rmsnorm_init(cfg.d_model, cfg.pdtype())}
+    if cfg.n_dense_layers:
+        keys = jax.random.split(ks[1], cfg.n_dense_layers)
+        params["dense_layers"] = jax.vmap(
+            lambda k: _dense_layer_init(k, cfg))(keys)
+    if cfg.n_moe_layers:
+        keys = jax.random.split(ks[2], cfg.n_moe_layers)
+        params["moe_layers"] = jax.vmap(lambda k: _moe_layer_init(k, cfg))(keys)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[3], cfg.d_model, cfg.vocab_size,
+                                         bias=False, dtype=cfg.pdtype())
+    return params
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def _block(h, lp, cfg: LMConfig, E, *, is_moe: bool, layer_gate=None,
+           kv_cache=None, return_kv: bool, mesh, positions=None):
+    """One transformer block.  Returns (h, aux_loss, new_cache)."""
+    a_model = E.get("a_model")
+    a_ff = E.get("a_ff")
+    a_heads = E.get("a_heads")
+    hn = L.rmsnorm_apply(lp["ln1"], h, a=a_model, eps=cfg.norm_eps)
+    attn_out, new_cache = L.attention_apply(
+        lp["attn"], hn, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        d_head=cfg.d_head, causal=True, positions=positions,
+        rope_theta=cfg.rope_theta, a_model=a_model, a_heads=a_heads,
+        kv_cache=kv_cache, impl=cfg.attn_impl, block_q=cfg.block_q,
+        block_kv=cfg.block_kv, return_kv=return_kv,
+        decode_impl=cfg.decode_impl, mesh=mesh)
+    if layer_gate is not None:
+        attn_out = attn_out * layer_gate
+    h = h + attn_out
+    h = wsc(h, ("pod", "data"), None, None)
+    hn = L.rmsnorm_apply(lp["ln2"], h, a=a_model, eps=cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if is_moe:
+        ff, aux = moe_apply(lp["moe"], hn, cfg.moe, a_experts=E.get("a_experts"),
+                            top_k=E.get("top_k"), a_ff=a_ff, a_model=a_model,
+                            mesh=mesh, data_axes=("pod", "data") if mesh is not None
+                            and "pod" in mesh.axis_names else ("data",))
+    else:
+        ff = L.mlp_apply(lp["mlp"], hn, a_model=a_model,
+                         a_ff=E.get("a_ff_dense", a_ff), act=cfg.act)
+    if layer_gate is not None:
+        ff = ff * layer_gate
+    h = h + ff
+    return wsc(h, ("pod", "data"), None, None), aux, new_cache
+
+
+def _stack(h, stacked, cfg: LMConfig, E, *, is_moe: bool, offset: int,
+           caches=None, return_kv: bool, mesh):
+    """scan over a homogeneous stack of layers with optional depth gating.
+
+    In sliced mode (static a_layers) the caller has already sliced
+    ``stacked``; here depth gating only handles the masked (traced) case.
+    """
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    a_layers = E.get("a_layers")
+    dyn_depth = a_layers is not None and not is_static(a_layers)
+
+    def body(carry, xs):
+        h = carry
+        if caches is None:
+            lp, idx = xs
+            cache_l = None
+        else:
+            lp, cache_l, idx = xs
+        gate = None
+        if dyn_depth:
+            gate = (idx + offset < a_layers).astype(h.dtype)
+        positions = None
+        h, aux, new_cache = _block(h, lp, cfg, E, is_moe=is_moe,
+                                   layer_gate=gate, kv_cache=cache_l,
+                                   return_kv=return_kv, mesh=mesh,
+                                   positions=positions)
+        out = (aux,) if new_cache is None else (aux, new_cache)
+        return h, out
+
+    fn = body
+    if cfg.remat != "none":
+        policy = {
+            "full": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.checkpoint_dots,
+            # weight matmuls only — batched attention-score dots recompute
+            "dots_nb": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        }[cfg.remat]
+        fn = jax.checkpoint(body, policy=policy, prevent_cse=False)
+
+    idxs = jnp.arange(n)
+    xs = (stacked, idxs) if caches is None else (stacked, caches, idxs)
+    h, outs = jax.lax.scan(fn, h, xs)
+    aux = jnp.sum(outs[0])
+    new_caches = outs[1] if len(outs) > 1 else None
+    return h, aux, new_caches
+
+
+def _slice_stack(stacked, n: int):
+    return jax.tree_util.tree_map(lambda x: x[:n], stacked)
+
+
+def lm_apply(params: dict, tokens: jax.Array, cfg: LMConfig, *, E=None,
+             caches=None, return_kv: bool = False, mesh=None):
+    """tokens (B,S) int32 -> logits (B,S,V).
+
+    Returns (logits, aux_loss, new_caches).  ``caches`` is a dict
+    {"dense": stacked cache, "moe": stacked cache} for decode;
+    ``return_kv`` makes prefill also emit caches.
+    """
+    E = dict(E or {})
+    a_model = E.get("a_model")
+    a_layers = E.get("a_layers")
+
+    # static depth slicing: distribute active layers over the two stacks
+    dense_stack = params.get("dense_layers")
+    moe_stack = params.get("moe_layers")
+    if a_layers is not None and is_static(a_layers):
+        n_active = int(a_layers)
+        nd = min(cfg.n_dense_layers, n_active)
+        nm = max(0, n_active - cfg.n_dense_layers)
+        if dense_stack is not None:
+            dense_stack = _slice_stack(dense_stack, nd)
+        if moe_stack is not None:
+            moe_stack = _slice_stack(moe_stack, nm)
+        E["a_layers"] = None
+
+    h = L.embedding_apply(params["embed"], tokens, a=a_model,
+                          dtype=cfg.cdtype())
+    h = wsc(h, ("pod", "data"), None, None)
+
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = {}
+    if dense_stack is not None and jax.tree_util.tree_leaves(dense_stack):
+        h, a, nc = _stack(h, dense_stack, cfg, E, is_moe=False, offset=0,
+                          caches=None if caches is None else caches["dense"],
+                          return_kv=return_kv, mesh=mesh)
+        aux = aux + a
+        new_caches["dense"] = nc
+    if moe_stack is not None and jax.tree_util.tree_leaves(moe_stack):
+        h, a, nc = _stack(h, moe_stack, cfg, E, is_moe=True,
+                          offset=cfg.n_dense_layers,
+                          caches=None if caches is None else caches["moe"],
+                          return_kv=return_kv, mesh=mesh)
+        aux = aux + a
+        new_caches["moe"] = nc
+
+    h = L.rmsnorm_apply(params["final_norm"], h, a=a_model, eps=cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.embedding_attend(params["embed"], h, a=a_model)
+    else:
+        logits = L.dense_apply(params["lm_head"], h, a_in=a_model)
+    logits = wsc(logits, ("pod", "data"), None, "model")
+    return logits, aux * (cfg.moe.router_aux_weight if cfg.moe else 0.0), \
+        (new_caches or None)
+
+
+def make_decode_caches(cfg: LMConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16, filled: int = 0):
+    """Allocate stacked KV caches for decode (len marks the fill point)."""
+    def one(n_layers):
+        return {
+            "k": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads,
+                            cfg.d_head), dtype),
+            "v": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads,
+                            cfg.d_head), dtype),
+            "len": jnp.full((n_layers,), filled, jnp.int32),
+        }
+    out = {}
+    if cfg.n_dense_layers:
+        out["dense"] = one(cfg.n_dense_layers)
+    if cfg.n_moe_layers:
+        out["moe"] = one(cfg.n_moe_layers)
+    return out

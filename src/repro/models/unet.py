@@ -1,0 +1,264 @@
+"""SDXL-style UNet (ResBlocks + cross-attention transformer stages).
+
+Assigned `unet-sdxl`: ch=320, ch_mult=(1,2,4), 2 res blocks per stage,
+transformer depth (1,2,10) [stage0 has no attention in SDXL — depth applies
+to stages 1 and 2], ctx_dim 2048.  Text/pooled conditioning enters as
+precomputed stub embeddings per the assignment brief.
+
+Elastic knobs: transformer-depth scaling (layer scaling inside attention
+stages), FFN width scaling in the transformer blocks, and the sampler step
+count at the runtime level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core.types import ElasticSpace
+from repro.models.dit import timestep_embedding
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    name: str
+    img_res: int = 1024
+    in_channels: int = 4
+    ch: int = 320
+    ch_mult: Tuple[int, ...] = (1, 2, 4)
+    n_res_blocks: int = 2
+    transformer_depth: Tuple[int, ...] = (0, 2, 10)   # per stage (0 = no attn)
+    ctx_dim: int = 2048
+    d_head: int = 64
+    pooled_dim: int = 1280
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    elastic: ElasticSpace = ElasticSpace()
+
+    @property
+    def latent_res(self) -> int:
+        return self.img_res // 8
+
+    @property
+    def temb_dim(self) -> int:
+        return self.ch * 4
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+# --- blocks ----------------------------------------------------------------
+
+def _resblock_init(key, c_in, c_out, temb_dim, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "gn1": L.groupnorm_init(c_in, dtype),
+        "conv1": L.conv_init(ks[0], 3, c_in, c_out, bias=True, dtype=dtype),
+        "temb": L.dense_init(ks[1], temb_dim, c_out, dtype=dtype),
+        "gn2": L.groupnorm_init(c_out, dtype),
+        "conv2": L.conv_init(ks[2], 3, c_out, c_out, bias=True, dtype=dtype),
+    }
+    if c_in != c_out:
+        p["skip"] = L.conv_init(ks[3], 1, c_in, c_out, bias=True, dtype=dtype)
+    return p
+
+
+def _resblock_apply(p, x, temb):
+    h = jax.nn.silu(L.groupnorm_apply(p["gn1"], x))
+    h = L.conv_apply(p["conv1"], h)
+    h = h + L.dense_apply(p["temb"], jax.nn.silu(temb))[:, None, None]
+    h = jax.nn.silu(L.groupnorm_apply(p["gn2"], h))
+    h = L.conv_apply(p["conv2"], h)
+    skip = L.conv_apply(p["skip"], x) if "skip" in p else x
+    return h + skip
+
+
+def _basic_tblock_init(key, d, ctx_dim, d_head, dtype):
+    ks = jax.random.split(key, 4)
+    heads = d // d_head
+    return {
+        "ln1": L.layernorm_init(d, dtype),
+        "attn1": L.attention_init(ks[0], d, heads, heads, d_head, dtype=dtype),
+        "ln2": L.layernorm_init(d, dtype),
+        # cross-attn: kv projected from ctx_dim
+        "q2": L.dense_init(ks[1], d, d, bias=False, dtype=dtype),
+        "kv2": L.dense_init(ks[2], ctx_dim, 2 * d, bias=False, dtype=dtype),
+        "o2": L.dense_init(ks[3], d, d, bias=False, dtype=dtype),
+        "ln3": L.layernorm_init(d, dtype),
+        "mlp": L.mlp_init(jax.random.fold_in(key, 7), d, d * 4, gated=True,
+                          bias=True, dtype=dtype),
+    }
+
+
+def _basic_tblock_apply(p, x, ctx, *, heads, d_head, a_ff=None):
+    # self-attention
+    hn = L.layernorm_apply(p["ln1"], x)
+    att, _ = L.attention_apply(p["attn1"], hn, n_heads=heads, n_kv=heads,
+                               d_head=d_head, causal=False, rope_theta=None)
+    x = x + att
+    # cross-attention over ctx tokens
+    hn = L.layernorm_apply(p["ln2"], x)
+    q = L.dense_apply(p["q2"], hn)
+    kv = L.dense_apply(p["kv2"], ctx.astype(x.dtype))
+    k, v = jnp.split(kv, 2, axis=-1)
+    B, S, d = q.shape
+    T = k.shape[1]
+    qh = q.reshape(B, S, heads, d_head)
+    kh = k.reshape(B, T, heads, d_head)
+    vh = v.reshape(B, T, heads, d_head)
+    scores = jnp.einsum("bshd,bthd->bhst", qh, kh).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d_head))
+    w = jax.nn.softmax(scores, -1).astype(x.dtype)
+    att = jnp.einsum("bhst,bthd->bshd", w, vh).reshape(B, S, d)
+    x = x + L.dense_apply(p["o2"], att)
+    # geglu-style FF
+    hn = L.layernorm_apply(p["ln3"], x)
+    x = x + L.mlp_apply(p["mlp"], hn, a_ff=a_ff, act="gelu")
+    return x
+
+
+def _transformer2d_init(key, c, depth, ctx_dim, d_head, dtype):
+    ks = jax.random.split(key, depth + 2)
+    return {
+        "gn": L.groupnorm_init(c, dtype),
+        "proj_in": L.dense_init(ks[0], c, c, bias=True, dtype=dtype),
+        "blocks": [_basic_tblock_init(ks[1 + i], c, ctx_dim, d_head, dtype)
+                   for i in range(depth)],
+        "proj_out": {"kernel": jnp.zeros((c, c), dtype),
+                     "bias": jnp.zeros((c,), dtype)},
+    }
+
+
+def _transformer2d_apply(p, x, ctx, *, d_head, depth_mult=1.0, a_ff=None):
+    B, H, W, C = x.shape
+    heads = C // d_head
+    h = L.groupnorm_apply(p["gn"], x)
+    h = h.reshape(B, H * W, C)
+    h = L.dense_apply(p["proj_in"], h)
+    n_active = max(1, int(round(len(p["blocks"]) * depth_mult)))
+    for blk in p["blocks"][:n_active]:
+        h = _basic_tblock_apply(blk, h, ctx, heads=heads, d_head=d_head,
+                                a_ff=a_ff)
+    h = L.dense_apply(p["proj_out"], h)
+    return x + h.reshape(B, H, W, C)
+
+
+# --- full UNet ---------------------------------------------------------------
+
+def unet_init(key, cfg: UNetConfig) -> dict:
+    dt = cfg.pdtype()
+    ks = iter(jax.random.split(key, 256))
+    td = cfg.temb_dim
+    params = {
+        "conv_in": L.conv_init(next(ks), 3, cfg.in_channels, cfg.ch, bias=True,
+                               dtype=dt),
+        "t_mlp1": L.dense_init(next(ks), cfg.ch, td, dtype=dt),
+        "t_mlp2": L.dense_init(next(ks), td, td, dtype=dt),
+        "pool_mlp": L.dense_init(next(ks), cfg.pooled_dim, td, dtype=dt),
+        "gn_out": L.groupnorm_init(cfg.ch, dt),
+        "conv_out": L.conv_init(next(ks), 3, cfg.ch, cfg.in_channels, bias=True,
+                                dtype=dt),
+    }
+    chs = [cfg.ch * m for m in cfg.ch_mult]
+    # down path
+    down = []
+    skip_chs = [cfg.ch]
+    c_prev = cfg.ch
+    for s, c in enumerate(chs):
+        stage = {"res": [], "attn": []}
+        for b in range(cfg.n_res_blocks):
+            stage["res"].append(_resblock_init(next(ks), c_prev, c, td, dt))
+            c_prev = c
+            if cfg.transformer_depth[s]:
+                stage["attn"].append(_transformer2d_init(
+                    next(ks), c, cfg.transformer_depth[s], cfg.ctx_dim,
+                    cfg.d_head, dt))
+            skip_chs.append(c)
+        if s < len(chs) - 1:
+            stage["down"] = L.conv_init(next(ks), 3, c, c, bias=True, dtype=dt)
+            skip_chs.append(c)
+        down.append(stage)
+    params["down"] = down
+    # mid
+    params["mid"] = {
+        "res1": _resblock_init(next(ks), chs[-1], chs[-1], td, dt),
+        "attn": _transformer2d_init(next(ks), chs[-1], cfg.transformer_depth[-1],
+                                    cfg.ctx_dim, cfg.d_head, dt),
+        "res2": _resblock_init(next(ks), chs[-1], chs[-1], td, dt),
+    }
+    # up path
+    up = []
+    for s in reversed(range(len(chs))):
+        c = chs[s]
+        stage = {"res": [], "attn": []}
+        for b in range(cfg.n_res_blocks + 1):
+            c_skip = skip_chs.pop()
+            stage["res"].append(_resblock_init(next(ks), c_prev + c_skip, c,
+                                               td, dt))
+            c_prev = c
+            if cfg.transformer_depth[s]:
+                stage["attn"].append(_transformer2d_init(
+                    next(ks), c, cfg.transformer_depth[s], cfg.ctx_dim,
+                    cfg.d_head, dt))
+        if s > 0:
+            stage["up"] = L.conv_init(next(ks), 3, c, c, bias=True, dtype=dt)
+        up.append(stage)
+    params["up"] = up
+    return params
+
+
+def unet_apply(params, latents, t, ctx, pooled, cfg: UNetConfig, *, E=None):
+    """latents (B,h,w,4), t (B,), ctx (B,77,ctx_dim), pooled (B,pooled_dim)
+    -> noise prediction (B,h,w,4)."""
+    E = dict(E or {})
+    depth_mult = E.get("depth_mult", 1.0)
+    a_ff = E.get("a_ff")
+    cdt = cfg.cdtype()
+    x = latents.astype(cdt)
+    ctx = ctx.astype(cdt)
+
+    temb = timestep_embedding(t, cfg.ch).astype(cdt)
+    temb = L.dense_apply(params["t_mlp2"],
+                         jax.nn.silu(L.dense_apply(params["t_mlp1"], temb)))
+    temb = temb + L.dense_apply(params["pool_mlp"], pooled.astype(cdt))
+
+    h = L.conv_apply(params["conv_in"], x)
+    skips = [h]
+    for s, stage in enumerate(params["down"]):
+        for b, res in enumerate(stage["res"]):
+            h = _resblock_apply(res, h, temb)
+            if stage["attn"]:
+                h = _transformer2d_apply(stage["attn"][b], h, ctx,
+                                         d_head=cfg.d_head,
+                                         depth_mult=depth_mult, a_ff=a_ff)
+            skips.append(h)
+        if "down" in stage:
+            h = L.conv_apply(stage["down"], h, stride=2)
+            skips.append(h)
+
+    h = _resblock_apply(params["mid"]["res1"], h, temb)
+    h = _transformer2d_apply(params["mid"]["attn"], h, ctx, d_head=cfg.d_head,
+                             depth_mult=depth_mult, a_ff=a_ff)
+    h = _resblock_apply(params["mid"]["res2"], h, temb)
+
+    for stage in params["up"]:
+        for b, res in enumerate(stage["res"]):
+            skip = skips.pop()
+            h = _resblock_apply(res, jnp.concatenate([h, skip], -1), temb)
+            if stage["attn"]:
+                h = _transformer2d_apply(stage["attn"][b], h, ctx,
+                                         d_head=cfg.d_head,
+                                         depth_mult=depth_mult, a_ff=a_ff)
+        if "up" in stage:
+            B, H, W, C = h.shape
+            h = jax.image.resize(h, (B, H * 2, W * 2, C), "nearest")
+            h = L.conv_apply(stage["up"], h)
+
+    h = jax.nn.silu(L.groupnorm_apply(params["gn_out"], h))
+    return L.conv_apply(params["conv_out"], h)

@@ -1,0 +1,160 @@
+"""ViT / DeiT encoder with elastic width/depth and early-exit heads.
+
+Covers the assigned `vit-l16` and `deit-b` (distillation token) configs and
+is the backbone of the paper's own Dynamic-OFA vision experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core.types import ElasticSpace, is_static
+from repro.distributed import wsc
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    name: str
+    img_res: int
+    patch: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_classes: int = 1000
+    distill_token: bool = False      # DeiT
+    exit_layers: Tuple[int, ...] = ()  # early-exit heads (layer scaling)
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "none"
+    elastic: ElasticSpace = ElasticSpace()
+
+    @property
+    def n_tokens(self) -> int:
+        n = (self.img_res // self.patch) ** 2 + 1
+        return n + 1 if self.distill_token else n
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+def _block_init(key, cfg: ViTConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    d_head = cfg.d_model // cfg.n_heads
+    return {
+        "ln1": L.layernorm_init(cfg.d_model, cfg.pdtype()),
+        "attn": L.attention_init(k1, cfg.d_model, cfg.n_heads, cfg.n_heads,
+                                 d_head, qkv_bias=True, dtype=cfg.pdtype()),
+        "ln2": L.layernorm_init(cfg.d_model, cfg.pdtype()),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, gated=False, bias=True,
+                          dtype=cfg.pdtype()),
+    }
+
+
+def vit_init(key, cfg: ViTConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    n_special = 2 if cfg.distill_token else 1
+    params = {
+        "patch_embed": L.conv_init(ks[0], cfg.patch, 3, cfg.d_model, bias=True,
+                                   dtype=cfg.pdtype()),
+        "cls": jax.random.normal(ks[1], (n_special, cfg.d_model),
+                                 cfg.pdtype()) * 0.02,
+        "pos": jax.random.normal(ks[2], (cfg.n_tokens, cfg.d_model),
+                                 cfg.pdtype()) * 0.02,
+        "final_ln": L.layernorm_init(cfg.d_model, cfg.pdtype()),
+        "head": L.dense_init(ks[3], cfg.d_model, cfg.n_classes, dtype=cfg.pdtype()),
+    }
+    keys = jax.random.split(ks[4], cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: _block_init(k, cfg))(keys)
+    if cfg.distill_token:
+        params["head_dist"] = L.dense_init(ks[5], cfg.d_model, cfg.n_classes,
+                                           dtype=cfg.pdtype())
+    if cfg.exit_layers:
+        keys = jax.random.split(ks[5], len(cfg.exit_layers))
+        params["exit_heads"] = [
+            L.dense_init(k, cfg.d_model, cfg.n_classes, dtype=cfg.pdtype())
+            for k in keys]
+    return params
+
+
+def _encode(params, x, cfg: ViTConfig, E) -> tuple:
+    """images (B,H,W,3) -> (tokens (B,N,d), per-layer stacked hiddens|None)."""
+    a_model = E.get("a_model")
+    a_layers = E.get("a_layers")
+    B = x.shape[0]
+    # patch conv keeps full d_model; masking/slicing happens after pos-embed
+    # so the position table stays uniform across sub-networks.
+    h = L.conv_apply(params["patch_embed"], x.astype(cfg.cdtype()),
+                     stride=cfg.patch, padding="VALID")
+    h = h.reshape(B, -1, cfg.d_model)
+    cls = params["cls"].astype(h.dtype)
+    h = jnp.concatenate([jnp.tile(cls[None], (B, 1, 1)), h], axis=1)
+    h = h + params["pos"].astype(h.dtype)[None, : h.shape[1]]
+    if a_model is not None:
+        if is_static(a_model):
+            h = h[..., : int(a_model)]
+        else:
+            from repro.core.elastic import mask_dim
+            h = mask_dim(h, a_model, -1)
+    h = wsc(h, ("pod", "data"), None, None)
+
+    stack = params["layers"]
+    if a_layers is not None and is_static(a_layers):
+        stack = jax.tree_util.tree_map(lambda p: p[: int(a_layers)], stack)
+        a_layers = None
+
+    d_head = cfg.d_model // cfg.n_heads
+
+    def body(carry, xs):
+        hh = carry
+        lp, idx = xs
+        gate = None
+        if a_layers is not None:
+            gate = (idx < a_layers).astype(hh.dtype)
+        hn = L.layernorm_apply(lp["ln1"], hh, a=a_model)
+        att, _ = L.attention_apply(lp["attn"], hn, n_heads=cfg.n_heads,
+                                   n_kv=cfg.n_heads, d_head=d_head,
+                                   causal=False, rope_theta=None,
+                                   a_model=a_model, a_heads=E.get("a_heads"))
+        hh = hh + (att if gate is None else att * gate)
+        hn = L.layernorm_apply(lp["ln2"], hh, a=a_model)
+        ff = L.mlp_apply(lp["mlp"], hn, a_model=a_model, a_ff=E.get("a_ff"),
+                         act="gelu")
+        hh = hh + (ff if gate is None else ff * gate)
+        return wsc(hh, ("pod", "data"), None, None), (hh if cfg.exit_layers else 0)
+
+    fn = body
+    if cfg.remat != "none":
+        fn = jax.checkpoint(body, prevent_cse=False)
+    n = jax.tree_util.tree_leaves(stack)[0].shape[0]
+    h, hiddens = jax.lax.scan(fn, h, (stack, jnp.arange(n)))
+    return h, (hiddens if cfg.exit_layers else None)
+
+
+def vit_apply(params: dict, images: jax.Array, cfg: ViTConfig, *, E=None,
+              return_exits: bool = False):
+    """Returns (logits (B,n_classes), aux) — aux carries exit logits/distill."""
+    E = dict(E or {})
+    a_model = E.get("a_model")
+    h, hiddens = _encode(params, images, cfg, E)
+    h = L.layernorm_apply(params["final_ln"], h, a=a_model)
+    logits = L.dense_apply(params["head"], h[:, 0], a_in=a_model)
+    aux = {}
+    if cfg.distill_token:
+        aux["logits_dist"] = L.dense_apply(params["head_dist"], h[:, 1],
+                                           a_in=a_model)
+    if return_exits and cfg.exit_layers and hiddens is not None:
+        outs = []
+        for i, layer in enumerate(cfg.exit_layers):
+            hexit = hiddens[layer][:, 0]
+            outs.append(L.dense_apply(params["exit_heads"][i], hexit,
+                                      a_in=a_model))
+        aux["exit_logits"] = outs
+    return logits, aux

@@ -1,0 +1,1 @@
+from repro.optim.api import make_optimizer, clip_by_global_norm

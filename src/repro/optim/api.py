@@ -1,0 +1,149 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+``make_optimizer(name, **hp)`` returns ``(init_fn, update_fn)``:
+    state = init_fn(params)
+    params, state = update_fn(params, grads, state, step)
+
+All states inherit the parameter sharding (elementwise or factored over the
+trailing dims), so ZeRO-style partitioning falls out of the param
+PartitionSpecs for free.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-6))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _wd_ok(path_s: str) -> bool:
+    """No weight decay on norms/biases/BN."""
+    return not any(t in path_s for t in ("bias", "scale", "ln", "norm", "bn",
+                                         "pos", "cls"))
+
+
+def _zip_update(params, grads, state_tree, fn):
+    """Apply fn(path, p, g, s) -> (p', s') leafwise, where state_tree may be
+    deeper than params at each leaf (flatten_up_to handles it)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    g_flat = treedef.flatten_up_to(grads)
+    s_flat = treedef.flatten_up_to(state_tree)
+    new_p, new_s = [], []
+    for (path, p), g, s in zip(leaves, g_flat, s_flat):
+        np_, ns_ = fn(_path_str(path), p, g, s)
+        new_p.append(np_)
+        new_s.append(ns_)
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            jax.tree_util.tree_unflatten(treedef, new_s))
+
+
+# --- AdamW -------------------------------------------------------------------
+
+def adamw(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1):
+    def init(params):
+        return {"s": jax.tree_util.tree_map(
+            lambda p: {"mu": jnp.zeros_like(p, dtype=jnp.float32),
+                       "nu": jnp.zeros_like(p, dtype=jnp.float32)}, params)}
+
+    def update(params, grads, state, step):
+        t = step.astype(jnp.float32) + 1.0
+        c1, c2 = 1.0 - b1 ** t, 1.0 - b2 ** t
+
+        def fn(path_s, p, g, s):
+            g = g.astype(jnp.float32)
+            mu = b1 * s["mu"] + (1 - b1) * g
+            nu = b2 * s["nu"] + (1 - b2) * jnp.square(g)
+            u = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+            if weight_decay and _wd_ok(path_s):
+                u = u + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr * u).astype(p.dtype),
+                    {"mu": mu, "nu": nu})
+
+        new_p, new_s = _zip_update(params, grads, state["s"], fn)
+        return new_p, {"s": new_s}
+
+    return init, update
+
+
+# --- Adafactor (factored second moment; for 1T-param configs) ---------------
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0):
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"s": jax.tree_util.tree_map(st, params)}
+
+    def update(params, grads, state, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def fn(path_s, p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                vr_hat = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                          eps)
+                u = g * jax.lax.rsqrt(vr_hat)[..., None] \
+                      * jax.lax.rsqrt(jnp.maximum(vc, eps))[..., None, :]
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        new_p, new_s = _zip_update(params, grads, state["s"], fn)
+        return new_p, {"s": new_s}
+
+    return init, update
+
+
+# --- SGD momentum ------------------------------------------------------------
+
+def sgdm(lr: float = 0.1, momentum: float = 0.9, weight_decay: float = 1e-4):
+    def init(params):
+        return {"s": jax.tree_util.tree_map(
+            lambda p: {"m": jnp.zeros_like(p, dtype=jnp.float32)}, params)}
+
+    def update(params, grads, state, step):
+        def fn(path_s, p, g, s):
+            g = g.astype(jnp.float32)
+            if weight_decay and _wd_ok(path_s):
+                g = g + weight_decay * p.astype(jnp.float32)
+            m = momentum * s["m"] + g
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), {"m": m}
+
+        new_p, new_s = _zip_update(params, grads, state["s"], fn)
+        return new_p, {"s": new_s}
+
+    return init, update
+
+
+def make_optimizer(name: str, **hp) -> Tuple[Callable, Callable]:
+    return {"adamw": adamw, "adafactor": adafactor, "sgdm": sgdm}[name](**hp)

@@ -1,0 +1,73 @@
+"""Gradient compression: int8 quantisation with error feedback.
+
+Large-scale trick: the data-parallel gradient all-reduce moves
+params-sized fp32/bf16 tensors every step; quantising to int8 (per-tensor
+scale) cuts those bytes 4x at the cost of quantisation noise, which error
+feedback (residual carried to the next step) provably corrects for SGD-
+style updates.  Used by the compressed-allreduce train-step variant
+(examples/train_supernet.py --compress) and unit-tested for convergence.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_leaf(g: jax.Array, err: jax.Array):
+    """Error-feedback compression of one gradient leaf.
+
+    Returns (decompressed_gradient, new_error).  The caller all-reduces the
+    int8 payload; here (single-program view) we model the lossy channel.
+    """
+    g = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(g)
+    deq = dequantize_int8(q, scale)
+    return deq, g - deq
+
+
+def compressed_psum(g: jax.Array, err: jax.Array, axis_name: str):
+    """shard_map body: quantise locally, all-reduce int8 payloads (summed in
+    int32 to avoid overflow), dequantise with the max scale.
+
+    This is the explicit-collective form used when the train step manages
+    its own data-parallel reduction (bytes on the wire: 1/4 of fp32).
+    """
+    g = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(g)
+    # max scale across replicas keeps dequantisation conservative
+    scale_max = jax.lax.pmax(scale, axis_name)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+    mean = qsum.astype(jnp.float32) * scale_max / n.astype(jnp.float32)
+    local = dequantize_int8(q, scale)
+    return mean, g - local
+
+
+def tree_compress(grads, errors):
+    """Apply error-feedback compression leafwise; returns (grads, errors)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    outs = [compress_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return new_g, new_e
+
+
+def init_errors(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,15 @@
+"""Runtime resource management layer (the paper's middle layer).
+
+hwmodel  — TPU v5e roofline/DVFS/energy model
+lut      — (subnet x hw-state) profile tables (modelled + measured)
+governor — joint algorithm+hardware governor and Linux-governor baselines
+monitor  — latency/energy accounting and the paper's workload traces
+engine   — dynamic serving engine with a sub-network executable cache
+"""
+from repro.runtime.hwmodel import HwState, RooflineTerms, roofline, FREQ_LADDER
+from repro.runtime.lut import LUT, model_lut, measured_lut, accuracy_surrogate
+from repro.runtime.governor import (Constraints, JointGovernor,
+                                    PerformanceGovernor, SchedutilGovernor,
+                                    StaticPrunedGovernor)
+from repro.runtime.monitor import Monitor, paper_trace, run_governor
+from repro.runtime.engine import DynamicServer

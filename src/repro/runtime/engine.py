@@ -1,0 +1,160 @@
+"""Dynamic serving engine: the deployed half of the paper's system.
+
+Serves a supernet through its Pareto sub-networks:
+
+* an executable cache keyed by SubnetSpec — each sub-network is a separate
+  sliced-mode jit executable over the SAME parameter buffers, so switching
+  architectures costs one dictionary lookup (the Dynamic-OFA trick: weights
+  stay resident, no re-deployment);
+* dynamic request batching (max batch / timeout);
+* the runtime governor in the loop: every ``govern_every`` batches it
+  re-reads the performance target + hardware state and may switch the
+  active sub-network and the (modelled) DVFS point;
+* wall-clock measurement hooks that feed the measured LUT.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.elastic import spec_to_static
+from repro.core.types import SubnetSpec
+
+
+@dataclasses.dataclass
+class Request:
+    x: Any
+    t_submit: float
+    future: "queue.Queue"
+
+
+class DynamicServer:
+    def __init__(self, apply_fn: Callable, params, dims: Dict[str, int], *,
+                 governor=None, max_batch: int = 8, timeout_ms: float = 5.0,
+                 multiple_of: int = 1, warm_specs: Optional[List[SubnetSpec]]
+                 = None):
+        """``apply_fn(params, x, E) -> output`` (pure; jit-able).
+
+        ``dims`` maps knob names to full sizes (see spec_to_static).
+        """
+        self.apply_fn = apply_fn
+        self.params = params
+        self.dims = dims
+        self.governor = governor
+        self.max_batch = max_batch
+        self.timeout_s = timeout_ms / 1e3
+        self.multiple_of = multiple_of
+        self._cache: Dict[SubnetSpec, Any] = {}
+        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._stop = threading.Event()
+        self._worker: Optional[threading.Thread] = None
+        self.active_spec = SubnetSpec()
+        self.active_point = None
+        self.switch_log: List[dict] = []
+        self.served = 0
+        for spec in warm_specs or []:
+            self.executable(spec)
+
+    # --- executable cache ---------------------------------------------------
+
+    def executable(self, spec: SubnetSpec):
+        if spec not in self._cache:
+            E = spec_to_static(spec, self.dims, self.multiple_of)
+            fn = jax.jit(lambda p, x: self.apply_fn(p, x, E))
+            self._cache[spec] = fn
+        return self._cache[spec]
+
+    def switch(self, spec: SubnetSpec, point=None):
+        t0 = time.perf_counter()
+        cold = spec not in self._cache
+        self.executable(spec)
+        self.switch_log.append({"spec": spec.name(), "cold": cold,
+                                "ms": (time.perf_counter() - t0) * 1e3})
+        self.active_spec = spec
+        self.active_point = point
+
+    # --- synchronous API ------------------------------------------------------
+
+    def infer(self, x, spec: Optional[SubnetSpec] = None):
+        spec = spec or self.active_spec
+        fn = self.executable(spec)
+        return jax.block_until_ready(fn(self.params, x))
+
+    def measure(self, spec: SubnetSpec, x, iters: int = 5) -> float:
+        """Median wall-clock ms for one batch under ``spec`` (post-warmup)."""
+        fn = self.executable(spec)
+        jax.block_until_ready(fn(self.params, x))
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(self.params, x))
+            ts.append((time.perf_counter() - t0) * 1e3)
+        return float(np.median(ts))
+
+    # --- batched serving loop -------------------------------------------------
+
+    def submit(self, x) -> "queue.Queue":
+        fut: "queue.Queue" = queue.Queue(maxsize=1)
+        self._queue.put(Request(x=x, t_submit=time.perf_counter(), future=fut))
+        return fut
+
+    def _collect_batch(self) -> List[Request]:
+        reqs: List[Request] = []
+        deadline = None
+        while len(reqs) < self.max_batch:
+            timeout = None
+            if reqs:
+                timeout = max(0.0, deadline - time.perf_counter())
+            try:
+                r = self._queue.get(timeout=timeout if reqs else 0.05)
+            except queue.Empty:
+                break
+            if not reqs:
+                deadline = time.perf_counter() + self.timeout_s
+            reqs.append(r)
+        return reqs
+
+    def _serve_loop(self, constraints_fn=None, govern_every: int = 4):
+        n_batches = 0
+        while not self._stop.is_set():
+            reqs = self._collect_batch()
+            if not reqs:
+                continue
+            if self.governor is not None and constraints_fn is not None \
+                    and n_batches % govern_every == 0:
+                c = constraints_fn()
+                point = self.governor.select(c)
+                if point.subnet != self.active_spec:
+                    self.switch(point.subnet, point)
+                else:
+                    self.active_point = point
+            xs = np.stack([np.asarray(r.x) for r in reqs])
+            pad = self.max_batch - len(reqs)
+            if pad:
+                xs = np.concatenate([xs, np.zeros_like(xs[:1]).repeat(pad, 0)])
+            out = np.asarray(self.infer(xs))
+            for i, r in enumerate(reqs):
+                r.future.put({"y": out[i],
+                              "latency_ms": (time.perf_counter() - r.t_submit)
+                              * 1e3,
+                              "subnet": self.active_spec.name()})
+            self.served += len(reqs)
+            n_batches += 1
+
+    def start(self, constraints_fn=None, govern_every: int = 4):
+        self._stop.clear()
+        self._worker = threading.Thread(
+            target=self._serve_loop, args=(constraints_fn, govern_every),
+            daemon=True)
+        self._worker.start()
+
+    def stop(self):
+        self._stop.set()
+        if self._worker:
+            self._worker.join(timeout=5)

@@ -1,0 +1,81 @@
+"""TPU v5e hardware model: roofline terms, DVFS ladder, energy.
+
+This container is CPU-only; v5e is the *target*.  All latency/energy
+numbers that the runtime governor uses are produced here from compiled
+cost analysis (FLOPs / bytes / collective bytes), exactly the quantities
+EXPERIMENTS.md §Roofline reports.
+
+DVFS adaptation (DESIGN.md §2): mobile SoCs expose a frequency/voltage
+ladder; TPUs do not expose DVFS directly, so we model a v5e-like ladder
+where compute scales ~f and power ~f·V^2 (V roughly ∝ f above the knee).
+The governor treats (chips, freq) as its hardware knobs — the TPU
+analogues of the paper's task mapping + DVFS.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+# --- v5e per-chip constants (bf16) -----------------------------------------
+PEAK_FLOPS = 197e12          # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+TDP_W = 200.0                # per-chip board power at f=1.0 (modelled)
+IDLE_W = 60.0                # static / uncore power (modelled)
+
+
+@dataclasses.dataclass(frozen=True)
+class HwState:
+    """One hardware operating point (the governor's hardware knob)."""
+    chips: int = 256
+    freq: float = 1.0          # DVFS ladder fraction
+
+    def name(self) -> str:
+        return f"c{self.chips}-f{self.freq:g}"
+
+
+# modelled v5e DVFS ladder (fractions of nominal clock)
+FREQ_LADDER: Tuple[float, ...] = (0.4, 0.55, 0.7, 0.85, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """The three §Roofline terms, in seconds (per step, per device)."""
+    t_compute: float
+    t_memory: float
+    t_collective: float
+
+    @property
+    def t_total(self) -> float:
+        # compute and memory overlap on TPU; collectives partially overlap —
+        # the roofline estimate is max(compute, memory) + collective tail
+        return max(self.t_compute, self.t_memory) + self.t_collective
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+
+def roofline(flops_per_dev: float, bytes_per_dev: float,
+             coll_bytes_per_dev: float, hw: HwState) -> RooflineTerms:
+    f = hw.freq
+    return RooflineTerms(
+        t_compute=flops_per_dev / (PEAK_FLOPS * f),
+        t_memory=bytes_per_dev / HBM_BW,          # HBM clock ~ independent
+        t_collective=coll_bytes_per_dev / ICI_BW,
+    )
+
+
+def power_w(hw: HwState, utilization: float = 0.8) -> float:
+    """Modelled per-chip power at a DVFS point: P = P_idle + P_dyn·f·V²,
+    V ∝ max(f, 0.6) above the knee."""
+    v = max(hw.freq, 0.6)
+    return IDLE_W + (TDP_W - IDLE_W) * utilization * hw.freq * v * v
+
+
+def step_energy_mj(terms: RooflineTerms, hw: HwState,
+                   utilization: float = 0.8) -> float:
+    """Energy per step over the whole slice (millijoules)."""
+    return power_w(hw, utilization) * hw.chips * terms.t_total * 1e3

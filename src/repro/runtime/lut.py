@@ -1,0 +1,143 @@
+"""Profiled lookup table: (sub-network x hardware state) -> cost.
+
+The paper's runtime manager works from profiled Pareto tables (its Fig. 1
+"runtime resource management" layer consults algorithm and hardware knobs
+jointly).  Two profile sources:
+
+* ``model_lut``    — roofline-modelled from per-subnet analytic FLOPs/bytes,
+  anchored to the dry-run's compiled roofline terms for the full network
+  (CPU-only container; v5e is the target — see DESIGN.md §2).
+* ``measured_lut`` — wall-clock measurement of sliced-subnet executables
+  (used by the examples/benchmarks on the small supernet, where real time
+  on this host is meaningful).
+
+Accuracy per subnet: measured where we train (examples), otherwise a
+surrogate fitted to the published OFA ImageNet Pareto points (Cai et al.
+2020, table 1), declared as modelled in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.pareto import OpPoint
+from repro.core.types import SubnetSpec
+from repro.runtime import hwmodel as hm
+
+# Published OFA ImageNet points (MFLOPs, top-1 %) — accuracy surrogate anchor.
+_OFA_POINTS = ((230.0, 76.0), (389.0, 79.1), (482.0, 79.6), (595.0, 80.0))
+
+
+def accuracy_surrogate(flops_ratio: float, top_acc: float = 80.0) -> float:
+    """Monotone log-linear accuracy model through the OFA Pareto shape.
+
+    ``flops_ratio`` is subnet_flops / full_flops in (0, 1].  Fitted to the
+    spread of the published points: ~4 points of top-1 across a ~2.6x FLOPs
+    range => slope ~9.6%/decade.
+    """
+    ratio = max(min(flops_ratio, 1.0), 1e-3)
+    return top_acc + 9.6 * math.log10(ratio)
+
+
+def subnet_flops_ratio(spec: SubnetSpec) -> float:
+    """Analytic compute ratio of a subnet vs the full network.
+
+    Width-like knobs scale matmul FLOPs linearly in each scaled dim;
+    depth scales linearly.  Expert count does not change active compute
+    (top_k does).  This is exact for sliced elastic transformers.
+    """
+    r = 1.0
+    r *= spec.depth_mult
+    # attention ~ heads x width; mlp ~ width x ffn.  Use an even blend.
+    attn = spec.heads_mult * spec.width_mult
+    mlp = spec.width_mult * spec.ffn_mult
+    r *= 0.5 * attn + 0.5 * mlp
+    if spec.top_k is not None and spec.top_k > 0:
+        r *= 1.0  # top_k handled by caller (needs full config context)
+    if spec.resolution is not None:
+        r *= 1.0  # resolution handled by caller
+    return r
+
+
+@dataclasses.dataclass
+class LUT:
+    points: List[OpPoint]
+
+    def feasible(self, *, max_latency_ms: float, chips_available: int,
+                 power_budget_w: Optional[float] = None,
+                 min_accuracy: Optional[float] = None) -> List[OpPoint]:
+        out = []
+        for p in self.points:
+            if p.latency_ms > max_latency_ms:
+                continue
+            if p.hw_state.chips > chips_available:
+                continue
+            if power_budget_w is not None:
+                if hm.power_w(p.hw_state) * p.hw_state.chips > power_budget_w:
+                    continue
+            if min_accuracy is not None and p.accuracy < min_accuracy:
+                continue
+            out.append(p)
+        return out
+
+    def fastest(self, chips_available: int) -> OpPoint:
+        cands = [p for p in self.points if p.hw_state.chips <= chips_available]
+        return min(cands or self.points, key=lambda p: p.latency_ms)
+
+
+def model_lut(specs: Sequence[SubnetSpec], *, full_terms: hm.RooflineTerms,
+              full_chips: int,
+              hw_states: Optional[Sequence[hm.HwState]] = None,
+              top_accuracy: float = 80.0,
+              flops_ratio_fn: Callable[[SubnetSpec], float]
+              = subnet_flops_ratio) -> LUT:
+    """Build a modelled LUT by scaling the full network's roofline terms.
+
+    Compute/memory terms scale with the subnet compute ratio; the
+    collective term scales with the width part only (collectives move
+    activations).  Chip count scales all terms inversely (weak scaling),
+    frequency scales compute only.
+    """
+    hw_states = list(hw_states or
+                     [hm.HwState(chips=c, freq=f)
+                      for c in (full_chips, full_chips // 2, full_chips // 4)
+                      if c >= 1 for f in hm.FREQ_LADDER])
+    points = []
+    for spec in specs:
+        r = flops_ratio_fn(spec)
+        r_coll = 0.5 * (spec.width_mult + spec.width_mult * spec.ffn_mult)
+        for hw in hw_states:
+            scale_chips = full_chips / hw.chips
+            t_comp = full_terms.t_compute * r * scale_chips / hw.freq
+            t_mem = full_terms.t_memory * r * scale_chips
+            t_coll = full_terms.t_collective * r_coll * scale_chips
+            terms = hm.RooflineTerms(t_comp, t_mem, t_coll)
+            points.append(OpPoint(
+                subnet=spec, hw_state=hw,
+                latency_ms=terms.t_total * 1e3,
+                energy_mj=hm.step_energy_mj(terms, hw),
+                accuracy=accuracy_surrogate(r, top_accuracy),
+            ))
+    return LUT(points)
+
+
+def measured_lut(specs: Sequence[SubnetSpec], measure_fn,
+                 accuracy_fn=None, hw_states=None) -> LUT:
+    """Build a LUT from real measurements.
+
+    ``measure_fn(spec, hw) -> (latency_ms, energy_mj)`` — the serving engine
+    provides this by timing the sliced executable;
+    ``accuracy_fn(spec) -> float`` — measured (examples) or surrogate.
+    """
+    hw_states = list(hw_states or [hm.HwState(chips=1, freq=f)
+                                   for f in hm.FREQ_LADDER])
+    points = []
+    for spec in specs:
+        for hw in hw_states:
+            lat, en = measure_fn(spec, hw)
+            acc = (accuracy_fn(spec) if accuracy_fn
+                   else accuracy_surrogate(subnet_flops_ratio(spec)))
+            points.append(OpPoint(subnet=spec, hw_state=hw, latency_ms=lat,
+                                  energy_mj=en, accuracy=acc))
+    return LUT(points)

@@ -1,0 +1,35 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+# Tests see the real device count (1 CPU). Only the dry-run forces 512.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+def run_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run python code in a fresh process with N fake CPU devices.
+
+    Multi-device sharding/collective tests need a device count set before
+    jax initialises, so they run out of process.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}")
+    return res.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_subprocess

@@ -1,0 +1,121 @@
+"""Property tests for the masked == sliced duality (the core invariant)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layers as L
+from repro.core.elastic import mask_dim
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+KEY = jax.random.PRNGKey(0)
+
+
+@given(d_in=st.integers(4, 48), d_out=st.integers(4, 48),
+       fi=st.floats(0.25, 1.0), fo=st.floats(0.25, 1.0))
+def test_dense_slice_eq_mask(d_in, d_out, fi, fo):
+    a_in = max(1, int(d_in * fi))
+    a_out = max(1, int(d_out * fo))
+    p = L.dense_init(KEY, d_in, d_out)
+    x = jax.random.normal(KEY, (3, d_in))
+    y_slice = L.dense_apply(p, x[..., :a_in], a_in=a_in, a_out=a_out)
+    y_mask = L.dense_apply(p, mask_dim(x, jnp.asarray(a_in), -1),
+                           a_out=jnp.asarray(a_out))
+    np.testing.assert_allclose(np.asarray(y_slice),
+                               np.asarray(y_mask[..., :a_out]),
+                               rtol=1e-5, atol=1e-5)
+    assert np.all(np.asarray(y_mask[..., a_out:]) == 0)
+
+
+@given(d=st.integers(4, 64), frac=st.floats(0.2, 1.0),
+       norm=st.sampled_from(["layernorm", "rmsnorm"]))
+def test_norm_slice_eq_mask(d, frac, norm):
+    a = max(1, int(d * frac))
+    init = getattr(L, f"{norm}_init")
+    apply = getattr(L, f"{norm}_apply")
+    p = init(d)
+    x = jax.random.normal(KEY, (2, 5, d))
+    y_slice = apply(p, x[..., :a], a=a)
+    y_mask = apply(p, mask_dim(x, jnp.asarray(a), -1), a=jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(y_slice),
+                               np.asarray(y_mask[..., :a]),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_heads,n_kv,a_heads", [
+    (8, 4, 4), (8, 4, 8), (8, 8, 4), (8, 8, 2), (4, 1, 2), (6, 2, 4),
+])
+def test_attention_heads_slice_eq_mask(n_heads, n_kv, a_heads):
+    d_model, d_head = 32, 8
+    p = L.attention_init(KEY, d_model, n_heads, n_kv, d_head)
+    x = jax.random.normal(KEY, (2, 6, d_model))
+    y_s, _ = L.attention_apply(p, x, n_heads=n_heads, n_kv=n_kv,
+                               d_head=d_head, a_heads=a_heads)
+    y_m, _ = L.attention_apply(p, x, n_heads=n_heads, n_kv=n_kv,
+                               d_head=d_head, a_heads=jnp.asarray(a_heads))
+    np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_m),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["blocked_scan", "blocked_causal"])
+def test_blocked_attention_matches_ref(impl):
+    d_model, H, K, D = 32, 8, 4, 8
+    p = L.attention_init(KEY, d_model, H, K, D)
+    x = jax.random.normal(KEY, (1, 1024, d_model))
+    y_ref, _ = L.attention_apply(p, x, n_heads=H, n_kv=K, d_head=D, impl="ref")
+    y, _ = L.attention_apply(p, x, n_heads=H, n_kv=K, d_head=D, impl=impl,
+                             block_q=256, block_kv=256)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_prefill():
+    d_model, H, K, D = 32, 8, 4, 8
+    p = L.attention_init(KEY, d_model, H, K, D)
+    x = jax.random.normal(KEY, (2, 5, d_model))
+    y_pref, _ = L.attention_apply(p, x, n_heads=H, n_kv=K, d_head=D)
+    cache = {"k": jnp.zeros((2, 8, K, D)), "v": jnp.zeros((2, 8, K, D)),
+             "len": jnp.asarray(0)}
+    ys = []
+    for t in range(5):
+        y_t, cache = L.attention_apply(p, x[:, t:t + 1], n_heads=H, n_kv=K,
+                                       d_head=D, kv_cache=cache)
+        ys.append(y_t)
+    np.testing.assert_allclose(np.asarray(y_pref),
+                               np.asarray(jnp.concatenate(ys, 1)),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_conv_elastic_kernel_and_channels():
+    p = L.conv_init(KEY, 5, 8, 16)
+    x = jax.random.normal(KEY, (2, 8, 8, 8))
+    y = L.conv_apply(p, x, a_kernel=3, a_out=8)
+    assert y.shape == (2, 8, 8, 8)
+    # centre crop: a 3x3 crop of the 5x5 kernel equals explicit slicing
+    w = p["kernel"][1:4, 1:4, :, :8]
+    y2 = jax.lax.conv_general_dilated(x, w, (1, 1), "SAME",
+                                      dimension_numbers=("NHWC", "HWIO",
+                                                         "NHWC"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_switchable_bn_settings_independent():
+    p = L.sbn_init(8, n_settings=2)
+    p["scale"] = p["scale"].at[1].set(2.0)
+    x = jax.random.normal(KEY, (4, 3, 3, 8))
+    y0, _ = L.sbn_apply(p, x, setting=0, train=True)
+    y1, _ = L.sbn_apply(p, x, setting=1, train=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0 * 2.0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_groupnorm_shapes():
+    p = L.groupnorm_init(12)
+    x = jax.random.normal(KEY, (2, 4, 4, 12))
+    y = L.groupnorm_apply(p, x, groups=4)
+    assert y.shape == x.shape
+    assert abs(float(jnp.mean(y))) < 0.2

@@ -1,0 +1,105 @@
+"""Sharding rules + HLO analysis correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import clean_spec, param_specs
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def test_clean_spec_drops_missing_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    spec = P(("pod", "data"), "model", "pod")
+    c = clean_spec(spec, mesh)
+    assert c == P(("data",), "model", None)
+
+
+def test_lm_param_specs_rules():
+    shapes = {
+        "embed": {"embedding": jax.ShapeDtypeStruct((163840, 7168),
+                                                    jnp.float32)},
+        "dense_layers": {"attn": {
+            "q": {"kernel": jax.ShapeDtypeStruct((80, 8192, 8192),
+                                                 jnp.float32)},
+            "o": {"kernel": jax.ShapeDtypeStruct((80, 8192, 8192),
+                                                 jnp.float32)}},
+            "ln1": {"scale": jax.ShapeDtypeStruct((80, 8192), jnp.float32)}},
+        "lm_head": {"kernel": jax.ShapeDtypeStruct((8192, 152064),
+                                                   jnp.float32)},
+    }
+    specs = param_specs(shapes, "lm")
+    assert specs["embed"]["embedding"] == P("model", ("pod", "data"))
+    assert specs["dense_layers"]["attn"]["q"]["kernel"] == \
+        P(None, ("pod", "data"), "model")
+    assert specs["dense_layers"]["attn"]["o"]["kernel"] == \
+        P(None, "model", ("pod", "data"))
+    assert specs["dense_layers"]["ln1"]["scale"] == P(None, None)
+    assert specs["lm_head"]["kernel"] == P(("pod", "data"), "model")
+
+
+def test_param_specs_divisibility_guard():
+    shapes = {"embed": {"embedding": jax.ShapeDtypeStruct((1001, 1024),
+                                                          jnp.float32)}}
+    specs = param_specs(shapes, "vision", fsdp_axes=())
+    # 1001 % 16 != 0 -> vocab axis dropped
+    assert specs["embed"]["embedding"][0] is None
+
+
+def test_hlo_scan_trip_count_flops():
+    def f(x, ws):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        return jax.lax.scan(body, x, ws)[0]
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 256, 256), jnp.float32)
+    comp = jax.jit(f).lower(x, ws).compile()
+    res = analyze_hlo(comp.as_text())
+    expect = 2 * 128 * 256 * 256 * 7
+    assert abs(res["flops"] - expect) / expect < 0.01
+
+
+def test_hlo_conv_flops():
+    def g(x, w):
+        return jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = jax.ShapeDtypeStruct((4, 16, 16, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((3, 3, 32, 64), jnp.float32)
+    comp = jax.jit(g).lower(x, w).compile()
+    res = analyze_hlo(comp.as_text())
+    expect = 2 * 4 * 16 * 16 * 64 * 3 * 3 * 32
+    assert abs(res["flops"] - expect) / expect < 0.01
+
+
+def test_hlo_collective_bytes_counted(subproc):
+    out = subproc("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.hlo_analysis import analyze_hlo
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+def f(x):
+    return x.sum(0)   # cross-shard reduction -> all-reduce
+x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+with mesh:
+    comp = jax.jit(f, in_shardings=NamedSharding(mesh, P("data", None)),
+                   out_shardings=NamedSharding(mesh, P(None))).lower(x).compile()
+res = analyze_hlo(comp.as_text())
+assert res["coll_bytes_total"] >= 128 * 4, res["coll_bytes"]
+print("COLL", res["coll_bytes_total"])
+""", n_devices=8)
+    assert "COLL" in out
+
+
+def test_production_mesh_shapes(subproc):
+    out = subproc("""
+from repro.launch.mesh import make_production_mesh
+m1 = make_production_mesh()
+m2 = make_production_mesh(multi_pod=True)
+assert dict(m1.shape) == {"data": 16, "model": 16}
+assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+print("MESH OK", m1.size, m2.size)
+""", n_devices=512)
+    assert "MESH OK 256 512" in out

@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests for the paper's system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def test_train_cli_with_failure_recovery(tmp_path):
+    """Full launcher path: smoke train + injected failure + restart."""
+    from repro.launch import train as T
+    state = T.main([
+        "--arch", "dynamic-ofa-supernet", "--smoke", "--steps", "12",
+        "--save-every", "4", "--fail-at", "9",
+        "--ckpt-dir", str(tmp_path), "--log-every", "100"])
+    assert state is not None
+    leaves = jax.tree_util.tree_leaves(state["params"])
+    assert all(not np.any(np.isnan(np.asarray(l, np.float32)))
+               for l in leaves)
+
+
+def test_sandwich_supernet_training_improves_all_subnets():
+    """The paper's training recipe: after a few hundred steps on the
+    learnable synthetic task, every sub-network beats chance, and the full
+    net is at least as good as the smallest (accuracy ordering)."""
+    from repro.core.supernet import make_sandwich_step
+    from repro.core.elastic import spec_to_static
+    from repro.data import synthetic_image_batches
+    from repro.models.vit import ViTConfig, vit_apply, vit_init
+    from repro.optim import make_optimizer
+    from repro.core.types import ElasticSpace
+
+    cfg = ViTConfig(name="t", img_res=16, patch=4, n_layers=3, d_model=32,
+                    n_heads=4, d_ff=64, n_classes=4, compute_dtype="float32",
+                    elastic=ElasticSpace(width_mults=(0.5, 1.0),
+                                         ffn_mults=(0.5, 1.0),
+                                         depth_mults=(2 / 3, 1.0)))
+    params = vit_init(jax.random.PRNGKey(0), cfg)
+    init_fn, update_fn = make_optimizer("adamw", lr=3e-3, weight_decay=0.0)
+    opt = init_fn(params)
+    dims = {"d_model": 32, "d_ff": 64, "n_heads": 4, "n_layers": 3}
+
+    apply_fn = lambda p, b, E: vit_apply(p, b["images"], cfg, E=E)[0]
+    step_fn, sample_fn = make_sandwich_step(apply_fn, update_fn, dims,
+                                            n_random=1)
+    step_jit = jax.jit(step_fn)
+    rng = np.random.default_rng(0)
+    data = synthetic_image_batches(global_batch=32, img_res=16, n_classes=4)
+    for step in range(150):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        E_stack = sample_fn(cfg.elastic, rng)
+        params, opt, metrics = step_jit(params, opt, batch, E_stack,
+                                        jnp.asarray(step))
+    assert float(metrics["loss"]) < 2.0
+
+    # evaluate subnets (sliced mode)
+    test_batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+    def acc(E):
+        logits = apply_fn(params, test_batch, E)
+        return float(jnp.mean(jnp.argmax(logits, -1)
+                              == test_batch["labels"]))
+    accs = {}
+    for spec in cfg.elastic.enumerate():
+        accs[spec.name()] = acc(spec_to_static(spec, dims))
+    full = accs[cfg.elastic.max_spec().name()]
+    smallest = accs[cfg.elastic.min_spec().name()]
+    assert full > 0.5, accs            # beats 0.25 chance clearly
+    assert smallest > 0.3, accs        # small subnet still works
+    assert full >= smallest - 0.05, accs
+
+
+def test_multipod_cell_lowering_smoke(subproc):
+    """A reduced LM cell lowers+compiles on the REAL multi-pod mesh shape
+    (2,16,16) — the dry-run path end-to-end, in-process proof."""
+    out = subproc("""
+import jax
+from repro.configs import get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.distributed import use_mesh
+mesh = make_production_mesh(multi_pod=True)
+arch = get_arch("granite-20b")
+with use_mesh(mesh):
+    # smoke batch 64 shards evenly over the 32-way (pod,data) batch axes
+    cell = build_cell(arch, "train_4k", smoke=True, mesh=mesh,
+                      smoke_batch=64)
+    compiled = cell.lower(mesh).compile()
+ma = compiled.memory_analysis()
+print("COMPILED", ma.temp_size_in_bytes >= 0)
+""", n_devices=512, timeout=900)
+    assert "COMPILED True" in out
+
+
+def test_dryrun_records_exist_and_are_wellformed():
+    """The sweep writes one record per cell; every ok record carries the
+    three roofline terms and the memory analysis."""
+    import glob
+    import json
+    import os
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    recs = [json.load(open(f)) for f in
+            glob.glob(os.path.join(root,
+                                   "benchmarks/results/dryrun/*__base.json"))]
+    if not recs:
+        pytest.skip("dry-run sweep has not produced records yet")
+    ok = [r for r in recs if r["status"] == "ok"]
+    assert ok, "no successful dry-run records"
+    for r in ok:
+        assert r["t_compute"] >= 0 and r["t_memory"] >= 0
+        assert r["bottleneck"] in ("compute", "memory", "collective")
+        assert "per_device_total" in r["memory"]
