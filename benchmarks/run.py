@@ -10,6 +10,7 @@ import traceback
 
 
 def main() -> None:
+    import benchmarks.bench_arbiter as ba
     import benchmarks.bench_governor as bg
     import benchmarks.bench_kernels as bk
     import benchmarks.bench_pareto as bp
@@ -19,6 +20,7 @@ def main() -> None:
     suites = [
         ("pareto (paper: Dynamic-OFA vs static)", bp.run),
         ("governor (paper: energy vs Linux governors)", bg.run),
+        ("arbiter (multi-workload vs independent governors)", ba.run),
         ("switching (paper: runtime architecture switching)", bs.run),
         ("kernels (elastic matmul / flash attention)", bk.run),
         ("roofline (dry-run derived)", rt.rows),

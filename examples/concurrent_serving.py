@@ -1,0 +1,93 @@
+"""Two dynamic models served concurrently behind one runtime arbiter.
+
+An interactive ViT (tight latency target, high priority) and a batch ViT
+(loose target, low priority) share a modelled 4-chip slice.  Each model
+runs in its own :class:`DynamicServer` (own executable cache, own
+``JointGovernor``); one :class:`ResourceArbiter` clock re-divides the
+machine every cycle and switches each server's active sub-network.  Midway
+the slice shrinks to 2 chips: the batch model degrades first (priority
+order), the interactive model keeps its target.
+
+    PYTHONPATH=src python examples/concurrent_serving.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core.types import ElasticSpace
+from repro.models.vit import ViTConfig, vit_apply, vit_init
+from repro.runtime import (DynamicServer, GlobalConstraints, ResourceArbiter,
+                           model_lut)
+from repro.runtime import hwmodel as hm
+
+SPACE = ElasticSpace(width_mults=(0.5, 1.0), ffn_mults=(0.5, 1.0))
+HW_STATES = [hm.HwState(chips=c, freq=f) for c in (4, 2, 1)
+             for f in (0.7, 1.0)]
+
+
+def make_server(name: str, n_layers: int, d_model: int):
+    cfg = ViTConfig(name=name, img_res=32, patch=8, n_layers=n_layers,
+                    d_model=d_model, n_heads=4, d_ff=4 * d_model,
+                    n_classes=10, compute_dtype="float32")
+    params = vit_init(jax.random.PRNGKey(0), cfg)
+    dims = {"d_model": d_model, "d_ff": 4 * d_model, "n_heads": 4,
+            "n_layers": n_layers}
+    server = DynamicServer(lambda p, x, E: vit_apply(p, x, cfg, E=E)[0],
+                           params, dims, max_batch=4, timeout_ms=2.0)
+    return server
+
+
+def main():
+    arb = ResourceArbiter(interval_s=0.05)
+    # interactive: small model, tight target, high priority
+    interactive = make_server("interactive", n_layers=2, d_model=32)
+    terms_i = hm.RooflineTerms(4e-3, 1.5e-3, 5e-4)
+    arb.register("interactive",
+                 model_lut(SPACE.enumerate(), full_terms=terms_i,
+                           full_chips=4, hw_states=HW_STATES),
+                 target_latency_ms=6.0, priority=2, server=interactive)
+    # batch: bigger model, loose target, low priority
+    batch = make_server("batch", n_layers=4, d_model=64)
+    terms_b = hm.RooflineTerms(1.6e-2, 6e-3, 2e-3)
+    arb.register("batch",
+                 model_lut(SPACE.enumerate(), full_terms=terms_b,
+                           full_chips=4, hw_states=HW_STATES),
+                 target_latency_ms=40.0, priority=0, server=batch)
+
+    machine = {"chips": 4}
+    arb.start(lambda: GlobalConstraints(total_chips=machine["chips"],
+                                        power_budget_w=machine["chips"]
+                                        * hm.TDP_W))
+
+    x = np.zeros((32, 32, 3), "float32")
+    futs = []
+    # batch requests sent while it is starved queue up behind the pause and
+    # drain in the recovery phase — so every future below resolves
+    for phase, chips in (("full machine", 4), ("co-runner takes half", 2),
+                         ("co-runner leaves", 4)):
+        machine["chips"] = chips
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < 2.0:
+            futs.append(("interactive", interactive.submit(x)))
+            futs.append(("batch", batch.submit(x)))
+            time.sleep(0.02)
+        alloc = {k: (a.chips, a.feasible,
+                     a.point.subnet.name() if a.point else None)
+                 for k, a in arb.last_alloc.items()}
+        print(f"[{phase}] alloc (chips, meets-target, subnet): {alloc}")
+    outs = [(who, f.get(timeout=60)) for who, f in futs]
+    arb.stop()
+
+    for name in ("interactive", "batch"):
+        lats = [o["latency_ms"] for who, o in outs if who == name]
+        print(f"{name}: {len(lats)} served, "
+              f"p50={np.median(lats):.1f}ms p95={np.percentile(lats, 95):.1f}ms")
+    print("arbiter summary:", arb.summary())
+    switches = {"interactive": len(interactive.switch_log),
+                "batch": len(batch.switch_log)}
+    print("subnet switches:", switches)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,2 +1,3 @@
 """Distribution substrate: mesh context, sharding rules, collectives."""
-from repro.distributed.ctx import current_mesh, use_mesh, wsc, batch_axes
+from repro.distributed.ctx import (current_mesh, shard_map, use_mesh, wsc,
+                                   batch_axes)

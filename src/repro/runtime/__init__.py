@@ -5,6 +5,7 @@ lut      — (subnet x hw-state) profile tables (modelled + measured)
 governor — joint algorithm+hardware governor and Linux-governor baselines
 monitor  — latency/energy accounting and the paper's workload traces
 engine   — dynamic serving engine with a sub-network executable cache
+arbiter  — multi-workload water-filling arbiter over shared chips/power
 """
 from repro.runtime.hwmodel import HwState, RooflineTerms, roofline, FREQ_LADDER
 from repro.runtime.lut import LUT, model_lut, measured_lut, accuracy_surrogate
@@ -13,3 +14,5 @@ from repro.runtime.governor import (Constraints, JointGovernor,
                                     StaticPrunedGovernor)
 from repro.runtime.monitor import Monitor, paper_trace, run_governor
 from repro.runtime.engine import DynamicServer
+from repro.runtime.arbiter import (Allocation, GlobalConstraints,
+                                   ResourceArbiter, Workload)

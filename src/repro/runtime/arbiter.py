@@ -1,0 +1,314 @@
+"""Concurrent-workload runtime arbiter.
+
+The paper's management layer monitors *multiple concurrent workloads* and
+splits the hardware between them; the single-model :class:`JointGovernor`
+cannot do that — each instance assumes it owns the whole machine, so two
+governors co-running on one slice oversubscribe it.  The arbiter closes the
+gap (the multi-DNN arbitration problem of Xun et al., arXiv:2105.03608):
+
+* N registered workloads, each with its own LUT, latency target, priority
+  and :class:`JointGovernor`;
+* a global chip count + power budget, divided by **iterative
+  water-filling**: first give every workload (in priority order) the
+  *smallest* resource share under which a feasible :class:`OpPoint` exists,
+  then pour the surplus back in priority order wherever it buys accuracy,
+  until a full pass changes nothing;
+* a shared constraint clock that re-arbitrates periodically and drives the
+  per-workload governors/servers — multiple :class:`DynamicServer`
+  instances run behind one arbiter, each keeping its own (thread-safe)
+  executable cache.
+
+Degradation is by priority: when the budget shrinks below the sum of
+minimal shares, the lowest-priority workloads lose their targets first and
+fall back to the fastest point that fits the leftovers.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import threading
+from typing import Callable, Deque, Dict, List, Optional
+
+from repro.core.pareto import OpPoint
+from repro.runtime import hwmodel as hm
+from repro.runtime.engine import DynamicServer
+from repro.runtime.governor import Constraints, JointGovernor
+from repro.runtime.lut import LUT
+
+_MAX_FILL_PASSES = 8
+
+
+@dataclasses.dataclass
+class GlobalConstraints:
+    """The shared machine state the arbiter divides each cycle."""
+    total_chips: int
+    power_budget_w: Optional[float] = None
+    temperature_throttle: float = 1.0
+
+
+@dataclasses.dataclass
+class Workload:
+    """One tenant: a governed model with its own profile and target."""
+    name: str
+    lut: LUT
+    target_latency_ms: float
+    priority: int = 0
+    min_accuracy: Optional[float] = None
+    governor: Optional[JointGovernor] = None
+    server: Optional[DynamicServer] = None
+
+    def __post_init__(self):
+        if self.governor is None:
+            self.governor = JointGovernor(self.lut)
+
+
+@dataclasses.dataclass
+class Allocation:
+    """One workload's share of the machine for one arbitration cycle."""
+    workload: str
+    point: Optional[OpPoint]   # None => starved (nothing fits the leftovers)
+    chips: int
+    power_w: float
+    feasible: bool             # meets its latency target within its share
+    share: float = 0.0         # chips / total_chips
+
+
+class ResourceArbiter:
+    """Water-filling allocator + shared constraint clock over N workloads."""
+
+    def __init__(self, *, interval_s: float = 0.05):
+        self.interval_s = interval_s
+        self._workloads: Dict[str, Workload] = {}
+        self._lock = threading.RLock()
+        self._stop = threading.Event()
+        self._clock: Optional[threading.Thread] = None
+        # recent cycles only; summary() uses the running accumulators so a
+        # 20 Hz clock doesn't grow memory without bound
+        self.alloc_log: Deque[Dict[str, Allocation]] = collections.deque(
+            maxlen=4096)
+        self.last_alloc: Dict[str, Allocation] = {}
+        self._stats: Dict[str, Dict[str, float]] = {}
+
+    # --- registration -------------------------------------------------------
+
+    def register(self, name: str, lut: LUT, target_latency_ms: float, *,
+                 priority: int = 0, min_accuracy: Optional[float] = None,
+                 governor: Optional[JointGovernor] = None,
+                 server: Optional[DynamicServer] = None) -> Workload:
+        with self._lock:
+            if name in self._workloads:
+                raise ValueError(f"workload {name!r} already registered")
+            w = Workload(name=name, lut=lut,
+                         target_latency_ms=target_latency_ms,
+                         priority=priority, min_accuracy=min_accuracy,
+                         governor=governor, server=server)
+            self._workloads[name] = w
+            if (server is not None and not server.is_running
+                    and self._clock is not None and self._clock.is_alive()):
+                # late arrival while the clock is already running
+                server.start()
+            return w
+
+    def unregister(self, name: str):
+        with self._lock:
+            w = self._workloads.pop(name, None)
+            self.last_alloc.pop(name, None)
+            if w is not None and w.server is not None:
+                w.server.stop()   # the clock drove it; don't leak the worker
+
+    def _priority_order(self) -> List[Workload]:
+        # stable sort: ties broken by registration order
+        return sorted(self._workloads.values(), key=lambda w: -w.priority)
+
+    # --- water-filling ------------------------------------------------------
+
+    @staticmethod
+    def _throttled(pts, throttle: float):
+        if throttle < 1.0:
+            pts = [p for p in pts if p.hw_state.freq <= throttle]
+        return pts
+
+    def _min_share_point(self, w: Workload, chips_cap: int,
+                         power_cap: float, throttle: float
+                         ) -> Optional[OpPoint]:
+        """Feasible point with the smallest (chips, power), max accuracy."""
+        pts = w.lut.feasible(max_latency_ms=w.target_latency_ms,
+                             chips_available=chips_cap,
+                             power_budget_w=(None if math.isinf(power_cap)
+                                             else power_cap),
+                             min_accuracy=w.min_accuracy, max_freq=throttle)
+        if not pts:
+            return None
+        return min(pts, key=lambda p: (p.hw_state.chips,
+                                       hm.slice_power_w(p.hw_state),
+                                       -p.accuracy))
+
+    def _best_effort_point(self, w: Workload, chips_cap: int,
+                           power_cap: float, throttle: float
+                           ) -> Optional[OpPoint]:
+        """Fastest point that fits the leftover budget (target missed)."""
+        cands = [p for p in w.lut.points
+                 if p.hw_state.chips <= chips_cap
+                 and hm.slice_power_w(p.hw_state) <= power_cap]
+        cands = self._throttled(cands, throttle) or cands
+        if not cands:
+            return None
+        return min(cands, key=lambda p: p.latency_ms)
+
+    def arbitrate(self, g: GlobalConstraints) -> Dict[str, Allocation]:
+        """Divide (chips, power) among all registered workloads."""
+        with self._lock:
+            order = self._priority_order()
+            chips_left = g.total_chips
+            power_left = (g.power_budget_w if g.power_budget_w is not None
+                          else math.inf)
+            allocs: Dict[str, Allocation] = {}
+
+            # pass 1: minimal feasible share, highest priority first
+            for w in order:
+                point = self._min_share_point(w, chips_left, power_left,
+                                              g.temperature_throttle)
+                feasible = point is not None
+                if point is None:
+                    point = self._best_effort_point(
+                        w, chips_left, power_left, g.temperature_throttle)
+                chips = point.hw_state.chips if point else 0
+                power = hm.slice_power_w(point.hw_state) if point else 0.0
+                chips_left -= chips
+                power_left -= power
+                allocs[w.name] = Allocation(workload=w.name, point=point,
+                                            chips=chips, power_w=power,
+                                            feasible=feasible)
+
+            # pass 2+: water-fill the surplus — in priority order, let a
+            # workload trade its share up whenever the surplus buys either
+            # feasibility or strictly more accuracy; repeat to a fixpoint.
+            for _ in range(_MAX_FILL_PASSES):
+                changed = False
+                for w in order:
+                    cur = allocs[w.name]
+                    cap_chips = cur.chips + chips_left
+                    cap_power = cur.power_w + power_left
+                    pts = w.lut.feasible(
+                        max_latency_ms=w.target_latency_ms,
+                        chips_available=cap_chips,
+                        power_budget_w=(None if math.isinf(cap_power)
+                                        else cap_power),
+                        min_accuracy=w.min_accuracy,
+                        max_freq=g.temperature_throttle)
+                    if not pts:
+                        continue
+                    best = max(pts, key=lambda p: (p.accuracy, -p.energy_mj))
+                    upgraded = (not cur.feasible
+                                or cur.point is None
+                                or best.accuracy > cur.point.accuracy + 1e-12)
+                    if not upgraded:
+                        continue
+                    chips_left = cap_chips - best.hw_state.chips
+                    power_left = cap_power - hm.slice_power_w(best.hw_state)
+                    allocs[w.name] = Allocation(
+                        workload=w.name, point=best,
+                        chips=best.hw_state.chips,
+                        power_w=hm.slice_power_w(best.hw_state),
+                        feasible=True)
+                    changed = True
+                if not changed:
+                    break
+
+            for a in allocs.values():
+                a.share = a.chips / g.total_chips if g.total_chips else 0.0
+            self.last_alloc = allocs
+            return allocs
+
+    # --- per-workload constraints + governor/server drive -------------------
+
+    def constraints_for(self, w: Workload, alloc: Allocation,
+                        g: GlobalConstraints) -> Constraints:
+        """The arbiter's grant, phrased as the workload's own Constraints."""
+        return Constraints(
+            target_latency_ms=w.target_latency_ms,
+            chips_available=max(alloc.chips, 1),
+            power_budget_w=alloc.power_w if alloc.power_w > 0 else None,
+            min_accuracy=w.min_accuracy,
+            temperature_throttle=g.temperature_throttle,
+            priority=w.priority,
+            share=alloc.share)
+
+    def tick(self, g: GlobalConstraints) -> Dict[str, Allocation]:
+        """One arbitration cycle: allocate, govern, switch/pause servers."""
+        with self._lock:
+            allocs = self.arbitrate(g)
+            for w in self._workloads.values():
+                alloc = allocs[w.name]
+                if alloc.point is None:
+                    # starved: its slice went to other tenants — park the
+                    # server so it doesn't keep computing on chips it lost
+                    if w.server is not None:
+                        w.server.pause()
+                    continue
+                c = self.constraints_for(w, alloc, g)
+                point = w.governor.select(c)
+                if w.server is not None:
+                    if point.subnet != w.server.active_spec:
+                        w.server.switch(point.subnet, point)
+                    else:
+                        w.server.active_point = point
+                    w.server.resume()
+            self.alloc_log.append(allocs)
+            for name, a in allocs.items():
+                s = self._stats.setdefault(
+                    name, {"cycles": 0, "met": 0, "energy_mj": 0.0,
+                           "share_sum": 0.0})
+                s["cycles"] += 1
+                s["met"] += a.feasible
+                s["share_sum"] += a.share
+                if a.point is not None:
+                    s["energy_mj"] += a.point.energy_mj
+            return allocs
+
+    # --- shared constraint clock --------------------------------------------
+
+    def start(self, global_constraints_fn: Callable[[], GlobalConstraints]):
+        """Run the constraint clock: re-arbitrate every ``interval_s``."""
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                self.tick(global_constraints_fn())
+                self._stop.wait(self.interval_s)
+
+        self._clock = threading.Thread(target=loop, daemon=True)
+        self._clock.start()
+        for w in self._workloads.values():
+            if w.server is not None and not w.server.is_running:
+                # servers run governor-less: the arbiter's clock governs
+                w.server.start()
+
+    def stop(self):
+        self._stop.set()
+        if self._clock:
+            self._clock.join(timeout=5)
+            self._clock = None
+        with self._lock:
+            for w in self._workloads.values():
+                if w.server is not None:
+                    w.server.stop()
+
+    # --- accounting ---------------------------------------------------------
+
+    def summary(self) -> dict:
+        """Meet-rate and energy per workload over ALL cycles (running
+        accumulators — alloc_log only keeps the recent window)."""
+        out = {}
+        for name in self._workloads:
+            s = self._stats.get(name)
+            if not s or not s["cycles"]:
+                out[name] = {"cycles": 0}
+                continue
+            n = s["cycles"]
+            out[name] = {"cycles": n,
+                         "meet_rate": round(s["met"] / n, 4),
+                         "energy_mj": round(s["energy_mj"], 2),
+                         "mean_share": round(s["share_sum"] / n, 4)}
+        return out

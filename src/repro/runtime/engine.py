@@ -51,8 +51,10 @@ class DynamicServer:
         self.timeout_s = timeout_ms / 1e3
         self.multiple_of = multiple_of
         self._cache: Dict[SubnetSpec, Any] = {}
+        self._cache_lock = threading.Lock()
         self._queue: "queue.Queue[Request]" = queue.Queue()
         self._stop = threading.Event()
+        self._paused = threading.Event()
         self._worker: Optional[threading.Thread] = None
         self.active_spec = SubnetSpec()
         self.active_point = None
@@ -64,11 +66,14 @@ class DynamicServer:
     # --- executable cache ---------------------------------------------------
 
     def executable(self, spec: SubnetSpec):
-        if spec not in self._cache:
-            E = spec_to_static(spec, self.dims, self.multiple_of)
-            fn = jax.jit(lambda p, x: self.apply_fn(p, x, E))
-            self._cache[spec] = fn
-        return self._cache[spec]
+        # called from the worker thread AND synchronous infer()/measure()
+        # callers (and, in arbiter mode, the shared constraint clock)
+        with self._cache_lock:
+            if spec not in self._cache:
+                E = spec_to_static(spec, self.dims, self.multiple_of)
+                fn = jax.jit(lambda p, x: self.apply_fn(p, x, E))
+                self._cache[spec] = fn
+            return self._cache[spec]
 
     def switch(self, spec: SubnetSpec, point=None):
         t0 = time.perf_counter()
@@ -120,9 +125,20 @@ class DynamicServer:
             reqs.append(r)
         return reqs
 
+    def pause(self):
+        """Park the worker: requests queue up but no compute is consumed
+        (the arbiter starves a workload this way — its slice is gone)."""
+        self._paused.set()
+
+    def resume(self):
+        self._paused.clear()
+
     def _serve_loop(self, constraints_fn=None, govern_every: int = 4):
         n_batches = 0
         while not self._stop.is_set():
+            if self._paused.is_set():
+                self._stop.wait(0.01)
+                continue
             reqs = self._collect_batch()
             if not reqs:
                 continue
@@ -147,8 +163,13 @@ class DynamicServer:
             self.served += len(reqs)
             n_batches += 1
 
+    @property
+    def is_running(self) -> bool:
+        return self._worker is not None and self._worker.is_alive()
+
     def start(self, constraints_fn=None, govern_every: int = 4):
         self._stop.clear()
+        self._paused.clear()
         self._worker = threading.Thread(
             target=self._serve_loop, args=(constraints_fn, govern_every),
             daemon=True)

@@ -30,6 +30,11 @@ class Constraints:
     power_budget_w: Optional[float] = None
     min_accuracy: Optional[float] = None
     temperature_throttle: float = 1.0   # <1 caps the frequency ladder
+    # multi-workload fields (read by the arbiter, ignored by single-model
+    # governors): arbitration priority and the fraction of the global
+    # budget this workload was granted.
+    priority: int = 0
+    share: float = 1.0
 
 
 class GovernorBase:
@@ -52,21 +57,21 @@ class JointGovernor(GovernorBase):
         self.h_energy = hysteresis_energy
 
     def _feasible(self, c: Constraints):
-        pts = self.lut.feasible(
+        return self.lut.feasible(
             max_latency_ms=c.target_latency_ms,
             chips_available=c.chips_available,
             power_budget_w=c.power_budget_w,
-            min_accuracy=c.min_accuracy)
-        if c.temperature_throttle < 1.0:
-            pts = [p for p in pts
-                   if p.hw_state.freq <= c.temperature_throttle]
-        return pts
+            min_accuracy=c.min_accuracy,
+            max_freq=c.temperature_throttle)
 
     def select(self, c: Constraints) -> OpPoint:
         feasible = self._feasible(c)
         if not feasible:
             # infeasible target: degrade gracefully to the fastest point
-            choice = self.lut.fastest(c.chips_available)
+            # that still respects the thermal throttle and power grant
+            choice = self.lut.fastest(c.chips_available,
+                                      max_freq=c.temperature_throttle,
+                                      power_budget_w=c.power_budget_w)
             self.current = choice
             return choice
         # max accuracy, tie-break min energy

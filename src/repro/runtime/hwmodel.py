@@ -75,6 +75,15 @@ def power_w(hw: HwState, utilization: float = 0.8) -> float:
     return IDLE_W + (TDP_W - IDLE_W) * utilization * hw.freq * v * v
 
 
+def slice_power_w(hw: HwState, utilization: float = 0.8) -> float:
+    """Total board power of a hardware slice (all chips at the DVFS point).
+
+    The unit the multi-workload arbiter budgets in: per-workload power
+    shares must sum to the global budget across concurrent slices.
+    """
+    return power_w(hw, utilization) * hw.chips
+
+
 def step_energy_mj(terms: RooflineTerms, hw: HwState,
                    utilization: float = 0.8) -> float:
     """Energy per step over the whole slice (millijoules)."""

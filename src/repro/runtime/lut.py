@@ -66,24 +66,41 @@ class LUT:
 
     def feasible(self, *, max_latency_ms: float, chips_available: int,
                  power_budget_w: Optional[float] = None,
-                 min_accuracy: Optional[float] = None) -> List[OpPoint]:
+                 min_accuracy: Optional[float] = None,
+                 max_freq: float = 1.0) -> List[OpPoint]:
         out = []
         for p in self.points:
             if p.latency_ms > max_latency_ms:
                 continue
             if p.hw_state.chips > chips_available:
                 continue
+            if p.hw_state.freq > max_freq:
+                continue
             if power_budget_w is not None:
-                if hm.power_w(p.hw_state) * p.hw_state.chips > power_budget_w:
+                if hm.slice_power_w(p.hw_state) > power_budget_w:
                     continue
             if min_accuracy is not None and p.accuracy < min_accuracy:
                 continue
             out.append(p)
         return out
 
-    def fastest(self, chips_available: int) -> OpPoint:
+    def fastest(self, chips_available: int, max_freq: float = 1.0,
+                power_budget_w: Optional[float] = None) -> OpPoint:
+        """Lowest-latency point within the chip/power budget and freq cap.
+
+        ``max_freq`` < 1 is a thermal throttle and ``power_budget_w`` an
+        arbiter grant: a degraded pick must still respect them, so each
+        cap is only relaxed (power first, then freq, then chips) if NO
+        point satisfies it.
+        """
         cands = [p for p in self.points if p.hw_state.chips <= chips_available]
-        return min(cands or self.points, key=lambda p: p.latency_ms)
+        capped = [p for p in cands if p.hw_state.freq <= max_freq]
+        if power_budget_w is not None:
+            powered = [p for p in capped or cands
+                       if hm.slice_power_w(p.hw_state) <= power_budget_w]
+            if powered:
+                return min(powered, key=lambda p: p.latency_ms)
+        return min(capped or cands or self.points, key=lambda p: p.latency_ms)
 
 
 def model_lut(specs: Sequence[SubnetSpec], *, full_terms: hm.RooflineTerms,

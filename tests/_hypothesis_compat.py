@@ -1,0 +1,114 @@
+"""Fallback for ``hypothesis`` in offline containers.
+
+The property tests only use a small slice of the API:
+
+    from hypothesis import given, settings, strategies as st
+    st.floats(lo, hi) / st.integers(lo, hi) / st.sampled_from(seq)
+    settings.register_profile(...) / settings.load_profile(...)
+
+When the real package is importable we do nothing.  Otherwise
+:func:`install` registers a shim module named ``hypothesis`` that replays
+fixed, deterministic example sets (bounds, midpoints, and a few seeded
+draws) through ``@given`` — property tests degrade to example tests instead
+of killing collection.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+import sys
+import types
+
+_MAX_COMBOS = 16
+
+
+class _Strategy:
+    def __init__(self, examples, draw):
+        self.examples = list(examples)   # always-tried corner cases
+        self.draw = draw                 # rng -> one more example
+
+
+def floats(min_value, max_value):
+    mid = 0.5 * (min_value + max_value)
+    return _Strategy([min_value, max_value, mid],
+                     lambda rng: rng.uniform(min_value, max_value))
+
+
+def integers(min_value, max_value):
+    mid = (min_value + max_value) // 2
+    return _Strategy([min_value, max_value, mid],
+                     lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(elements, lambda rng: rng.choice(elements))
+
+
+def booleans():
+    return _Strategy([False, True], lambda rng: rng.random() < 0.5)
+
+
+def given(**strategies):
+    """Run the test on the cartesian product of corner examples (capped at
+    ``_MAX_COMBOS``, topped up with seeded random draws)."""
+    names = sorted(strategies)
+
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            combos = list(itertools.islice(
+                itertools.product(*(strategies[n].examples for n in names)),
+                _MAX_COMBOS))
+            rng = random.Random(0)
+            while len(combos) < _MAX_COMBOS:
+                combos.append(tuple(strategies[n].draw(rng) for n in names))
+            for combo in combos:
+                fn(*args, **dict(zip(names, combo)), **kwargs)
+        # hide the strategy params from pytest (it would treat them as
+        # fixtures); remaining params stay visible, like real @given
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for p in sig.parameters.values()
+                        if p.name not in strategies])
+        del wrapper.__wrapped__
+        return wrapper
+    return decorator
+
+
+class settings:  # noqa: N801 — mirrors hypothesis' class name
+    def __init__(self, *args, **kwargs):
+        pass
+
+    def __call__(self, fn):
+        return fn
+
+    @staticmethod
+    def register_profile(name, *args, **kwargs):
+        pass
+
+    @staticmethod
+    def load_profile(name):
+        pass
+
+
+def install():
+    """Put the shim in ``sys.modules`` iff real hypothesis is unavailable."""
+    try:
+        import hypothesis  # noqa: F401 — real package wins
+        return
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.floats = floats
+    st.integers = integers
+    st.sampled_from = sampled_from
+    st.booleans = booleans
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

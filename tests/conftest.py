@@ -12,6 +12,15 @@ SRC = os.path.join(REPO, "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
+TESTS = os.path.dirname(os.path.abspath(__file__))
+if TESTS not in sys.path:
+    sys.path.insert(0, TESTS)
+
+# Offline containers lack hypothesis; shim it so collection never dies.
+import _hypothesis_compat  # noqa: E402
+
+_hypothesis_compat.install()
+
 
 def run_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
     """Run python code in a fresh process with N fake CPU devices.

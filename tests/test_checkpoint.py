@@ -59,8 +59,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import save_checkpoint, restore_checkpoint
 d = tempfile.mkdtemp()
 x = jnp.arange(64.0).reshape(8, 8)
-mesh1 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh1 = make_mesh((4, 2), ("data", "model"))
 xs = jax.device_put(x, NamedSharding(mesh1, P("data", "model")))
 save_checkpoint(d, 0, {"w": xs})
 devs = np.array(jax.devices()[:4]).reshape(2, 2)

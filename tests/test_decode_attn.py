@@ -5,8 +5,8 @@ def test_sharded_decode_matches_xla(subproc):
     subproc("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import layers as L
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 key = jax.random.PRNGKey(0)
 d_model, H, K, D = 32, 8, 4, 8
 p = L.attention_init(key, d_model, H, K, D)
@@ -36,8 +36,8 @@ def test_sharded_decode_sequence_of_steps(subproc):
     subproc("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import layers as L
-mesh = jax.make_mesh((1, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((1, 4), ("data", "model"))
 key = jax.random.PRNGKey(0)
 d_model, H, K, D = 16, 4, 2, 4
 p = L.attention_init(key, d_model, H, K, D)

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch.mesh import make_mesh
 from repro.models.moe import MoEConfig, moe_apply, moe_init
 
 KEY = jax.random.PRNGKey(0)
@@ -31,8 +32,7 @@ def test_einsum_matches_dense_oracle(setup):
 
 def test_a2a_matches_dense_oracle(setup):
     p, x = setup
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     y_d, _ = moe_apply(p, x, dataclasses.replace(CFG, dispatch="dense"))
     y_a, _ = moe_apply(p, x, dataclasses.replace(CFG, dispatch="a2a"),
                        mesh=mesh, data_axes=("data",))
@@ -93,8 +93,8 @@ key = jax.random.PRNGKey(0)
 p = moe_init(key, 32, cfg)
 x = jax.random.normal(key, (4, 16, 32))
 y_ref, _ = moe_apply(p, x, dataclasses.replace(cfg, dispatch="dense"))
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 with mesh:
     fn = jax.jit(lambda p, x: moe_apply(
         p, x, dataclasses.replace(cfg, dispatch="a2a"), mesh=mesh,

@@ -49,10 +49,11 @@ def test_governor_meets_feasible_targets(target, chips, throttle):
         # max-accuracy selection
         assert point.accuracy == max(p.accuracy for p in feasible)
     else:
-        # graceful degradation: fastest available point
+        # graceful degradation: fastest point that respects the throttle
         assert point.latency_ms == min(
             p.latency_ms for p in LUT.points
-            if p.hw_state.chips <= chips)
+            if p.hw_state.chips <= chips and p.hw_state.freq <= throttle)
+        assert point.hw_state.freq <= throttle
 
 
 def test_governor_hysteresis_no_oscillation():

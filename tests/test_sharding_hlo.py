@@ -7,11 +7,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import clean_spec, param_specs
 from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_mesh
 
 
 def test_clean_spec_drops_missing_axes():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     spec = P(("pod", "data"), "model", "pod")
     c = clean_spec(spec, mesh)
     assert c == P(("data",), "model", None)
@@ -78,8 +78,8 @@ def test_hlo_collective_bytes_counted(subproc):
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.hlo_analysis import analyze_hlo
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ("data",))
 def f(x):
     return x.sum(0)   # cross-shard reduction -> all-reduce
 x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
