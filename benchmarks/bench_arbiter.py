@@ -19,7 +19,7 @@ import dataclasses
 
 from repro.core.types import ElasticSpace
 from repro.runtime import (GlobalConstraints, JointGovernor, ResourceArbiter,
-                           model_lut)
+                           default_hw_states, model_lut)
 from repro.runtime import hwmodel as hm
 
 TOTAL_CHIPS = 256
@@ -40,11 +40,9 @@ _REF_TERMS = hm.RooflineTerms(t_compute=0.02, t_memory=0.008,
 
 
 def make_luts():
-    # finer chip ladder than model_lut's default {1, 1/2, 1/4}: concurrent
-    # tenants need small slice quanta or water-filling can't pack them
-    hw_states = [hm.HwState(chips=c, freq=f)
-                 for c in (256, 128, 64, 32)
-                 for f in hm.FREQ_LADDER]
+    # concurrent tenants need small slice quanta or water-filling can't
+    # pack them — default_hw_states provides the 8-tier ladder down to 1/16
+    hw_states = default_hw_states(TOTAL_CHIPS)
     luts = {}
     for name, scale, _, _ in WORKLOADS:
         terms = hm.RooflineTerms(_REF_TERMS.t_compute * scale,

@@ -1,0 +1,127 @@
+"""Traffic layer: SLO-aware admission+preemption vs FIFO/no-admission.
+
+Three request classes share one chip pool through a contention trace
+(co-running phase halves the pool, a thermal window caps the ladder):
+
+* ``interactive`` — bursty ON-OFF stream, tight deadline, high priority,
+  SHED drop policy (the class preemption + shedding exist for);
+* ``vision``      — steady Poisson stream, mid deadline/priority;
+* ``greedy-rt``   — a Poisson stream whose deadline NO operating point
+  can meet: SLO admission rejects it at registration; the FIFO baseline
+  admits it and lets its best-effort slice clog the pool.
+
+Both policies replay the SAME seeded arrival trace through the same
+arbiter code; the SLO policy must deliver strictly more goodput at
+equal-or-lower interactive p95 (asserted).
+
+    PYTHONPATH=src python benchmarks/bench_traffic.py [--smoke]
+"""
+from __future__ import annotations
+
+from repro.core.types import ElasticSpace
+from repro.runtime import GlobalConstraints, default_hw_states, model_lut
+from repro.runtime import hwmodel as hm
+from repro.traffic import (FIFO_POLICY, REJECT, SHED, SLO_POLICY, SLOClass,
+                           onoff, poisson, simulate)
+
+TOTAL_CHIPS = 256
+POWER_BUDGET_W = 0.9 * TOTAL_CHIPS * hm.TDP_W
+INTERVAL_S = 0.1
+
+SPACE = ElasticSpace(width_mults=(0.5, 0.75, 1.0), ffn_mults=(0.5, 1.0),
+                     depth_mults=(0.5, 1.0))
+_REF_TERMS = hm.RooflineTerms(t_compute=0.02, t_memory=0.008,
+                              t_collective=0.004)
+
+# (class, roofline scale vs the reference cell)
+CLASSES = (
+    (SLOClass("interactive", deadline_ms=60.0, priority=2,
+              drop_policy=SHED), 1.0),
+    (SLOClass("vision", deadline_ms=150.0, priority=1,
+              drop_policy=SHED), 0.4),
+    (SLOClass("greedy-rt", deadline_ms=4.0, priority=0,
+              drop_policy=REJECT), 1.6),
+)
+
+
+def make_luts():
+    hw_states = default_hw_states(TOTAL_CHIPS)
+    luts = {}
+    for cls, scale in CLASSES:
+        terms = hm.RooflineTerms(_REF_TERMS.t_compute * scale,
+                                 _REF_TERMS.t_memory * scale,
+                                 _REF_TERMS.t_collective * scale)
+        luts[cls.name] = model_lut(SPACE.enumerate(), full_terms=terms,
+                                   full_chips=TOTAL_CHIPS,
+                                   hw_states=hw_states)
+    return luts
+
+
+def make_streams(horizon_s: float):
+    """One seeded trace, replayed identically under both policies."""
+    return {
+        "interactive": onoff(40.0, horizon_s, on_s=1.0, off_s=1.0, seed=1),
+        "vision": poisson(12.0, horizon_s, seed=2),
+        "greedy-rt": poisson(15.0, horizon_s, seed=3),
+    }
+
+
+def g_fn(t: float) -> GlobalConstraints:
+    """Shared machine conditions: a co-running phase halves the pool at
+    1/3 of the horizon-agnostic 30 s cycle, a thermal window overlaps."""
+    phase = t % 30.0
+    chips = TOTAL_CHIPS // 2 if 10.0 <= phase < 16.0 else TOTAL_CHIPS
+    throttle = 0.7 if 12.0 <= phase < 18.0 else 1.0
+    return GlobalConstraints(total_chips=chips,
+                             power_budget_w=POWER_BUDGET_W
+                             * chips / TOTAL_CHIPS,
+                             temperature_throttle=throttle)
+
+
+def run(smoke: bool = False):
+    horizon_s = 12.0 if smoke else 60.0
+    luts = make_luts()
+    classes = [cls for cls, _ in CLASSES]
+    reports = {}
+    for policy in (SLO_POLICY, FIFO_POLICY):
+        reports[policy] = simulate(classes, luts, make_streams(horizon_s),
+                                   g_fn, interval_s=INTERVAL_S,
+                                   policy=policy)
+
+    rows = []
+    for policy, rep in reports.items():
+        for name, cs in rep.classes.items():
+            s = cs.summary()
+            rows.append((f"traffic/{policy}/{name}/goodput", s["goodput"],
+                         f"p95_ms={s['p95_ms']} dropped={s['dropped']} "
+                         f"rejected={s['rejected']} "
+                         f"completed={s['completed']}"))
+        arb = rep.arbiter
+        preempts = sum(a.get("preemptions", 0) for a in arb.values())
+        rows.append((f"traffic/{policy}/goodput_total", rep.total_goodput,
+                     f"dropped={rep.total_dropped} preemptions={preempts}"))
+
+    slo, fifo = reports[SLO_POLICY], reports[FIFO_POLICY]
+    p95_slo = slo.classes["interactive"].p(95)
+    p95_fifo = fifo.classes["interactive"].p(95)
+    rows.append(("traffic/interactive_p95_slo_vs_fifo_ms", p95_slo,
+                 f"fifo={p95_fifo:.1f}ms"))
+    assert slo.total_goodput > fifo.total_goodput, (
+        f"SLO goodput {slo.total_goodput} <= FIFO {fifo.total_goodput}")
+    assert p95_slo <= p95_fifo, (
+        f"SLO interactive p95 {p95_slo:.1f}ms > FIFO {p95_fifo:.1f}ms")
+    # admission control really fired: the infeasible class is rejected
+    # under SLO and admitted (then always late) under FIFO
+    assert slo.classes["greedy-rt"].rejected > 0
+    assert fifo.classes["greedy-rt"].rejected == 0
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short horizon (fast CI path)")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
+        print(",".join(str(c) for c in r))

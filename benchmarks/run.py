@@ -5,6 +5,7 @@ scalar of each row: wall-clock us, energy, %, or roofline time).
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
@@ -15,12 +16,20 @@ def main() -> None:
     import benchmarks.bench_kernels as bk
     import benchmarks.bench_pareto as bp
     import benchmarks.bench_switching as bs
+    import benchmarks.bench_traffic as bt
     import benchmarks.roofline_table as rt
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast path for suites that support it")
+    args = ap.parse_args()
 
     suites = [
         ("pareto (paper: Dynamic-OFA vs static)", bp.run),
         ("governor (paper: energy vs Linux governors)", bg.run),
         ("arbiter (multi-workload vs independent governors)", ba.run),
+        ("traffic (SLO admission+preemption vs FIFO)",
+         lambda: bt.run(smoke=args.smoke)),
         ("switching (paper: runtime architecture switching)", bs.run),
         ("kernels (elastic matmul / flash attention)", bk.run),
         ("roofline (dry-run derived)", rt.rows),

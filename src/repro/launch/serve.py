@@ -17,8 +17,9 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core.types import SubnetSpec
-from repro.runtime import (Constraints, DynamicServer, JointGovernor, Monitor,
-                           PerformanceGovernor, SchedutilGovernor,
+from repro.runtime import (Constraints, DynamicServer, GlobalConstraints,
+                           JointGovernor, Monitor, PerformanceGovernor,
+                           ResourceArbiter, SchedutilGovernor,
                            StaticPrunedGovernor, measured_lut, model_lut,
                            paper_trace, run_governor)
 from repro.runtime import hwmodel as hm
@@ -38,12 +39,67 @@ def build_server(arch, cfg, *, max_batch=8):
     return DynamicServer(apply_fn, params, dims, max_batch=max_batch)
 
 
+def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
+    """``--trace``: SLO-classed request streams through the arbiter.
+
+    Two tenants (an interactive class and a background batch class) run
+    as separate DynamicServers behind one ResourceArbiter; the traffic
+    layer replays a seeded arrival schedule (or a recorded one from a
+    JSON file) open-loop against them and reports per-class percentile
+    latency, goodput and drops.
+    """
+    from repro.traffic import (DEGRADE, SLOClass, drive_live, load_schedule,
+                               onoff, poisson)
+
+    dur = args.trace_duration
+    rate = args.requests / dur
+    if args.trace == "poisson":
+        a_int = poisson(rate, dur, seed=0)
+    elif args.trace == "bursty":
+        a_int = onoff(2.0 * rate, dur, on_s=dur / 6, off_s=dur / 6, seed=0)
+    elif args.trace == "diurnal":
+        from repro.traffic import diurnal
+        a_int = diurnal(2.0 * rate, dur, period_s=dur / 2, seed=0)
+    else:
+        a_int = load_schedule(args.trace)   # recorded schedule replay
+    a_batch = poisson(max(rate / 2, 0.5), dur, seed=1)
+
+    classes = [
+        SLOClass("interactive", deadline_ms=base_ms * 8, priority=2),
+        SLOClass("batch", deadline_ms=base_ms * 30, priority=0,
+                 drop_policy=DEGRADE),
+    ]
+    batch_server = build_server(arch, cfg)
+    servers = {"interactive": server, "batch": batch_server}
+    arbiter = ResourceArbiter(interval_s=0.05)
+    for c in classes:
+        # two modelled 1-chip slices: the measured LUT profiles chips=1,
+        # so a 2-chip pool lets both tenants hold a slice at once
+        arbiter.register(c.name, lut, target_latency_ms=c.service_target_ms,
+                         priority=c.priority, server=servers[c.name])
+    report = drive_live(
+        classes, servers, arbiter,
+        {"interactive": a_int, "batch": a_batch},
+        lambda name: x[0],
+        g_fn=lambda: GlobalConstraints(total_chips=2))
+    print(f"\ntrace mode [{args.trace}] {len(a_int)} interactive + "
+          f"{len(a_batch)} batch arrivals over {dur:.1f}s")
+    for name, cs in report.classes.items():
+        print(f"  {name:12s} {cs.summary()}")
+    print(f"  arbiter      {report.arbiter}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="dynamic-ofa-supernet")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--trace-steps", type=int, default=200)
+    ap.add_argument("--trace", default=None,
+                    help="SLO traffic mode: poisson | bursty | diurnal | "
+                         "path to a recorded schedule JSON")
+    ap.add_argument("--trace-duration", type=float, default=5.0,
+                    help="seconds of arrival schedule in --trace mode")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch)
@@ -70,6 +126,9 @@ def main(argv=None):
     full = SubnetSpec()
     base_ms = np.median([p.latency_ms for p in lut.points
                          if p.subnet == full])
+    if args.trace:
+        run_trace_mode(args, arch, cfg, server, lut, x, base_ms)
+        return
     governors = {
         "joint (paper)": JointGovernor(lut),
         "performance": PerformanceGovernor(lut, full),

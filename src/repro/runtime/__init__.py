@@ -8,11 +8,13 @@ engine   — dynamic serving engine with a sub-network executable cache
 arbiter  — multi-workload water-filling arbiter over shared chips/power
 """
 from repro.runtime.hwmodel import HwState, RooflineTerms, roofline, FREQ_LADDER
-from repro.runtime.lut import LUT, model_lut, measured_lut, accuracy_surrogate
+from repro.runtime.lut import (LUT, model_lut, measured_lut,
+                               accuracy_surrogate, default_hw_states)
 from repro.runtime.governor import (Constraints, JointGovernor,
                                     PerformanceGovernor, SchedutilGovernor,
                                     StaticPrunedGovernor)
-from repro.runtime.monitor import Monitor, paper_trace, run_governor
+from repro.runtime.monitor import Monitor, paper_trace, run_governor, quantile
 from repro.runtime.engine import DynamicServer
-from repro.runtime.arbiter import (Allocation, GlobalConstraints,
-                                   ResourceArbiter, Workload)
+from repro.runtime.arbiter import (AdmissionError, Allocation,
+                                   GlobalConstraints, ResourceArbiter,
+                                   Workload)

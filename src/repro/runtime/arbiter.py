@@ -21,6 +21,19 @@ gap (the multi-DNN arbitration problem of Xun et al., arXiv:2105.03608):
 Degradation is by priority: when the budget shrinks below the sum of
 minimal shares, the lowest-priority workloads lose their targets first and
 fall back to the fastest point that fits the leftovers.
+
+The traffic layer (``repro.traffic``) adds two ROADMAP items on top:
+
+* **admission control** — :meth:`ResourceArbiter.admission_check` asks
+  whether a prospective class's minimal feasible share can EVER fit next
+  to the minimal shares of its equal-or-higher-priority tenants;
+  ``register(..., admission_under=g)`` raises :class:`AdmissionError`
+  when it cannot (lower-priority tenants don't block admission — they
+  are preemptable);
+* **priority preemption** — :meth:`ResourceArbiter.preempt` re-arbitrates
+  mid-cycle on behalf of a high-priority arrival, evicting lower-priority
+  slices immediately instead of waiting for the next constraint clock
+  tick.  Idle workloads release their slice via :meth:`set_active`.
 """
 from __future__ import annotations
 
@@ -37,6 +50,15 @@ from repro.runtime.governor import Constraints, JointGovernor
 from repro.runtime.lut import LUT
 
 _MAX_FILL_PASSES = 8
+
+
+class AdmissionError(RuntimeError):
+    """A registration whose minimal feasible share can never fit."""
+
+
+def _fresh_stats() -> Dict[str, float]:
+    return {"cycles": 0, "met": 0, "energy_mj": 0.0, "share_sum": 0.0,
+            "preemptions": 0}
 
 
 @dataclasses.dataclass
@@ -57,6 +79,7 @@ class Workload:
     min_accuracy: Optional[float] = None
     governor: Optional[JointGovernor] = None
     server: Optional[DynamicServer] = None
+    active: bool = True   # idle tenants release their slice (set_active)
 
     def __post_init__(self):
         if self.governor is None:
@@ -95,10 +118,19 @@ class ResourceArbiter:
     def register(self, name: str, lut: LUT, target_latency_ms: float, *,
                  priority: int = 0, min_accuracy: Optional[float] = None,
                  governor: Optional[JointGovernor] = None,
-                 server: Optional[DynamicServer] = None) -> Workload:
+                 server: Optional[DynamicServer] = None,
+                 admission_under: Optional[GlobalConstraints] = None
+                 ) -> Workload:
         with self._lock:
             if name in self._workloads:
                 raise ValueError(f"workload {name!r} already registered")
+            if admission_under is not None and self.admission_check(
+                    lut, target_latency_ms, admission_under,
+                    priority=priority, min_accuracy=min_accuracy) is None:
+                raise AdmissionError(
+                    f"workload {name!r}: no feasible point under "
+                    f"{target_latency_ms}ms fits {admission_under.total_chips}"
+                    f" chips after equal-or-higher-priority minimal shares")
             w = Workload(name=name, lut=lut,
                          target_latency_ms=target_latency_ms,
                          priority=priority, min_accuracy=min_accuracy,
@@ -117,9 +149,47 @@ class ResourceArbiter:
             if w is not None and w.server is not None:
                 w.server.stop()   # the clock drove it; don't leak the worker
 
+    def set_active(self, name: str, active: bool = True):
+        """Idle workloads release their slice (an empty request queue needs
+        no chips); the traffic driver toggles this as queues fill/drain."""
+        with self._lock:
+            self._workloads[name].active = active
+
     def _priority_order(self) -> List[Workload]:
         # stable sort: ties broken by registration order
         return sorted(self._workloads.values(), key=lambda w: -w.priority)
+
+    # --- admission control --------------------------------------------------
+
+    def admission_check(self, lut: LUT, target_latency_ms: float,
+                        g: GlobalConstraints, *, priority: int = 0,
+                        min_accuracy: Optional[float] = None
+                        ) -> Optional[OpPoint]:
+        """Can a prospective class ever get its minimal feasible share?
+
+        Reserves the minimal feasible share of every equal-or-higher-
+        priority tenant (lower-priority tenants are preemptable, so they
+        don't block admission) and looks for a feasible point in the
+        remainder.  Returns that point, or None — reject the registration
+        (ROADMAP admission-control item).
+        """
+        with self._lock:
+            chips_left = g.total_chips
+            power_left = (g.power_budget_w if g.power_budget_w is not None
+                          else math.inf)
+            for w in self._priority_order():
+                if w.priority < priority:
+                    continue
+                p = self._min_share_point(w, chips_left, power_left,
+                                          g.temperature_throttle)
+                if p is not None:
+                    chips_left -= p.hw_state.chips
+                    power_left -= hm.slice_power_w(p.hw_state)
+            probe = Workload(name="__probe__", lut=lut,
+                             target_latency_ms=target_latency_ms,
+                             priority=priority, min_accuracy=min_accuracy)
+            return self._min_share_point(probe, chips_left, power_left,
+                                         g.temperature_throttle)
 
     # --- water-filling ------------------------------------------------------
 
@@ -159,7 +229,7 @@ class ResourceArbiter:
     def arbitrate(self, g: GlobalConstraints) -> Dict[str, Allocation]:
         """Divide (chips, power) among all registered workloads."""
         with self._lock:
-            order = self._priority_order()
+            order = [w for w in self._priority_order() if w.active]
             chips_left = g.total_chips
             power_left = (g.power_budget_w if g.power_budget_w is not None
                           else math.inf)
@@ -216,6 +286,12 @@ class ResourceArbiter:
                 if not changed:
                     break
 
+            # inactive tenants hold nothing this cycle (slice released)
+            for w in self._workloads.values():
+                if w.name not in allocs:
+                    allocs[w.name] = Allocation(workload=w.name, point=None,
+                                                chips=0, power_w=0.0,
+                                                feasible=False)
             for a in allocs.values():
                 a.share = a.chips / g.total_chips if g.total_chips else 0.0
             self.last_alloc = allocs
@@ -235,37 +311,60 @@ class ResourceArbiter:
             priority=w.priority,
             share=alloc.share)
 
+    def _drive_servers(self, allocs: Dict[str, Allocation],
+                       g: GlobalConstraints):
+        for w in self._workloads.values():
+            alloc = allocs[w.name]
+            if alloc.point is None:
+                # starved or idle: its slice went to other tenants — park
+                # the server so it doesn't compute on chips it lost
+                if w.server is not None:
+                    w.server.pause()
+                continue
+            c = self.constraints_for(w, alloc, g)
+            point = w.governor.select(c)
+            if w.server is not None:
+                if point.subnet != w.server.active_spec:
+                    w.server.switch(point.subnet, point)
+                else:
+                    w.server.active_point = point
+                w.server.resume()
+
     def tick(self, g: GlobalConstraints) -> Dict[str, Allocation]:
         """One arbitration cycle: allocate, govern, switch/pause servers."""
         with self._lock:
             allocs = self.arbitrate(g)
-            for w in self._workloads.values():
-                alloc = allocs[w.name]
-                if alloc.point is None:
-                    # starved: its slice went to other tenants — park the
-                    # server so it doesn't keep computing on chips it lost
-                    if w.server is not None:
-                        w.server.pause()
-                    continue
-                c = self.constraints_for(w, alloc, g)
-                point = w.governor.select(c)
-                if w.server is not None:
-                    if point.subnet != w.server.active_spec:
-                        w.server.switch(point.subnet, point)
-                    else:
-                        w.server.active_point = point
-                    w.server.resume()
+            self._drive_servers(allocs, g)
             self.alloc_log.append(allocs)
             for name, a in allocs.items():
-                s = self._stats.setdefault(
-                    name, {"cycles": 0, "met": 0, "energy_mj": 0.0,
-                           "share_sum": 0.0})
+                if not self._workloads[name].active:
+                    continue   # idle: no demand, don't dilute meet_rate
+                s = self._stats.setdefault(name, _fresh_stats())
                 s["cycles"] += 1
                 s["met"] += a.feasible
                 s["share_sum"] += a.share
                 if a.point is not None:
                     s["energy_mj"] += a.point.energy_mj
             return allocs
+
+    def preempt(self, name: str, g: GlobalConstraints) -> Allocation:
+        """Mid-cycle priority preemption (ROADMAP item).
+
+        A high-priority arrival must not wait out the constraint clock:
+        re-arbitrate NOW on behalf of ``name``.  Water-filling in priority
+        order means any chips/power the arrival needs are reclaimed from
+        strictly lower-priority tenants, whose servers are parked or
+        downgraded in the same call — the eviction lands mid-cycle, not at
+        the next tick.
+        """
+        with self._lock:
+            w = self._workloads[name]   # KeyError: unknown workload
+            w.active = True
+            allocs = self.arbitrate(g)
+            self._drive_servers(allocs, g)
+            s = self._stats.setdefault(name, _fresh_stats())
+            s["preemptions"] += 1
+            return allocs[name]
 
     # --- shared constraint clock --------------------------------------------
 
@@ -299,16 +398,29 @@ class ResourceArbiter:
 
     def summary(self) -> dict:
         """Meet-rate and energy per workload over ALL cycles (running
-        accumulators — alloc_log only keeps the recent window)."""
+        accumulators — alloc_log only keeps the recent window).
+
+        ``energy_mj`` is modelled (LUT points held per cycle);
+        ``measured_energy_mj`` integrates the server's real batch
+        wall-clock against the active slice's power model — the ROADMAP's
+        measured per-tenant energy accounting (minimal version).
+        """
         out = {}
-        for name in self._workloads:
+        for name, w in self._workloads.items():
             s = self._stats.get(name)
             if not s or not s["cycles"]:
-                out[name] = {"cycles": 0}
-                continue
-            n = s["cycles"]
-            out[name] = {"cycles": n,
-                         "meet_rate": round(s["met"] / n, 4),
-                         "energy_mj": round(s["energy_mj"], 2),
-                         "mean_share": round(s["share_sum"] / n, 4)}
+                row = {"cycles": 0}
+            else:
+                n = s["cycles"]
+                row = {"cycles": n,
+                       "meet_rate": round(s["met"] / n, 4),
+                       "energy_mj": round(s["energy_mj"], 2),
+                       "mean_share": round(s["share_sum"] / n, 4)}
+            if s:
+                row["preemptions"] = int(s.get("preemptions", 0))
+            if w.server is not None:
+                row["measured_energy_mj"] = round(
+                    w.server.measured_energy_mj, 2)
+                row["busy_s"] = round(w.server.busy_s, 4)
+            out[name] = row
         return out

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.elastic import spec_to_static
 from repro.core.types import SubnetSpec
+from repro.runtime import hwmodel as hm
 
 
 @dataclasses.dataclass
@@ -60,6 +61,12 @@ class DynamicServer:
         self.active_point = None
         self.switch_log: List[dict] = []
         self.served = 0
+        self.cancelled = 0
+        # measured accounting: wall-clock busy time integrated against the
+        # active hw slice's modelled power — the arbiter's per-tenant
+        # MEASURED energy (vs the LUT's modelled energy_mj)
+        self.busy_s = 0.0
+        self.measured_energy_mj = 0.0
         for spec in warm_specs or []:
             self.executable(spec)
 
@@ -104,10 +111,34 @@ class DynamicServer:
 
     # --- batched serving loop -------------------------------------------------
 
+    def _cancel(self, r: Request, reason: str):
+        r.future.put({"y": None, "cancelled": True, "error": reason,
+                      "latency_ms": (time.perf_counter() - r.t_submit) * 1e3,
+                      "subnet": None})
+        self.cancelled += 1
+
     def submit(self, x) -> "queue.Queue":
         fut: "queue.Queue" = queue.Queue(maxsize=1)
-        self._queue.put(Request(x=x, t_submit=time.perf_counter(), future=fut))
+        r = Request(x=x, t_submit=time.perf_counter(), future=fut)
+        if self._stop.is_set():
+            # stopped server: resolve immediately instead of queueing a
+            # request no worker will ever pick up
+            self._cancel(r, "server stopped")
+            return fut
+        self._queue.put(r)
+        if self._stop.is_set() and not self.is_running:
+            # stop() raced the put above and its drain may have missed us;
+            # drain again (queue.get is atomic, each request resolves once)
+            self._drain_queue()
         return fut
+
+    def _drain_queue(self):
+        while True:
+            try:
+                r = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            self._cancel(r, "server stopped")
 
     def _collect_batch(self) -> List[Request]:
         reqs: List[Request] = []
@@ -154,7 +185,13 @@ class DynamicServer:
             pad = self.max_batch - len(reqs)
             if pad:
                 xs = np.concatenate([xs, np.zeros_like(xs[:1]).repeat(pad, 0)])
+            t_batch = time.perf_counter()
             out = np.asarray(self.infer(xs))
+            dt = time.perf_counter() - t_batch
+            self.busy_s += dt
+            hw = getattr(self.active_point, "hw_state", None) \
+                or hm.HwState(chips=1, freq=1.0)
+            self.measured_energy_mj += hm.slice_power_w(hw) * dt * 1e3
             for i, r in enumerate(reqs):
                 r.future.put({"y": out[i],
                               "latency_ms": (time.perf_counter() - r.t_submit)
@@ -179,3 +216,9 @@ class DynamicServer:
         self._stop.set()
         if self._worker:
             self._worker.join(timeout=5)
+            self._worker = None
+        # drain abandoned requests: their futures must resolve or callers
+        # blocked on fut.get() hang forever (paused/never-started servers
+        # accumulate queued work; the worker is joined, and a submit()
+        # racing this drain re-drains after its own put)
+        self._drain_queue()

@@ -60,6 +60,27 @@ def subnet_flops_ratio(spec: SubnetSpec) -> float:
     return r
 
 
+# Chip-tier divisors of full_chips: a ~1.33x-spaced ladder down to 1/16.
+# Water-filling packs concurrent tenants poorly with only {1, 1/2, 1/4}
+# tiers — a tenant that needs "a bit more than 1/4" is forced to claim
+# half the machine (ROADMAP: finer chip-granularity hw_states).
+_CHIP_DIVISORS: Tuple[float, ...] = (1, 4 / 3, 2, 8 / 3, 4, 16 / 3, 8, 16)
+
+
+def default_hw_states(full_chips: int, *,
+                      freqs: Sequence[float] = hm.FREQ_LADDER
+                      ) -> List[hm.HwState]:
+    """Default (chips x freq) grid for LUT builders.
+
+    Eight chip tiers from full_chips down to full_chips/16 (deduped,
+    floored at 1 chip) crossed with the DVFS ladder — fine enough slice
+    quanta that the arbiter can hand small shares to small tenants.
+    """
+    chips = sorted({max(1, int(full_chips / d)) for d in _CHIP_DIVISORS},
+                   reverse=True)
+    return [hm.HwState(chips=c, freq=f) for c in chips for f in freqs]
+
+
 @dataclasses.dataclass
 class LUT:
     points: List[OpPoint]
@@ -116,10 +137,8 @@ def model_lut(specs: Sequence[SubnetSpec], *, full_terms: hm.RooflineTerms,
     activations).  Chip count scales all terms inversely (weak scaling),
     frequency scales compute only.
     """
-    hw_states = list(hw_states or
-                     [hm.HwState(chips=c, freq=f)
-                      for c in (full_chips, full_chips // 2, full_chips // 4)
-                      if c >= 1 for f in hm.FREQ_LADDER])
+    hw_states = list(hw_states) if hw_states is not None \
+        else default_hw_states(full_chips)
     points = []
     for spec in specs:
         r = flops_ratio_fn(spec)

@@ -10,9 +10,24 @@ stealing compute.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional
+import math
+from typing import Iterator, List, Optional, Sequence
 
 from repro.runtime.governor import Constraints
+
+
+def quantile(values: Sequence[float], q: float) -> float:
+    """Nearest-rank quantile (q in [0, 100]) on a finite sample.
+
+    No interpolation: the answer is always an observed value, so
+    hand-built traces in tests have exact expected percentiles.  The
+    traffic layer's p50/p95/p99 reporting goes through here.
+    """
+    if not values:
+        return float("nan")
+    xs = sorted(values)
+    k = max(1, math.ceil(q / 100.0 * len(xs)))
+    return float(xs[min(k, len(xs)) - 1])
 
 
 @dataclasses.dataclass
@@ -58,6 +73,10 @@ class Monitor:
     def mean_accuracy(self) -> float:
         return (sum(l.accuracy for l in self.logs) / len(self.logs)
                 if self.logs else 0.0)
+
+    def latency_percentiles(self, qs: Sequence[float] = (50, 95, 99)) -> dict:
+        lats = [l.latency_ms for l in self.logs]
+        return {f"p{q:g}_ms": round(quantile(lats, q), 3) for q in qs}
 
     def summary(self) -> dict:
         return {"steps": len(self.logs),

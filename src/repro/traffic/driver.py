@@ -1,0 +1,291 @@
+"""Open-loop SLO-classed load drivers over the resource arbiter.
+
+Two drivers share the same classes/arrivals/report types:
+
+* :func:`simulate` — a deterministic discrete-event driver in virtual
+  time.  Service times come from each workload's arbitrated
+  :class:`OpPoint` latency, so the run exercises the REAL arbiter code
+  (admission_check, water-filling, preempt, set_active) without touching
+  a clock or a jit cache — policy comparisons are exactly reproducible
+  from the arrival seeds.
+* :func:`drive_live` — wall-clock submission of real requests to
+  :class:`DynamicServer` instances behind a started arbiter
+  (``launch/serve.py --trace``).
+
+Policies:
+
+* ``"slo"``  — admission control at registration, per-request shedding
+  for SHED classes, and mid-cycle :meth:`ResourceArbiter.preempt` when a
+  request arrives for a class holding no slice;
+* ``"fifo"`` — the no-admission baseline: every class admitted at equal
+  priority (arbitration ties break by registration = arrival order), no
+  shedding, and arrivals wait for the next constraint-clock tick.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.runtime.arbiter import (AdmissionError, GlobalConstraints,
+                                   ResourceArbiter)
+from repro.runtime.engine import DynamicServer
+from repro.runtime.lut import LUT
+from repro.runtime.monitor import quantile
+from repro.traffic import arrivals as arr
+from repro.traffic.slo import DEGRADE, SHED, SLOClass
+
+SLO_POLICY = "slo"
+FIFO_POLICY = "fifo"
+POLICIES = (SLO_POLICY, FIFO_POLICY)
+
+
+@dataclasses.dataclass
+class ClassStats:
+    """Per-class accounting: every submitted request ends in exactly one
+    of rejected / dropped / completed (+ pending if the sim is cut off)."""
+    submitted: int = 0
+    rejected: int = 0      # admission-rejected class
+    dropped: int = 0       # shed on arrival (or unserved at horizon)
+    completed: int = 0
+    good: int = 0          # completed within the deadline
+    latencies_ms: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def goodput(self) -> int:
+        return self.good
+
+    def p(self, q: float) -> float:
+        return quantile(self.latencies_ms, q)
+
+    def summary(self) -> dict:
+        out = {"submitted": self.submitted, "rejected": self.rejected,
+               "dropped": self.dropped, "completed": self.completed,
+               "goodput": self.good,
+               "goodput_rate": round(self.good / self.submitted, 4)
+               if self.submitted else 0.0}
+        for q in (50, 95, 99):
+            # None (not NaN) when nothing completed: NaN != NaN breaks
+            # report equality for deterministic-replay checks
+            out[f"p{q}_ms"] = (round(self.p(q), 3)
+                               if self.latencies_ms else None)
+        return out
+
+
+@dataclasses.dataclass
+class TrafficReport:
+    """What one driver run measured, per class + the arbiter's view."""
+    policy: str
+    classes: Dict[str, ClassStats]
+    arbiter: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_goodput(self) -> int:
+        return sum(s.good for s in self.classes.values())
+
+    @property
+    def total_dropped(self) -> int:
+        return sum(s.dropped for s in self.classes.values())
+
+    def summary(self) -> dict:
+        return {"policy": self.policy,
+                "total_goodput": self.total_goodput,
+                "total_dropped": self.total_dropped,
+                "classes": {n: s.summary()
+                            for n, s in self.classes.items()},
+                "arbiter": self.arbiter}
+
+
+def _register_classes(arbiter: ResourceArbiter, classes: Sequence[SLOClass],
+                      luts: Dict[str, LUT], policy: str,
+                      g0: GlobalConstraints,
+                      servers: Optional[Dict[str, DynamicServer]] = None
+                      ) -> Dict[str, bool]:
+    """Admission phase.  Returns admitted[name]; under "slo", a class whose
+    minimal share can never fit is rejected (REJECT/SHED) or re-admitted
+    with its relaxed DEGRADE target; "fifo" admits everything at equal
+    priority, in arrival order."""
+    admitted: Dict[str, bool] = {}
+    for c in classes:
+        server = (servers or {}).get(c.name)
+        if policy == FIFO_POLICY:
+            arbiter.register(c.name, luts[c.name],
+                             target_latency_ms=c.service_target_ms,
+                             priority=0, server=server)
+            admitted[c.name] = True
+            continue
+        try:
+            arbiter.register(c.name, luts[c.name],
+                             target_latency_ms=c.service_target_ms,
+                             priority=c.priority,
+                             min_accuracy=c.min_accuracy,
+                             server=server, admission_under=g0)
+            admitted[c.name] = True
+        except AdmissionError:
+            if c.drop_policy == DEGRADE:
+                # never drop: serve best-effort against the relaxed target
+                arbiter.register(c.name, luts[c.name],
+                                 target_latency_ms=c.degraded_target_ms,
+                                 priority=c.priority, server=server)
+                admitted[c.name] = True
+            else:
+                admitted[c.name] = False
+    return admitted
+
+
+def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
+             streams: Dict[str, Sequence[float]],
+             g_fn: Callable[[float], GlobalConstraints], *,
+             interval_s: float = 0.1, policy: str = SLO_POLICY,
+             max_drain_s: float = 120.0) -> TrafficReport:
+    """Deterministic discrete-event run of a traffic trace.
+
+    Virtual time advances in constraint-clock epochs of ``interval_s``.
+    Each epoch: (1) idle classes release their slice and the arbiter
+    re-water-fills; (2) the epoch's arrivals are admitted / shed /
+    preempt-served in timestamp order; (3) each workload serves its queue
+    sequentially at its current point's latency.  A request locks in the
+    service time current when it starts.
+    """
+    assert policy in POLICIES, policy
+    by_class = {c.name: c for c in classes}
+    stats = {c.name: ClassStats() for c in classes}
+    arbiter = ResourceArbiter(interval_s=interval_s)
+    admitted = _register_classes(arbiter, classes, luts, policy, g_fn(0.0))
+
+    events = arr.merge({n: ts for n, ts in streams.items()})
+    queues = {c.name: collections.deque() for c in classes}
+    busy_until = {c.name: 0.0 for c in classes}
+    last_arrival = events[-1][0] if events else 0.0
+
+    def svc_of(allocs):
+        return {n: (a.point.latency_ms if a.point is not None else None)
+                for n, a in allocs.items()}
+
+    ei = 0
+    t = 0.0
+    while True:
+        backlog = any(queues.values()) or ei < len(events)
+        in_flight = any(b > t for b in busy_until.values())
+        if not backlog and not in_flight:
+            break
+        if t > last_arrival + max_drain_s:
+            break   # safety: leftover queue flushed as dropped below
+        g = g_fn(t)
+        for name in queues:
+            if admitted[name]:
+                arbiter.set_active(name, bool(queues[name])
+                                   or busy_until[name] > t)
+        allocs = arbiter.tick(g)
+        svc = svc_of(allocs)
+        t_next = t + interval_s
+
+        while ei < len(events) and events[ei][0] < t_next:
+            ta, name = events[ei]
+            ei += 1
+            c = by_class[name]
+            st = stats[name]
+            st.submitted += 1
+            if not admitted[name]:
+                st.rejected += 1
+                continue
+            if policy == SLO_POLICY and svc.get(name) is None:
+                # arrival for a class holding no slice: preempt NOW — the
+                # eviction of lower-priority tenants must not wait for the
+                # next constraint clock tick
+                arbiter.preempt(name, g_fn(ta))
+                allocs = arbiter.last_alloc
+                svc = svc_of(allocs)
+            if (policy == SLO_POLICY and c.drop_policy == SHED
+                    and svc.get(name) is not None):
+                # predicted wait = in-flight remainder + queue ahead of us
+                wait_ms = (max(0.0, busy_until[name] - ta) * 1e3
+                           + len(queues[name]) * svc[name])
+                if wait_ms + svc[name] > c.deadline_ms:
+                    st.dropped += 1   # predicted miss: shed on arrival
+                    continue
+            queues[name].append(ta)
+
+        for name, q in queues.items():
+            s_ms = svc.get(name)
+            if s_ms is None:
+                continue   # starved this epoch; queue waits
+            while q:
+                # clamp to t: a leftover request from a starved epoch can
+                # start no earlier than the tick that granted the slice
+                start = max(q[0], busy_until[name], t)
+                if start >= t_next:
+                    break
+                ta = q.popleft()
+                done = start + s_ms / 1e3
+                busy_until[name] = done
+                lat_ms = (done - ta) * 1e3
+                st = stats[name]
+                st.completed += 1
+                st.latencies_ms.append(lat_ms)
+                if lat_ms <= by_class[name].deadline_ms:
+                    st.good += 1
+        t = t_next
+
+    for name, q in queues.items():
+        stats[name].dropped += len(q)   # never served within the horizon
+        q.clear()
+    return TrafficReport(policy=policy, classes=stats,
+                         arbiter=arbiter.summary())
+
+
+def drive_live(classes: Sequence[SLOClass],
+               servers: Dict[str, DynamicServer],
+               arbiter: ResourceArbiter,
+               streams: Dict[str, Sequence[float]],
+               make_input: Callable[[str], object], *,
+               g_fn: Callable[[], GlobalConstraints],
+               speed: float = 1.0, timeout_s: float = 120.0
+               ) -> TrafficReport:
+    """Wall-clock open-loop driver: real requests to real servers.
+
+    Classes must already be registered on ``arbiter`` with their servers
+    (see ``_register_classes`` / ``launch.serve --trace``).  ``speed`` > 1
+    compresses the arrival schedule; deadlines stay in real ms.  The
+    arbiter clock runs for the duration and is stopped (draining the
+    servers) before the report is built, so every future resolves.
+    """
+    by_class = {c.name: c for c in classes}
+    stats = {c.name: ClassStats() for c in classes}
+    events = arr.merge({n: ts for n, ts in streams.items()})
+    pending: List = []
+    arbiter.start(g_fn)
+    try:
+        t0 = time.perf_counter()
+        for ta, name in events:
+            wait = ta / speed - (time.perf_counter() - t0)
+            if wait > 0:
+                time.sleep(wait)
+            pending.append((name, servers[name].submit(make_input(name))))
+        # wait for the fleet to drain; a starved server's requests may
+        # never run — arbiter.stop() below cancels them so no get() hangs
+        deadline = time.perf_counter() + timeout_s
+        while (time.perf_counter() < deadline
+               and any(fut.empty() for _, fut in pending)):
+            time.sleep(0.02)
+    finally:
+        arbiter.stop()
+    for name, fut in pending:
+        st = stats[name]
+        st.submitted += 1
+        try:
+            out = fut.get(timeout=5.0)
+        except Exception:   # still in flight past the drain: count it lost
+            st.dropped += 1
+            continue
+        if out.get("cancelled"):
+            st.dropped += 1
+            continue
+        lat = out["latency_ms"]
+        st.completed += 1
+        st.latencies_ms.append(lat)
+        if lat <= by_class[name].deadline_ms:
+            st.good += 1
+    return TrafficReport(policy="live", classes=stats,
+                         arbiter=arbiter.summary())

@@ -22,6 +22,25 @@ import _hypothesis_compat  # noqa: E402
 _hypothesis_compat.install()
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: soak tests (traffic etc.) — opt-in via --runslow")
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="run tests marked slow (traffic soak tests)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow soak test: needs --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
+
+
 def run_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
     """Run python code in a fresh process with N fake CPU devices.
 

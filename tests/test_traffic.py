@@ -1,0 +1,385 @@
+"""Traffic layer: seeded arrivals, SLO percentile/goodput math, admission
+control, mid-cycle preemption, and the engine drain-on-stop bugfix."""
+import queue
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.types import ElasticSpace, SubnetSpec
+from repro.runtime import (AdmissionError, GlobalConstraints, ResourceArbiter,
+                           default_hw_states, model_lut, quantile)
+from repro.runtime import hwmodel as hm
+from repro.traffic import (DEGRADE, FIFO_POLICY, REJECT, SHED, SLO_POLICY,
+                           ClassStats, SLOClass, diurnal, merge, onoff,
+                           poisson, replay, save_schedule, simulate)
+
+TERMS = hm.RooflineTerms(t_compute=0.02, t_memory=0.008, t_collective=0.004)
+SPACE = ElasticSpace(width_mults=(0.5, 0.75, 1.0), ffn_mults=(0.5, 1.0),
+                     depth_mults=(0.5, 1.0))
+
+
+def make_lut(scale=1.0, full_chips=256):
+    terms = hm.RooflineTerms(TERMS.t_compute * scale, TERMS.t_memory * scale,
+                             TERMS.t_collective * scale)
+    return model_lut(SPACE.enumerate(), full_terms=terms,
+                     full_chips=full_chips)
+
+
+# --- arrival generators -------------------------------------------------------
+
+@pytest.mark.parametrize("gen,kwargs", [
+    (poisson, dict(rate_rps=50.0, horizon_s=5.0)),
+    (onoff, dict(rate_rps=80.0, horizon_s=5.0, on_s=0.5, off_s=0.5)),
+    (diurnal, dict(peak_rps=60.0, horizon_s=5.0, period_s=2.0)),
+])
+def test_arrivals_seed_deterministic(gen, kwargs):
+    """Same seed => identical inter-arrival sequence (acceptance item)."""
+    a = gen(seed=7, **kwargs)
+    b = gen(seed=7, **kwargs)
+    c = gen(seed=8, **kwargs)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert np.all(np.diff(a) >= 0)          # sorted
+    assert len(a) and a[0] >= 0 and a[-1] < kwargs["horizon_s"]
+
+
+def test_poisson_hits_target_mean_rate():
+    rate, horizon = 200.0, 50.0
+    ts = poisson(rate, horizon, seed=3)
+    measured = len(ts) / horizon
+    assert abs(measured - rate) / rate < 0.05
+    # inter-arrival mean ~ 1/rate
+    gaps = np.diff(ts)
+    assert abs(gaps.mean() - 1.0 / rate) / (1.0 / rate) < 0.05
+
+
+def test_onoff_is_bursty():
+    """ON windows carry the load; OFF windows are silent."""
+    ts = onoff(100.0, 10.0, on_s=1.0, off_s=1.0, seed=0)
+    phase = np.floor(ts) % 2.0
+    assert np.all(phase == 0.0)             # every arrival in an ON second
+    assert len(ts) > 300                    # ~100 rps over 5 ON seconds
+
+
+def test_diurnal_ramps():
+    """The thinned stream is denser at mid-period than at the floor."""
+    ts = diurnal(200.0, 40.0, period_s=40.0, floor=0.05, seed=1)
+    early = np.sum(ts < 5.0)                # near the floor
+    mid = np.sum((ts >= 17.5) & (ts < 22.5))  # near the peak
+    assert mid > 3 * early
+
+
+def test_replay_roundtrip(tmp_path):
+    ts = poisson(30.0, 3.0, seed=5)
+    path = str(tmp_path / "sched.json")
+    save_schedule(path, ts, meta={"rate": 30.0})
+    back = replay(path)
+    assert np.allclose(back, ts)
+    assert np.allclose(replay(list(ts)), ts)
+
+
+def test_merge_orders_events():
+    ev = merge({"a": [0.3, 0.1], "b": [0.2]})
+    assert ev == [(0.1, "a"), (0.2, "b"), (0.3, "a")]
+
+
+# --- percentile / goodput math ------------------------------------------------
+
+def test_quantile_nearest_rank_hand_values():
+    xs = list(range(1, 101))               # 1..100
+    assert quantile(xs, 50) == 50
+    assert quantile(xs, 95) == 95
+    assert quantile(xs, 99) == 99
+    assert quantile(xs, 100) == 100
+    assert quantile([7.0], 95) == 7.0
+    assert np.isnan(quantile([], 50))
+
+
+def test_class_stats_summary_hand_built():
+    st = ClassStats()
+    deadline = 50.0
+    for lat in (10.0, 20.0, 30.0, 40.0, 60.0):   # one miss
+        st.submitted += 1
+        st.completed += 1
+        st.latencies_ms.append(lat)
+        if lat <= deadline:
+            st.good += 1
+    st.submitted += 2
+    st.dropped += 1
+    st.rejected += 1
+    s = st.summary()
+    assert s["goodput"] == 4
+    assert s["submitted"] == 7
+    assert s["p50_ms"] == 30.0
+    assert s["p95_ms"] == 60.0
+    assert s["goodput_rate"] == pytest.approx(4 / 7, abs=1e-4)
+
+
+# --- SLO classes --------------------------------------------------------------
+
+def test_slo_class_validation_and_mapping():
+    c = SLOClass("x", deadline_ms=80.0, priority=3, drop_policy=SHED,
+                 service_frac=0.5)
+    assert c.service_target_ms == 40.0
+    cons = c.constraints(chips_available=64, share=0.25)
+    assert cons.target_latency_ms == 40.0
+    assert cons.priority == 3 and cons.share == 0.25
+    with pytest.raises(ValueError):
+        SLOClass("bad", deadline_ms=-1.0)
+    with pytest.raises(ValueError):
+        SLOClass("bad", deadline_ms=10.0, drop_policy="nope")
+
+
+# --- admission control --------------------------------------------------------
+
+def test_admission_rejects_impossible_deadline():
+    """No operating point can ever meet the target => rejected."""
+    arb = ResourceArbiter()
+    g = GlobalConstraints(total_chips=256)
+    with pytest.raises(AdmissionError):
+        arb.register("rt", make_lut(), target_latency_ms=0.001,
+                     admission_under=g)
+    assert "rt" not in arb.last_alloc       # nothing was registered
+
+
+def test_admission_rejects_when_pool_too_small():
+    """A feasible-in-principle class whose minimal share exceeds the
+    machine is rejected; the same class fits a bigger pool."""
+    arb = ResourceArbiter()
+    lut = make_lut()
+    with pytest.raises(AdmissionError):
+        arb.register("a", lut, target_latency_ms=40.0,
+                     admission_under=GlobalConstraints(total_chips=32))
+    arb.register("a", lut, target_latency_ms=40.0,
+                 admission_under=GlobalConstraints(total_chips=256))
+
+
+def test_admission_respects_higher_priority_reservations():
+    """Equal-or-higher-priority tenants reserve their minimal shares; a
+    newcomer that can't fit the remainder is rejected, while a HIGHER
+    priority newcomer may still preempt its way in."""
+    arb = ResourceArbiter()
+    g = GlobalConstraints(total_chips=64)
+    arb.register("incumbent", make_lut(), target_latency_ms=40.0,
+                 priority=2, admission_under=g)
+    # same priority: incumbent's 48-chip minimal share blocks it
+    with pytest.raises(AdmissionError):
+        arb.register("peer", make_lut(), target_latency_ms=40.0,
+                     priority=2, admission_under=g)
+    # higher priority: the incumbent is preemptable => admitted
+    arb.register("vip", make_lut(), target_latency_ms=40.0,
+                 priority=5, admission_under=g)
+
+
+# --- preemption ---------------------------------------------------------------
+
+def test_preempt_evicts_lower_priority_within_one_tick():
+    """A high-priority arrival gets its slice mid-cycle: the preempt call
+    itself returns a feasible allocation and the low-priority tenant is
+    demoted, without waiting for the next clock tick."""
+    arb = ResourceArbiter()
+    arb.register("lo", make_lut(), target_latency_ms=40.0, priority=0)
+    arb.register("hi", make_lut(), target_latency_ms=40.0, priority=2)
+    arb.set_active("hi", False)             # hi idle: releases its slice
+    g = GlobalConstraints(total_chips=64)   # pool fits only one tenant
+    allocs = arb.tick(g)
+    assert allocs["lo"].feasible            # lo holds the machine
+    assert allocs["hi"].chips == 0
+    alloc = arb.preempt("hi", g)            # the high-priority arrival
+    assert alloc.feasible
+    assert not arb.last_alloc["lo"].feasible    # evicted mid-cycle
+    assert arb.summary()["hi"]["preemptions"] == 1
+
+
+def test_set_active_releases_and_regains_slice():
+    arb = ResourceArbiter()
+    arb.register("a", make_lut(), target_latency_ms=40.0)
+    g = GlobalConstraints(total_chips=256)
+    assert arb.arbitrate(g)["a"].feasible
+    arb.set_active("a", False)
+    assert arb.arbitrate(g)["a"].chips == 0
+    arb.set_active("a", True)
+    assert arb.arbitrate(g)["a"].feasible
+
+
+# --- engine drain-on-stop bugfix ---------------------------------------------
+
+def tiny_server():
+    import jax
+    from repro.models.vit import ViTConfig, vit_apply, vit_init
+    from repro.runtime import DynamicServer
+    cfg = ViTConfig(name="t", img_res=16, patch=8, n_layers=2,
+                    d_model=32, n_heads=4, d_ff=64, n_classes=4,
+                    compute_dtype="float32")
+    params = vit_init(jax.random.PRNGKey(0), cfg)
+    dims = {"d_model": 32, "d_ff": 64, "n_heads": 4, "n_layers": 2}
+    return DynamicServer(lambda p, x, E: vit_apply(p, x, cfg, E=E)[0],
+                         params, dims)
+
+
+def test_stop_resolves_abandoned_futures():
+    """Queued requests on a paused/never-started server must not leave
+    callers blocked forever: stop() drains them with a cancelled payload."""
+    server = tiny_server()
+    x = np.zeros((16, 16, 3), "float32")
+    futs = [server.submit(x) for _ in range(3)]
+    server.stop()                           # never started
+    for f in futs:
+        out = f.get(timeout=5)
+        assert out["cancelled"] and out["y"] is None
+        assert out["error"] == "server stopped"
+    assert server.cancelled == 3
+    # submissions after stop resolve immediately instead of queueing
+    out = server.submit(x).get(timeout=5)
+    assert out["cancelled"]
+
+
+def test_stop_drains_paused_server():
+    server = tiny_server()
+    server.start()
+    server.pause()
+    x = np.zeros((16, 16, 3), "float32")
+    # the worker may sit one last _collect_batch window (50ms) before it
+    # sees the pause flag; wait it out so submissions can't be picked up
+    time.sleep(0.2)
+    futs = [server.submit(x) for _ in range(4)]
+    server.stop()
+    outs = [f.get(timeout=5) for f in futs]
+    assert all(o["cancelled"] for o in outs)
+
+
+def test_stop_unblocks_waiting_caller_thread():
+    """The original bug: a caller blocked on fut.get() hangs forever."""
+    server = tiny_server()
+    fut = server.submit(np.zeros((16, 16, 3), "float32"))
+    got = queue.Queue()
+    th = threading.Thread(target=lambda: got.put(fut.get(timeout=30)))
+    th.start()
+    server.stop()
+    th.join(timeout=10)
+    assert not th.is_alive()
+    assert got.get_nowait()["cancelled"]
+
+
+# --- measured energy accounting ----------------------------------------------
+
+def test_measured_energy_in_arbiter_summary():
+    arb = ResourceArbiter()
+    server = tiny_server()
+    arb.register("a", make_lut(), target_latency_ms=40.0, server=server)
+    arb.tick(GlobalConstraints(total_chips=256))
+    server.start()
+    try:
+        x = np.zeros((16, 16, 3), "float32")
+        futs = [server.submit(x) for _ in range(4)]
+        outs = [f.get(timeout=60) for f in futs]
+        assert all(not o.get("cancelled") for o in outs)
+    finally:
+        server.stop()
+    s = arb.summary()["a"]
+    assert s["measured_energy_mj"] > 0.0
+    assert s["busy_s"] > 0.0
+    # measured = busy wall-clock x the active slice's modelled power
+    hw = server.active_point.hw_state
+    assert s["measured_energy_mj"] == pytest.approx(
+        hm.slice_power_w(hw) * server.busy_s * 1e3, rel=0.01)
+
+
+# --- finer LUT granularity ----------------------------------------------------
+
+def test_default_hw_states_finer_than_legacy():
+    states = default_hw_states(256)
+    chips = sorted({s.chips for s in states}, reverse=True)
+    assert chips == [256, 192, 128, 96, 64, 48, 32, 16]
+    assert all(s.chips >= 1 for s in states)
+    assert default_hw_states(1)             # degenerate pool still works
+    # model_lut picks the ladder up by default
+    lut = make_lut()
+    assert sorted({p.hw_state.chips for p in lut.points},
+                  reverse=True) == chips
+
+
+# --- end-to-end simulated traffic --------------------------------------------
+
+def _sim_setup(horizon_s=6.0):
+    classes = [
+        SLOClass("interactive", deadline_ms=60.0, priority=2,
+                 drop_policy=SHED),
+        SLOClass("batch", deadline_ms=400.0, priority=0,
+                 drop_policy=DEGRADE),
+        SLOClass("impossible", deadline_ms=2.0, priority=1,
+                 drop_policy=REJECT),
+    ]
+    luts = {c.name: make_lut() for c in classes}
+    streams = {
+        "interactive": onoff(40.0, horizon_s, on_s=1.0, off_s=1.0, seed=1),
+        "batch": poisson(5.0, horizon_s, seed=2),
+        "impossible": poisson(8.0, horizon_s, seed=3),
+    }
+    g_fn = lambda t: GlobalConstraints(total_chips=256)
+    return classes, luts, streams, g_fn
+
+
+def test_simulate_slo_beats_fifo_on_same_trace():
+    classes, luts, streams, g_fn = _sim_setup()
+    slo = simulate(classes, luts, streams, g_fn, policy=SLO_POLICY)
+    fifo = simulate(classes, luts, streams, g_fn, policy=FIFO_POLICY)
+    assert slo.total_goodput > fifo.total_goodput
+    assert slo.classes["interactive"].p(95) <= fifo.classes["interactive"].p(95)
+    # admission fired: the impossible class is rejected under slo only
+    assert slo.classes["impossible"].rejected > 0
+    assert fifo.classes["impossible"].rejected == 0
+    # preemption fired for the bursty class
+    assert slo.arbiter["interactive"]["preemptions"] > 0
+    # accounting closes: every request ends in exactly one bucket
+    for rep in (slo, fifo):
+        for cs in rep.classes.values():
+            assert cs.submitted == cs.rejected + cs.dropped + cs.completed
+
+
+def test_simulate_is_deterministic():
+    classes, luts, streams, g_fn = _sim_setup(horizon_s=3.0)
+    a = simulate(classes, luts, streams, g_fn, policy=SLO_POLICY).summary()
+    b = simulate(classes, luts, streams, g_fn, policy=SLO_POLICY).summary()
+    assert a == b
+
+
+def test_simulate_shed_bounds_tail_latency():
+    """A SHED class's completed requests never report unbounded waits:
+    shedding keeps the served tail near the deadline."""
+    classes, luts, streams, g_fn = _sim_setup()
+    rep = simulate(classes, luts, streams, g_fn, policy=SLO_POLICY)
+    inter = rep.classes["interactive"]
+    assert inter.dropped > 0                       # overload really shed
+    assert inter.p(95) <= classes[0].deadline_ms * 1.5
+
+
+@pytest.mark.slow
+def test_live_driver_soak():
+    """Wall-clock soak: real requests through two DynamicServers behind
+    the arbiter (opt-in: pytest --runslow)."""
+    from repro.runtime import measured_lut
+    from repro.traffic import drive_live
+
+    s_int, s_bat = tiny_server(), tiny_server()
+    x = np.zeros((16, 16, 3), "float32")
+    lut = measured_lut([SubnetSpec(), SubnetSpec(width_mult=0.5)],
+                       lambda spec, hw: (s_int.measure(spec, x[None]), 1.0))
+    classes = [SLOClass("interactive", deadline_ms=500.0, priority=2),
+               SLOClass("batch", deadline_ms=2000.0, priority=0,
+                        drop_policy=DEGRADE)]
+    arb = ResourceArbiter(interval_s=0.05)
+    arb.register("interactive", lut, classes[0].service_target_ms,
+                 priority=2, server=s_int)
+    arb.register("batch", lut, classes[1].service_target_ms,
+                 priority=0, server=s_bat)
+    rep = drive_live(
+        classes, {"interactive": s_int, "batch": s_bat}, arb,
+        {"interactive": poisson(20.0, 2.0, seed=0),
+         "batch": poisson(10.0, 2.0, seed=1)},
+        lambda name: x, g_fn=lambda: GlobalConstraints(total_chips=2))
+    for cs in rep.classes.values():
+        assert cs.submitted == cs.completed + cs.dropped
+    assert rep.total_goodput > 0
