@@ -1,4 +1,5 @@
-"""Traffic layer: SLO-aware admission+preemption vs FIFO/no-admission.
+"""Traffic layer: SLO-aware admission+preemption vs FIFO/no-admission,
+and the bucketed serving data path vs the pad-to-max baseline.
 
 Three request classes share one chip pool through a contention trace
 (co-running phase halves the pool, a thermal window caps the ladder):
@@ -14,6 +15,13 @@ Both policies replay the SAME seeded arrival trace through the same
 arbiter code; the SLO policy must deliver strictly more goodput at
 equal-or-lower interactive p95 (asserted).
 
+A second comparison replays one seeded trace under the two SERVICE
+models: ``bucketed`` (a batch of k requests pays the nearest power-of-two
+bucket latency — the engine's new data path) vs ``padded`` (every batch
+pays the full pad-to-max forward — the old data path).  At low occupancy
+(mean batch <= max_batch/2) bucketed must deliver >= 1.25x the goodput
+with no interactive p95 regression (asserted — the PR's headline number).
+
     PYTHONPATH=src python benchmarks/bench_traffic.py [--smoke]
 """
 from __future__ import annotations
@@ -21,8 +29,9 @@ from __future__ import annotations
 from repro.core.types import ElasticSpace
 from repro.runtime import GlobalConstraints, default_hw_states, model_lut
 from repro.runtime import hwmodel as hm
-from repro.traffic import (FIFO_POLICY, REJECT, SHED, SLO_POLICY, SLOClass,
-                           onoff, poisson, simulate)
+from repro.traffic import (BUCKETED_SERVICE, DEGRADE, FIFO_POLICY,
+                           PADDED_SERVICE, REJECT, SHED, SLO_POLICY,
+                           SLOClass, onoff, poisson, simulate)
 
 TOTAL_CHIPS = 256
 POWER_BUDGET_W = 0.9 * TOTAL_CHIPS * hm.TDP_W
@@ -78,6 +87,45 @@ def g_fn(t: float) -> GlobalConstraints:
                              temperature_throttle=throttle)
 
 
+# Bucketed-vs-padded comparison: a latency-sensitive class whose deadline
+# (8ms, 6.4ms service budget) leaves little headroom over even the
+# fastest operating point (~5.3ms full-batch forward).  Pad-to-max makes
+# every small batch cost that full forward, so most queueing waits blow
+# the deadline; bucketed serving pays ~overhead_frac of it and keeps the
+# tail inside the budget.
+_CMP_CLASSES = (
+    (SLOClass("interactive", deadline_ms=8.0, priority=2,
+              drop_policy=SHED, service_frac=0.8), 1.0),
+    (SLOClass("batch", deadline_ms=400.0, priority=0,
+              drop_policy=DEGRADE), 0.4),
+)
+
+
+def bucketed_vs_padded(horizon_s: float):
+    """Replay one seeded low-occupancy trace under both service models."""
+    hw_states = default_hw_states(TOTAL_CHIPS)
+    luts = {}
+    for cls, scale in _CMP_CLASSES:
+        terms = hm.RooflineTerms(_REF_TERMS.t_compute * scale,
+                                 _REF_TERMS.t_memory * scale,
+                                 _REF_TERMS.t_collective * scale)
+        luts[cls.name] = model_lut(SPACE.enumerate(), full_terms=terms,
+                                   full_chips=TOTAL_CHIPS,
+                                   hw_states=hw_states)
+    classes = [cls for cls, _ in _CMP_CLASSES]
+    streams = {"interactive": onoff(500.0, horizon_s, on_s=1.0, off_s=1.0,
+                                    seed=11),
+               "batch": poisson(3.0, horizon_s, seed=12)}
+    g = lambda t: GlobalConstraints(total_chips=TOTAL_CHIPS,
+                                    power_budget_w=POWER_BUDGET_W)
+    reports = {}
+    for model in (BUCKETED_SERVICE, PADDED_SERVICE):
+        reports[model] = simulate(classes, luts, dict(streams), g,
+                                  interval_s=INTERVAL_S, policy=SLO_POLICY,
+                                  service_model=model)
+    return classes, reports
+
+
 def run(smoke: bool = False):
     horizon_s = 12.0 if smoke else 60.0
     luts = make_luts()
@@ -114,6 +162,33 @@ def run(smoke: bool = False):
     # under SLO and admitted (then always late) under FIFO
     assert slo.classes["greedy-rt"].rejected > 0
     assert fifo.classes["greedy-rt"].rejected == 0
+
+    # --- bucketed serving vs the pad-to-max baseline (headline) -----------
+    cmp_classes, cmp_reports = bucketed_vs_padded(horizon_s)
+    bkt, pad = cmp_reports[BUCKETED_SERVICE], cmp_reports[PADDED_SERVICE]
+    mean_batch = bkt.classes["interactive"].mean_batch
+    max_batch = cmp_classes[0].max_batch
+    for model, rep in cmp_reports.items():
+        s = rep.classes["interactive"].summary()
+        rows.append((f"traffic/serving_{model}/goodput", rep.total_goodput,
+                     f"interactive p95_ms={s['p95_ms']} "
+                     f"dropped={s['dropped']} mean_batch={s['mean_batch']}"))
+    p95_bkt = bkt.classes["interactive"].p(95)
+    p95_pad = pad.classes["interactive"].p(95)
+    rows.append(("traffic/serving_bucketed_speedup",
+                 bkt.total_goodput / max(pad.total_goodput, 1),
+                 f"goodput {bkt.total_goodput} vs {pad.total_goodput}, "
+                 f"p95 {p95_bkt:.1f} vs {p95_pad:.1f}ms, "
+                 f"mean_batch={mean_batch:.2f}"))
+    # low occupancy: the win comes from not padding, not from batching more
+    assert mean_batch <= max_batch / 2, (
+        f"comparison trace not low-occupancy: mean batch {mean_batch:.2f}")
+    assert bkt.total_goodput >= 1.25 * pad.total_goodput, (
+        f"bucketed goodput {bkt.total_goodput} < 1.25x padded "
+        f"{pad.total_goodput}")
+    assert p95_bkt <= p95_pad, (
+        f"bucketed interactive p95 {p95_bkt:.1f}ms regressed vs padded "
+        f"{p95_pad:.1f}ms")
     return rows
 
 

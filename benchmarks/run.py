@@ -2,10 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call is the natural
 scalar of each row: wall-clock us, energy, %, or roofline time).
+
+``--json PATH`` additionally writes the rows as machine-readable JSON
+(``{"suites": {title: [{"name", "value", "derived"}]}, ...}``) so the
+perf trajectory accumulates across PRs (BENCH_<n>.json files at the repo
+root; BENCH_3.json records the bucketed-vs-padded serving comparison).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -22,28 +28,41 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast path for suites that support it")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write per-benchmark metrics as JSON")
     args = ap.parse_args()
 
     suites = [
         ("pareto (paper: Dynamic-OFA vs static)", bp.run),
         ("governor (paper: energy vs Linux governors)", bg.run),
         ("arbiter (multi-workload vs independent governors)", ba.run),
-        ("traffic (SLO admission+preemption vs FIFO)",
+        ("traffic (SLO admission+preemption vs FIFO; bucketed vs padded)",
          lambda: bt.run(smoke=args.smoke)),
         ("switching (paper: runtime architecture switching)", bs.run),
         ("kernels (elastic matmul / flash attention)", bk.run),
         ("roofline (dry-run derived)", rt.rows),
     ]
     failures = 0
+    results = {}
     print("name,us_per_call,derived")
     for title, fn in suites:
         print(f"# --- {title}")
         try:
-            for name, val, derived in fn():
+            rows = list(fn())
+            for name, val, derived in rows:
                 print(f"{name},{val:.3f},{derived}")
+            results[title] = [{"name": name, "value": val,
+                               "derived": str(derived)}
+                              for name, val, derived in rows]
         except Exception:  # noqa: BLE001
             failures += 1
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": 1, "smoke": args.smoke,
+                       "failures": failures, "suites": results},
+                      f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json}")
     if failures:
         sys.exit(1)
 

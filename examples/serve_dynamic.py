@@ -1,9 +1,18 @@
 """Serve a dynamic supernet with the runtime resource manager in the loop —
 the paper's deployed system (Fig. 1), end to end:
 
-  request queue -> dynamic batching -> governor picks (subnet, DVFS point)
-  under changing latency targets / thermal throttling / co-running apps ->
-  sliced-executable cache switch -> response.
+  request queue -> bucketed continuous batching (pad only to the nearest
+  power-of-two bucket; per-bucket pinned pad buffers; ladder pre-warmed so
+  steady state does zero cold compiles) -> governor picks (subnet, DVFS
+  point) under changing latency targets / thermal throttling / co-running
+  apps -> sliced-executable cache switch -> pipelined dispatch (batch N+1
+  stacks while batch N is on device) -> response.
+
+Serving data-path knobs (see ``repro.launch.serve`` / ``DynamicServer``):
+
+  --max-batch N   batching ceiling; bucket ladder = powers of two up to N
+  --no-buckets    pad-to-max baseline (what bench_traffic compares against)
+  --no-pipeline   synchronous dispatch, no host/device overlap
 
     PYTHONPATH=src python examples/serve_dynamic.py
 """

@@ -2,10 +2,24 @@
 
 ``python -m repro.launch.serve --arch dynamic-ofa-supernet --smoke``
 
-Brings up the DynamicServer (sub-network executable cache + dynamic
-batching) with the JointGovernor in the loop, drives it with the paper's
-workload trace (changing latency targets, thermal throttling, co-running
-apps) and prints the monitor summary next to the Linux-governor baselines.
+Brings up the DynamicServer (sub-network executable cache + bucketed
+continuous batching + pipelined dispatch) with the JointGovernor in the
+loop, drives it with the paper's workload trace (changing latency
+targets, thermal throttling, co-running apps) and prints the monitor
+summary next to the Linux-governor baselines.
+
+Serving data-path knobs (mirrored by ``DynamicServer``):
+
+* ``--max-batch N``   — batching ceiling; the bucket ladder is the powers
+  of two up to N (requests are padded only to the nearest bucket);
+* ``--no-buckets``    — pad every batch to max_batch (old data path, the
+  baseline ``bench_traffic`` compares against);
+* ``--no-pipeline``   — dispatch synchronously instead of overlapping
+  batch N+1's host-side stacking with batch N's device time.
+
+The governed server warms its bucket ladder for the profiled subnets
+before taking traffic, so steady-state serving performs zero cold
+compiles (``server.cold_compiles`` stays 0).
 """
 from __future__ import annotations
 
@@ -25,7 +39,8 @@ from repro.runtime import (Constraints, DynamicServer, GlobalConstraints,
 from repro.runtime import hwmodel as hm
 
 
-def build_server(arch, cfg, *, max_batch=8):
+def build_server(arch, cfg, *, max_batch=8, batch_buckets=True,
+                 pipeline=True):
     key = jax.random.PRNGKey(0)
     if arch.arch_id.startswith(("deit", "vit", "dynamic-ofa")):
         from repro.models.vit import vit_apply, vit_init
@@ -36,7 +51,8 @@ def build_server(arch, cfg, *, max_batch=8):
     else:
         raise SystemExit("serve launcher: vision transformer archs only "
                          "(the paper serves image classification)")
-    return DynamicServer(apply_fn, params, dims, max_batch=max_batch)
+    return DynamicServer(apply_fn, params, dims, max_batch=max_batch,
+                         batch_buckets=batch_buckets, pipeline=pipeline)
 
 
 def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
@@ -69,8 +85,15 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
         SLOClass("batch", deadline_ms=base_ms * 30, priority=0,
                  drop_policy=DEGRADE),
     ]
-    batch_server = build_server(arch, cfg)
+    batch_server = build_server(arch, cfg, max_batch=server.max_batch,
+                                batch_buckets=server.batch_buckets,
+                                pipeline=server.pipeline)
     servers = {"interactive": server, "batch": batch_server}
+    # warm each bucket ladder for every profiled subnet (the arbiter's
+    # governors pick from the LUT): the live trace pays zero cold compiles
+    warm = list(dict.fromkeys(p.subnet for p in lut.points))
+    for s in servers.values():
+        s.warm(warm, example_input=x[0])
     arbiter = ResourceArbiter(interval_s=0.05)
     for c in classes:
         # two modelled 1-chip slices: the measured LUT profiles chips=1,
@@ -100,11 +123,19 @@ def main(argv=None):
                          "path to a recorded schedule JSON")
     ap.add_argument("--trace-duration", type=float, default=5.0,
                     help="seconds of arrival schedule in --trace mode")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="batching ceiling (bucket ladder = powers of two)")
+    ap.add_argument("--no-buckets", action="store_true",
+                    help="pad every batch to max_batch (baseline data path)")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="synchronous dispatch (no host/device overlap)")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch)
     cfg = arch.make_smoke() if args.smoke else arch.make_config()
-    server = build_server(arch, cfg)
+    server = build_server(arch, cfg, max_batch=args.max_batch,
+                          batch_buckets=not args.no_buckets,
+                          pipeline=not args.no_pipeline)
 
     # Pareto subnets of the elastic space
     specs = list(dict.fromkeys(
@@ -144,11 +175,14 @@ def main(argv=None):
                                             base_target_ms=base_ms))
         print(f"  {name:16s} {mon.summary()}")
 
-    # serve real batched requests through the governor
+    # serve real batched requests through the governor; warm the bucket
+    # ladder for every profiled subnet (anything the governor may pick)
+    # so steady state starts compile-free
     gov = governors["joint (paper)"]
     constraints = lambda: Constraints(target_latency_ms=base_ms,
                                       chips_available=1)
     server.governor = gov
+    server.warm(specs, example_input=x[0])
     server.start(constraints_fn=constraints)
     futs = [server.submit(x[0]) for _ in range(args.requests)]
     outs = [f.get(timeout=30) for f in futs]
@@ -157,7 +191,10 @@ def main(argv=None):
     print(f"\nserved {len(outs)} requests  p50={np.percentile(lats,50):.1f}ms "
           f"p99={np.percentile(lats,99):.1f}ms  "
           f"subnets used: {sorted(set(o['subnet'] for o in outs))}")
-    print(f"switches: {len(server.switch_log)}")
+    print(f"switches: {len(server.switch_log)} "
+          f"(dropped {server.switch_log_dropped} log entries), "
+          f"cold compiles while serving: {server.cold_compiles}, "
+          f"buckets: {server.buckets}, pipeline: {server.pipeline}")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,8 @@ arbiter  — multi-workload water-filling arbiter over shared chips/power
 """
 from repro.runtime.hwmodel import HwState, RooflineTerms, roofline, FREQ_LADDER
 from repro.runtime.lut import (LUT, model_lut, measured_lut,
-                               accuracy_surrogate, default_hw_states)
+                               accuracy_surrogate, default_hw_states,
+                               bucket_ladder, bucket_for, bucket_latency_ms)
 from repro.runtime.governor import (Constraints, JointGovernor,
                                     PerformanceGovernor, SchedutilGovernor,
                                     StaticPrunedGovernor)

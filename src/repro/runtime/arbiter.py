@@ -11,8 +11,14 @@ gap (the multi-DNN arbitration problem of Xun et al., arXiv:2105.03608):
 * a global chip count + power budget, divided by **iterative
   water-filling**: first give every workload (in priority order) the
   *smallest* resource share under which a feasible :class:`OpPoint` exists,
-  then pour the surplus back in priority order wherever it buys accuracy,
-  until a full pass changes nothing;
+  then pour the surplus back wherever it buys the most, until a full pass
+  changes nothing.  The surplus pass is **queue-depth aware** (ROADMAP
+  item): :meth:`set_active` carries each tenant's queue length and an
+  arrival-rate EWMA (tenants with servers report their live queue depth
+  automatically), and backlogged tenants are filled FIRST, trading up to
+  their *fastest* feasible point so the surplus drains the backlog; only
+  backlog-free tenants spend surplus on accuracy, in priority order as
+  before;
 * a shared constraint clock that re-arbitrates periodically and drives the
   per-workload governors/servers — multiple :class:`DynamicServer`
   instances run behind one arbiter, each keeping its own (thread-safe)
@@ -50,6 +56,12 @@ from repro.runtime.governor import Constraints, JointGovernor
 from repro.runtime.lut import LUT
 
 _MAX_FILL_PASSES = 8
+# smoothing for the arrival-rate EWMA reported through set_active()
+_EWMA_BETA = 0.6
+# below this many pending requests a tenant counts as backlog-free (the
+# EWMA decays geometrically and never exactly reaches zero — without a
+# threshold one reported burst would keep a tenant "backlogged" forever)
+_BACKLOG_MIN = 0.5
 
 
 class AdmissionError(RuntimeError):
@@ -80,6 +92,10 @@ class Workload:
     governor: Optional[JointGovernor] = None
     server: Optional[DynamicServer] = None
     active: bool = True   # idle tenants release their slice (set_active)
+    # backlog signals (queue-depth-aware water-filling): reported through
+    # set_active() or refreshed from server.queue_depth() each arbitration
+    queue_depth: int = 0
+    arrival_ewma: float = 0.0   # requests/s, smoothed
 
     def __post_init__(self):
         if self.governor is None:
@@ -149,11 +165,32 @@ class ResourceArbiter:
             if w is not None and w.server is not None:
                 w.server.stop()   # the clock drove it; don't leak the worker
 
-    def set_active(self, name: str, active: bool = True):
+    def set_active(self, name: str, active: bool = True, *,
+                   queue_depth: Optional[int] = None,
+                   arrival_rate_rps: Optional[float] = None):
         """Idle workloads release their slice (an empty request queue needs
-        no chips); the traffic driver toggles this as queues fill/drain."""
+        no chips); the traffic driver toggles this as queues fill/drain.
+
+        ``queue_depth`` and ``arrival_rate_rps`` carry the tenant's backlog
+        into the arbiter (ROADMAP queue-depth-aware water-filling): the
+        surplus pass fills the most backlogged tenant first, buying it
+        speed instead of accuracy.  The arrival rate is EWMA-smoothed here
+        so callers can report instantaneous per-epoch rates.
+        """
         with self._lock:
-            self._workloads[name].active = active
+            w = self._workloads[name]
+            w.active = active
+            if queue_depth is not None:
+                w.queue_depth = max(0, int(queue_depth))
+            if arrival_rate_rps is not None:
+                w.arrival_ewma = (_EWMA_BETA * w.arrival_ewma
+                                  + (1.0 - _EWMA_BETA)
+                                  * max(0.0, float(arrival_rate_rps)))
+
+    def _backlog(self, w: Workload) -> float:
+        """Pending work the surplus pass should drain: queued requests plus
+        the arrivals expected before the next arbitration."""
+        return w.queue_depth + w.arrival_ewma * self.interval_s
 
     def _priority_order(self) -> List[Workload]:
         # stable sort: ties broken by registration order
@@ -229,6 +266,10 @@ class ResourceArbiter:
     def arbitrate(self, g: GlobalConstraints) -> Dict[str, Allocation]:
         """Divide (chips, power) among all registered workloads."""
         with self._lock:
+            for w in self._workloads.values():
+                if w.server is not None:
+                    # live tenants report backlog automatically
+                    w.queue_depth = w.server.queue_depth()
             order = [w for w in self._priority_order() if w.active]
             chips_left = g.total_chips
             power_left = (g.power_budget_w if g.power_budget_w is not None
@@ -251,12 +292,17 @@ class ResourceArbiter:
                                             chips=chips, power_w=power,
                                             feasible=feasible)
 
-            # pass 2+: water-fill the surplus — in priority order, let a
-            # workload trade its share up whenever the surplus buys either
-            # feasibility or strictly more accuracy; repeat to a fixpoint.
+            # pass 2+: water-fill the surplus to a fixpoint.  Backlogged
+            # tenants come FIRST (deepest queue wins, then priority) and
+            # trade up to their fastest feasible point — surplus chips
+            # drain backlog before they buy anyone accuracy.  Tenants with
+            # no backlog keep the original behaviour: priority order,
+            # surplus spent on strictly more accuracy.
+            fill_order = sorted(order, key=lambda w: (-self._backlog(w),
+                                                      -w.priority))
             for _ in range(_MAX_FILL_PASSES):
                 changed = False
-                for w in order:
+                for w in fill_order:
                     cur = allocs[w.name]
                     cap_chips = cur.chips + chips_left
                     cap_power = cur.power_w + power_left
@@ -269,10 +315,22 @@ class ResourceArbiter:
                         max_freq=g.temperature_throttle)
                     if not pts:
                         continue
-                    best = max(pts, key=lambda p: (p.accuracy, -p.energy_mj))
-                    upgraded = (not cur.feasible
-                                or cur.point is None
-                                or best.accuracy > cur.point.accuracy + 1e-12)
+                    if self._backlog(w) >= _BACKLOG_MIN:
+                        # drain the queue: fastest feasible point, accuracy
+                        # as the tie-break
+                        best = min(pts, key=lambda p: (p.latency_ms,
+                                                       -p.accuracy))
+                        upgraded = (not cur.feasible
+                                    or cur.point is None
+                                    or best.latency_ms
+                                    < cur.point.latency_ms - 1e-12)
+                    else:
+                        best = max(pts, key=lambda p: (p.accuracy,
+                                                       -p.energy_mj))
+                        upgraded = (not cur.feasible
+                                    or cur.point is None
+                                    or best.accuracy
+                                    > cur.point.accuracy + 1e-12)
                     if not upgraded:
                         continue
                     chips_left = cap_chips - best.hw_state.chips
@@ -422,5 +480,8 @@ class ResourceArbiter:
                 row["measured_energy_mj"] = round(
                     w.server.measured_energy_mj, 2)
                 row["busy_s"] = round(w.server.busy_s, 4)
+            if w.queue_depth or w.arrival_ewma:
+                row["queue_depth"] = w.queue_depth
+                row["arrival_ewma_rps"] = round(w.arrival_ewma, 2)
             out[name] = row
         return out

@@ -2,23 +2,39 @@
 
 Serves a supernet through its Pareto sub-networks:
 
-* an executable cache keyed by SubnetSpec — each sub-network is a separate
-  sliced-mode jit executable over the SAME parameter buffers, so switching
-  architectures costs one dictionary lookup (the Dynamic-OFA trick: weights
-  stay resident, no re-deployment);
-* dynamic request batching (max batch / timeout);
+* an executable cache keyed by ``(SubnetSpec, batch bucket)`` — each
+  sub-network is a separate sliced-mode jit executable over the SAME
+  parameter buffers, so switching architectures costs one dictionary
+  lookup (the Dynamic-OFA trick: weights stay resident, no re-deployment);
+* **bucketed continuous batching**: a batch of ``k`` requests is padded
+  only up to the nearest power-of-two bucket (1, 2, 4, ..., max_batch)
+  instead of always paying a full-batch forward; per-bucket pad buffers
+  are pre-allocated so the steady state does zero host allocation, and
+  :meth:`DynamicServer.warm` pre-compiles the whole bucket ladder so it
+  does zero cold compiles (``cold_compiles`` counts misses);
+* **pipelined dispatch**: the serve loop is split into a *collector*
+  (stacks batch N+1 and dispatches it asynchronously) and a *completer*
+  (resolves futures when batch N leaves the device), so host-side batch
+  assembly overlaps device compute.  ``pipeline_depth`` bounds how far
+  the collector may run ahead; ``busy_s``/``measured_energy_mj``
+  integrate non-overlapping dispatch→ready intervals so accounting stays
+  correct under overlap;
 * the runtime governor in the loop: every ``govern_every`` batches it
   re-reads the performance target + hardware state and may switch the
   active sub-network and the (modelled) DVFS point;
 * wall-clock measurement hooks that feed the measured LUT.
+
+The worker blocks on the request queue and on pause/resume events (no
+polling): an idle or paused server burns no CPU and wakes immediately.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional, Set, Tuple
 
 import jax
 import numpy as np
@@ -26,6 +42,11 @@ import numpy as np
 from repro.core.elastic import spec_to_static
 from repro.core.types import SubnetSpec
 from repro.runtime import hwmodel as hm
+from repro.runtime.lut import bucket_ladder
+
+# queue token that wakes a blocked collector without carrying a request
+# (pause()/stop() enqueue it so the worker never needs a poll timeout)
+_WAKE = object()
 
 
 @dataclasses.dataclass
@@ -35,14 +56,35 @@ class Request:
     future: "queue.Queue"
 
 
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched batch travelling from collector to completer."""
+    out: Any                   # device value (dispatch returned, not ready)
+    reqs: List[Request]
+    t_dispatch: float
+    hw: Any                    # HwState active at dispatch
+    subnet: str
+    buf_key: tuple             # pad-buffer pool slot to recycle when ready
+    buf: Optional[np.ndarray]  # None once returned to the pool
+
+
 class DynamicServer:
     def __init__(self, apply_fn: Callable, params, dims: Dict[str, int], *,
                  governor=None, max_batch: int = 8, timeout_ms: float = 5.0,
-                 multiple_of: int = 1, warm_specs: Optional[List[SubnetSpec]]
-                 = None):
+                 multiple_of: int = 1,
+                 warm_specs: Optional[List[SubnetSpec]] = None,
+                 batch_buckets: bool = True, pipeline: bool = True,
+                 pipeline_depth: int = 2, example_input=None,
+                 switch_log_cap: int = 1024):
         """``apply_fn(params, x, E) -> output`` (pure; jit-able).
 
         ``dims`` maps knob names to full sizes (see spec_to_static).
+        ``batch_buckets=False`` restores the pad-to-max data path and
+        ``pipeline=False`` the synchronous dispatch-then-wait loop (the
+        baselines the benchmarks compare against).  ``example_input`` is
+        one request-shaped array; when given, ``warm_specs`` warms the
+        whole bucket ladder (compile + one execution per bucket) instead
+        of only building the jit wrappers.
         """
         self.apply_fn = apply_fn
         self.params = params
@@ -51,41 +93,101 @@ class DynamicServer:
         self.max_batch = max_batch
         self.timeout_s = timeout_ms / 1e3
         self.multiple_of = multiple_of
-        self._cache: Dict[SubnetSpec, Any] = {}
+        self.batch_buckets = batch_buckets
+        self.buckets: Tuple[int, ...] = (bucket_ladder(max_batch)
+                                         if batch_buckets else (max_batch,))
+        self.pipeline = pipeline
+        self.pipeline_depth = max(1, pipeline_depth)
+        self.example_input = (None if example_input is None
+                              else np.asarray(example_input))
+        # cache key: (spec, bucket); bucket None is the shape-polymorphic
+        # executable used by the synchronous infer()/measure() path
+        self._cache: Dict[Tuple[SubnetSpec, Optional[int]], Any] = {}
+        self._specs_cached: Set[SubnetSpec] = set()
+        self._compiled: Set[Tuple[SubnetSpec, int]] = set()
         self._cache_lock = threading.Lock()
-        self._queue: "queue.Queue[Request]" = queue.Queue()
+        # per-bucket pad-buffer free list: the completer recycles a buffer
+        # only after its batch left the device, so the collector never
+        # rewrites memory a pending dispatch may still alias (CPU backend
+        # can zero-copy host arrays).  Steady state: zero host allocation.
+        self._pad_pool: Dict[Tuple[int, tuple, str], List[np.ndarray]] = {}
+        self._pad_lock = threading.Lock()
+        self._queue: "queue.Queue" = queue.Queue()
+        # _WAKE entries in _queue (not real backlog); lock-protected because
+        # pause()/stop() (arbiter clock, callers) and the worker all touch
+        # it and queue_depth() feeds the arbiter's water-filling
+        self._wake_tokens = 0
+        self._wake_lock = threading.Lock()
+        self._completions: Optional["queue.Queue"] = None
         self._stop = threading.Event()
         self._paused = threading.Event()
+        self._resume = threading.Event()
+        self._resume.set()
         self._worker: Optional[threading.Thread] = None
+        self._completer: Optional[threading.Thread] = None
         self.active_spec = SubnetSpec()
         self.active_point = None
-        self.switch_log: List[dict] = []
+        # bounded: governor churn must not grow memory without limit
+        self.switch_log: Deque[dict] = collections.deque(maxlen=switch_log_cap)
+        self.switch_log_cap = switch_log_cap
+        self.switch_log_dropped = 0
         self.served = 0
         self.cancelled = 0
-        # measured accounting: wall-clock busy time integrated against the
-        # active hw slice's modelled power — the arbiter's per-tenant
-        # MEASURED energy (vs the LUT's modelled energy_mj)
+        self.cold_compiles = 0   # serve-path dispatches that had to compile
+        # measured accounting: non-overlapping dispatch->ready wall-clock
+        # integrated against the active hw slice's modelled power — the
+        # arbiter's per-tenant MEASURED energy (vs the LUT's modelled
+        # energy_mj).  _last_ready de-overlaps pipelined batches.
         self.busy_s = 0.0
         self.measured_energy_mj = 0.0
-        for spec in warm_specs or []:
-            self.executable(spec)
+        self._last_ready = 0.0
+        if warm_specs:
+            self.warm(warm_specs)
 
     # --- executable cache ---------------------------------------------------
 
-    def executable(self, spec: SubnetSpec):
+    def executable(self, spec: SubnetSpec, bucket: Optional[int] = None):
         # called from the worker thread AND synchronous infer()/measure()
         # callers (and, in arbiter mode, the shared constraint clock)
         with self._cache_lock:
-            if spec not in self._cache:
+            key = (spec, bucket)
+            if key not in self._cache:
                 E = spec_to_static(spec, self.dims, self.multiple_of)
                 fn = jax.jit(lambda p, x: self.apply_fn(p, x, E))
-                self._cache[spec] = fn
-            return self._cache[spec]
+                self._cache[key] = fn
+                self._specs_cached.add(spec)
+            return self._cache[key]
+
+    def warm(self, specs: List[SubnetSpec], example_input=None):
+        """Warm the bucket ladder for each spec.
+
+        Builds every (spec, bucket) executable; with an example input
+        (here or at construction) each one is also executed once so XLA
+        compiles NOW — after this, steady-state serving performs zero cold
+        compiles (``cold_compiles`` stays 0) and zero host allocations
+        (pad buffers are pre-pinned per bucket).
+        """
+        x1 = example_input if example_input is not None else self.example_input
+        if x1 is not None:
+            x1 = np.asarray(x1)
+            self.example_input = x1
+        for spec in specs:
+            for b in self.buckets:
+                fn = self.executable(spec, b)
+                if x1 is None:
+                    continue
+                key, buf = self._take_buffer(b, x1.shape, x1.dtype)
+                buf[:] = 0
+                jax.block_until_ready(fn(self.params, buf))
+                self._give_buffer(key, buf)
+                self._compiled.add((spec, b))
 
     def switch(self, spec: SubnetSpec, point=None):
         t0 = time.perf_counter()
-        cold = spec not in self._cache
+        cold = spec not in self._specs_cached
         self.executable(spec)
+        if len(self.switch_log) == self.switch_log_cap:
+            self.switch_log_dropped += 1   # deque evicts the oldest entry
         self.switch_log.append({"spec": spec.name(), "cold": cold,
                                 "ms": (time.perf_counter() - t0) * 1e3})
         self.active_spec = spec
@@ -132,24 +234,48 @@ class DynamicServer:
             self._drain_queue()
         return fut
 
+    def queue_depth(self) -> int:
+        """Requests waiting for a batch (the arbiter's backlog signal)."""
+        with self._wake_lock:
+            tokens = self._wake_tokens
+        return max(0, self._queue.qsize() - tokens)
+
+    def _put_wake(self):
+        with self._wake_lock:
+            self._wake_tokens += 1
+        self._queue.put(_WAKE)
+
+    def _took_wake(self):
+        with self._wake_lock:
+            self._wake_tokens -= 1
+
     def _drain_queue(self):
         while True:
             try:
                 r = self._queue.get_nowait()
             except queue.Empty:
                 break
+            if r is _WAKE:
+                self._took_wake()
+                continue
             self._cancel(r, "server stopped")
 
     def _collect_batch(self) -> List[Request]:
+        """Block (no poll) until a request arrives, then hold the batching
+        window open.  A _WAKE token (pause/stop) ends collection early."""
         reqs: List[Request] = []
-        deadline = None
+        deadline = 0.0
         while len(reqs) < self.max_batch:
-            timeout = None
-            if reqs:
+            if not reqs:
+                r = self._queue.get()    # idle: block until work or wake
+            else:
                 timeout = max(0.0, deadline - time.perf_counter())
-            try:
-                r = self._queue.get(timeout=timeout if reqs else 0.05)
-            except queue.Empty:
+                try:
+                    r = self._queue.get(timeout=timeout)
+                except queue.Empty:
+                    break
+            if r is _WAKE:
+                self._took_wake()
                 break
             if not reqs:
                 deadline = time.perf_counter() + self.timeout_s
@@ -159,18 +285,118 @@ class DynamicServer:
     def pause(self):
         """Park the worker: requests queue up but no compute is consumed
         (the arbiter starves a workload this way — its slice is gone)."""
-        self._paused.set()
+        if not self._paused.is_set():
+            self._paused.set()
+            self._resume.clear()
+            self._put_wake()         # wake a collector blocked on get()
 
     def resume(self):
-        self._paused.clear()
+        if self._paused.is_set():
+            self._paused.clear()
+            self._resume.set()
+
+    def _bucket_for(self, n: int) -> int:
+        # scan the precomputed ladder: no per-dispatch allocation
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.max_batch
+
+    def _take_buffer(self, bucket: int, shape: tuple, dtype
+                     ) -> Tuple[tuple, np.ndarray]:
+        """Pop a pre-allocated staging buffer for one bucket (allocate only
+        on first use; the completer gives it back once the batch is ready)."""
+        key = (bucket, tuple(shape), np.dtype(dtype).str)
+        with self._pad_lock:
+            pool = self._pad_pool.setdefault(key, [])
+            if pool:
+                return key, pool.pop()
+        return key, np.zeros((bucket,) + tuple(shape), dtype)
+
+    def _give_buffer(self, key: tuple, buf: np.ndarray):
+        with self._pad_lock:
+            self._pad_pool[key].append(buf)
+
+    def _dispatch(self, reqs: List[Request]) -> _InFlight:
+        """Stack + pad to the nearest bucket and dispatch asynchronously."""
+        xs = [np.asarray(r.x) for r in reqs]
+        n = len(xs)
+        bucket = self._bucket_for(n)
+        buf_key, buf = self._take_buffer(bucket, xs[0].shape, xs[0].dtype)
+        for i, x in enumerate(xs):
+            buf[i] = x
+        if n < bucket:
+            buf[n:] = 0
+        spec = self.active_spec
+        key = (spec, bucket)
+        fn = self.executable(spec, bucket)
+        if key not in self._compiled:
+            self.cold_compiles += 1
+            self._compiled.add(key)
+        hw = getattr(self.active_point, "hw_state", None) \
+            or hm.HwState(chips=1, freq=1.0)
+        t_disp = time.perf_counter()
+        out = fn(self.params, buf)       # async: returns before ready
+        return _InFlight(out=out, reqs=reqs, t_dispatch=t_disp, hw=hw,
+                         subnet=spec.name(), buf_key=buf_key, buf=buf)
+
+    def _complete(self, item: _InFlight):
+        """Resolve one in-flight batch: wait for the device, account the
+        non-overlapping dispatch->ready interval, answer the futures."""
+        out = np.asarray(jax.block_until_ready(item.out))
+        if item.buf is not None:
+            self._give_buffer(item.buf_key, item.buf)
+            item.buf = None          # _complete_safe must not re-pool it
+        t_ready = time.perf_counter()
+        dt = t_ready - max(item.t_dispatch, self._last_ready)
+        self._last_ready = t_ready
+        if dt > 0:
+            self.busy_s += dt
+            self.measured_energy_mj += hm.slice_power_w(item.hw) * dt * 1e3
+        for i, r in enumerate(item.reqs):
+            r.future.put({"y": out[i],
+                          "latency_ms": (t_ready - r.t_submit) * 1e3,
+                          "subnet": item.subnet})
+        self.served += len(item.reqs)
+
+    def _complete_safe(self, item: _InFlight):
+        """_complete, never letting an exception kill the thread: a failed
+        batch (XLA runtime error, bad input shape) resolves its futures
+        with an error payload instead of wedging callers forever."""
+        try:
+            self._complete(item)
+        except Exception as e:  # noqa: BLE001 - resolve, don't wedge
+            if item.buf is not None:    # not yet returned by _complete
+                self._give_buffer(item.buf_key, item.buf)
+                item.buf = None
+            for r in item.reqs:
+                if r.future.empty():
+                    self._cancel(r, f"batch failed: {e!r}")
+
+    def _completion_loop(self):
+        while True:
+            item = self._completions.get()
+            if item is None:
+                break
+            self._complete_safe(item)
 
     def _serve_loop(self, constraints_fn=None, govern_every: int = 4):
         n_batches = 0
+        carry: List[Request] = []    # batch formed, then pause/stop landed
         while not self._stop.is_set():
             if self._paused.is_set():
-                self._stop.wait(0.01)
+                self._resume.wait()      # no spin: resume()/stop() set it
                 continue
-            reqs = self._collect_batch()
+            # serve a carried-over batch first: requests must not be
+            # re-queued behind later submissions (FIFO across a pause)
+            reqs = carry or self._collect_batch()
+            carry = []
+            if self._stop.is_set():
+                carry = reqs             # requeued below; stop() cancels
+                break
+            if self._paused.is_set():
+                carry = reqs
+                continue
             if not reqs:
                 continue
             if self.governor is not None and constraints_fn is not None \
@@ -181,24 +407,20 @@ class DynamicServer:
                     self.switch(point.subnet, point)
                 else:
                     self.active_point = point
-            xs = np.stack([np.asarray(r.x) for r in reqs])
-            pad = self.max_batch - len(reqs)
-            if pad:
-                xs = np.concatenate([xs, np.zeros_like(xs[:1]).repeat(pad, 0)])
-            t_batch = time.perf_counter()
-            out = np.asarray(self.infer(xs))
-            dt = time.perf_counter() - t_batch
-            self.busy_s += dt
-            hw = getattr(self.active_point, "hw_state", None) \
-                or hm.HwState(chips=1, freq=1.0)
-            self.measured_energy_mj += hm.slice_power_w(hw) * dt * 1e3
-            for i, r in enumerate(reqs):
-                r.future.put({"y": out[i],
-                              "latency_ms": (time.perf_counter() - r.t_submit)
-                              * 1e3,
-                              "subnet": self.active_spec.name()})
-            self.served += len(reqs)
+            try:
+                item = self._dispatch(reqs)
+            except Exception as e:  # noqa: BLE001 - resolve, don't wedge
+                for r in reqs:
+                    self._cancel(r, f"dispatch failed: {e!r}")
+                continue
+            if self.pipeline:
+                # bounded handoff: batch N+1 stacks while N is on device
+                self._completions.put(item)
+            else:
+                self._complete_safe(item)
             n_batches += 1
+        for r in carry:                  # stop() drains and cancels these
+            self._queue.put(r)
 
     @property
     def is_running(self) -> bool:
@@ -207,6 +429,13 @@ class DynamicServer:
     def start(self, constraints_fn=None, govern_every: int = 4):
         self._stop.clear()
         self._paused.clear()
+        self._resume.set()
+        self._last_ready = 0.0
+        if self.pipeline:
+            self._completions = queue.Queue(maxsize=self.pipeline_depth)
+            self._completer = threading.Thread(target=self._completion_loop,
+                                               daemon=True)
+            self._completer.start()
         self._worker = threading.Thread(
             target=self._serve_loop, args=(constraints_fn, govern_every),
             daemon=True)
@@ -214,9 +443,24 @@ class DynamicServer:
 
     def stop(self):
         self._stop.set()
+        self._resume.set()               # unpark a paused worker
+        self._put_wake()                 # wake a collector blocked on get()
+        worker_alive = False
         if self._worker:
-            self._worker.join(timeout=5)
-            self._worker = None
+            self._worker.join(timeout=60)
+            worker_alive = self._worker.is_alive()
+            if not worker_alive:
+                self._worker = None
+        if self._completer and not worker_alive:
+            # the collector is joined: every dispatched batch is already in
+            # the completion queue, so the sentinel lands after all of them.
+            # If the worker is somehow still wedged in an in-flight dispatch
+            # we leave the (daemon) pipeline running instead — its futures
+            # still resolve when the device returns, and the worker exits on
+            # its own once it observes _stop.
+            self._completions.put(None)
+            self._completer.join(timeout=5)
+            self._completer = None
         # drain abandoned requests: their futures must resolve or callers
         # blocked on fut.get() hang forever (paused/never-started servers
         # accumulate queued work; the worker is joined, and a submit()

@@ -60,6 +60,56 @@ def subnet_flops_ratio(spec: SubnetSpec) -> float:
     return r
 
 
+# --- batch buckets ----------------------------------------------------------
+# The serving engine pads each request batch only up to the nearest
+# power-of-two bucket (1, 2, 4, ..., max_batch) instead of always padding to
+# max_batch; one executable is compiled per (subnet, bucket).  The same
+# ladder parameterises the traffic simulator's batching-aware service model:
+# a bucket-sized forward costs a fixed dispatch/memory overhead plus a
+# compute part linear in the bucket.
+
+# Fraction of the full-batch latency that does NOT shrink with batch size
+# (weight streaming, kernel launch, collectives on activations of the pad).
+BUCKET_OVERHEAD_FRAC = 0.35
+
+
+def bucket_ladder(max_batch: int) -> Tuple[int, ...]:
+    """Power-of-two batch buckets up to (and always including) max_batch."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    out: List[int] = []
+    b = 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(dict.fromkeys(out))
+
+
+def bucket_for(n: int, max_batch: int) -> int:
+    """Smallest bucket that fits ``n`` requests (clamped to max_batch)."""
+    for b in bucket_ladder(max_batch):
+        if b >= n:
+            return b
+    return max_batch
+
+
+def bucket_latency_ms(full_batch_ms: float, bucket: int, max_batch: int, *,
+                      overhead_frac: float = BUCKET_OVERHEAD_FRAC) -> float:
+    """Modelled latency of one bucket-sized forward.
+
+    ``full_batch_ms`` is the profiled pad-to-max latency (what the LUT
+    stores); a smaller bucket pays the fixed overhead fraction plus the
+    linearly-scaled compute part.  Monotone in ``bucket`` and equal to
+    ``full_batch_ms`` at ``bucket == max_batch``.
+    """
+    if max_batch <= 0:
+        return full_batch_ms
+    frac = overhead_frac + (1.0 - overhead_frac) * min(bucket, max_batch) \
+        / max_batch
+    return full_batch_ms * min(frac, 1.0)
+
+
 # Chip-tier divisors of full_chips: a ~1.33x-spaced ladder down to 1/16.
 # Water-filling packs concurrent tenants poorly with only {1, 1/2, 1/4}
 # tiers — a tenant that needs "a bit more than 1/4" is forced to claim
@@ -104,6 +154,21 @@ class LUT:
                 continue
             out.append(p)
         return out
+
+    def bucket_latencies(self, point: OpPoint, max_batch: int
+                         ) -> Dict[int, float]:
+        """Per-bucket latency columns for one operating point (inspection
+        helper).
+
+        The stored ``latency_ms`` is the pad-to-max (full batch) cost; the
+        columns expand it with :func:`bucket_latency_ms`, the same model
+        the batching-aware service model in ``traffic.driver.simulate``
+        applies point-wise.  Use this to tabulate a point's whole ladder
+        (reports, EXPERIMENTS.md); the hot paths call
+        :func:`bucket_latency_ms` directly.
+        """
+        return {b: bucket_latency_ms(point.latency_ms, b, max_batch)
+                for b in bucket_ladder(max_batch)}
 
     def fastest(self, chips_available: int, max_freq: float = 1.0,
                 power_budget_w: Optional[float] = None) -> OpPoint:

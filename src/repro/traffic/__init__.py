@@ -30,5 +30,7 @@ from repro.traffic.arrivals import (diurnal, load_schedule, merge, onoff,
                                     poisson, replay, save_schedule)
 from repro.traffic.slo import (DEGRADE, DROP_POLICIES, REJECT, SHED,
                                SLOClass)
-from repro.traffic.driver import (FIFO_POLICY, SLO_POLICY, ClassStats,
-                                  TrafficReport, drive_live, simulate)
+from repro.traffic.driver import (BUCKETED_SERVICE, FIFO_POLICY,
+                                  PADDED_SERVICE, SERVICE_MODELS, SLO_POLICY,
+                                  ClassStats, TrafficReport, drive_live,
+                                  simulate)

@@ -4,10 +4,17 @@ Two drivers share the same classes/arrivals/report types:
 
 * :func:`simulate` — a deterministic discrete-event driver in virtual
   time.  Service times come from each workload's arbitrated
-  :class:`OpPoint` latency, so the run exercises the REAL arbiter code
-  (admission_check, water-filling, preempt, set_active) without touching
-  a clock or a jit cache — policy comparisons are exactly reproducible
-  from the arrival seeds.
+  :class:`OpPoint` latency through a **batching-aware service model**
+  (ROADMAP item): queued requests are served in batches of up to the
+  class's ``max_batch``, and one batch of ``k`` requests costs the
+  power-of-two *bucket* latency for ``k`` (``service_model="bucketed"``,
+  mirroring the engine's bucketed data path) or the full pad-to-max
+  latency regardless of occupancy (``service_model="padded"``, the
+  baseline the benchmarks compare against).  The run exercises the REAL
+  arbiter code (admission_check, water-filling, preempt, set_active with
+  queue depth + arrival-rate EWMA) without touching a clock or a jit
+  cache — policy comparisons are exactly reproducible from the arrival
+  seeds.
 * :func:`drive_live` — wall-clock submission of real requests to
   :class:`DynamicServer` instances behind a started arbiter
   (``launch/serve.py --trace``).
@@ -25,13 +32,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.runtime.arbiter import (AdmissionError, GlobalConstraints,
                                    ResourceArbiter)
 from repro.runtime.engine import DynamicServer
-from repro.runtime.lut import LUT
+from repro.runtime.lut import LUT, bucket_for, bucket_latency_ms
 from repro.runtime.monitor import quantile
 from repro.traffic import arrivals as arr
 from repro.traffic.slo import DEGRADE, SHED, SLOClass
@@ -39,6 +47,11 @@ from repro.traffic.slo import DEGRADE, SHED, SLOClass
 SLO_POLICY = "slo"
 FIFO_POLICY = "fifo"
 POLICIES = (SLO_POLICY, FIFO_POLICY)
+
+# service models for simulate(): how a batch of k queued requests is priced
+BUCKETED_SERVICE = "bucketed"   # nearest power-of-two bucket latency
+PADDED_SERVICE = "padded"       # always the full pad-to-max latency
+SERVICE_MODELS = (BUCKETED_SERVICE, PADDED_SERVICE)
 
 
 @dataclasses.dataclass
@@ -50,11 +63,18 @@ class ClassStats:
     dropped: int = 0       # shed on arrival (or unserved at horizon)
     completed: int = 0
     good: int = 0          # completed within the deadline
+    batches: int = 0       # serving batches dispatched (sim service model)
+    batch_occupancy: int = 0   # requests summed over those batches
     latencies_ms: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def goodput(self) -> int:
         return self.good
+
+    @property
+    def mean_batch(self) -> float:
+        """Mean serving-batch occupancy (0.0 when nothing was batched)."""
+        return self.batch_occupancy / self.batches if self.batches else 0.0
 
     def p(self, q: float) -> float:
         return quantile(self.latencies_ms, q)
@@ -64,7 +84,8 @@ class ClassStats:
                "dropped": self.dropped, "completed": self.completed,
                "goodput": self.good,
                "goodput_rate": round(self.good / self.submitted, 4)
-               if self.submitted else 0.0}
+               if self.submitted else 0.0,
+               "mean_batch": round(self.mean_batch, 3)}
         for q in (50, 95, 99):
             # None (not NaN) when nothing completed: NaN != NaN breaks
             # report equality for deterministic-replay checks
@@ -134,21 +155,41 @@ def _register_classes(arbiter: ResourceArbiter, classes: Sequence[SLOClass],
     return admitted
 
 
+def _service_ms(full_ms: float, occupancy: int, max_batch: int,
+                service_model: str) -> float:
+    """Cost of one serving batch of ``occupancy`` requests.
+
+    The LUT point latency is the profiled pad-to-max (full batch) cost;
+    the bucketed model pays only the nearest power-of-two bucket, the
+    padded baseline always pays the full forward.
+    """
+    if service_model == PADDED_SERVICE:
+        return full_ms
+    return bucket_latency_ms(full_ms, bucket_for(occupancy, max_batch),
+                             max_batch)
+
+
 def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
              streams: Dict[str, Sequence[float]],
              g_fn: Callable[[float], GlobalConstraints], *,
              interval_s: float = 0.1, policy: str = SLO_POLICY,
+             service_model: str = BUCKETED_SERVICE,
              max_drain_s: float = 120.0) -> TrafficReport:
     """Deterministic discrete-event run of a traffic trace.
 
     Virtual time advances in constraint-clock epochs of ``interval_s``.
     Each epoch: (1) idle classes release their slice and the arbiter
-    re-water-fills; (2) the epoch's arrivals are admitted / shed /
-    preempt-served in timestamp order; (3) each workload serves its queue
-    sequentially at its current point's latency.  A request locks in the
-    service time current when it starts.
+    re-water-fills, fed each class's queue depth + arrival-rate EWMA so
+    surplus chips go to the most backlogged tenant; (2) the epoch's
+    arrivals are admitted / shed / preempt-served in timestamp order;
+    (3) each workload serves its queue in batches of up to its class's
+    ``max_batch`` — one batch of ``k`` requests costs the bucket latency
+    for ``k`` under ``service_model="bucketed"`` or the full pad-to-max
+    latency under ``"padded"``.  A batch locks in the service time
+    current when it starts.
     """
     assert policy in POLICIES, policy
+    assert service_model in SERVICE_MODELS, service_model
     by_class = {c.name: c for c in classes}
     stats = {c.name: ClassStats() for c in classes}
     arbiter = ResourceArbiter(interval_s=interval_s)
@@ -157,6 +198,7 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     events = arr.merge({n: ts for n, ts in streams.items()})
     queues = {c.name: collections.deque() for c in classes}
     busy_until = {c.name: 0.0 for c in classes}
+    arrived_epoch = {c.name: 0 for c in classes}   # arrivals last epoch
     last_arrival = events[-1][0] if events else 0.0
 
     def svc_of(allocs):
@@ -175,8 +217,11 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
         g = g_fn(t)
         for name in queues:
             if admitted[name]:
-                arbiter.set_active(name, bool(queues[name])
-                                   or busy_until[name] > t)
+                arbiter.set_active(
+                    name, bool(queues[name]) or busy_until[name] > t,
+                    queue_depth=len(queues[name]),
+                    arrival_rate_rps=arrived_epoch[name] / interval_s)
+            arrived_epoch[name] = 0
         allocs = arbiter.tick(g)
         svc = svc_of(allocs)
         t_next = t + interval_s
@@ -187,6 +232,7 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
             c = by_class[name]
             st = stats[name]
             st.submitted += 1
+            arrived_epoch[name] += 1
             if not admitted[name]:
                 st.rejected += 1
                 continue
@@ -199,10 +245,18 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 svc = svc_of(allocs)
             if (policy == SLO_POLICY and c.drop_policy == SHED
                     and svc.get(name) is not None):
-                # predicted wait = in-flight remainder + queue ahead of us
-                wait_ms = (max(0.0, busy_until[name] - ta) * 1e3
-                           + len(queues[name]) * svc[name])
-                if wait_ms + svc[name] > c.deadline_ms:
+                # predicted completion: in-flight remainder, then the queue
+                # plus this request drained in batches priced by the active
+                # service model at the estimated occupancy (the arrival
+                # JOINS a batch — don't double-count its service)
+                q_len = len(queues[name])
+                occ = min(q_len + 1, c.max_batch)
+                batch_ms = _service_ms(svc[name], occ, c.max_batch,
+                                       service_model)
+                n_batches = math.ceil((q_len + 1) / c.max_batch)
+                eta_ms = (max(0.0, busy_until[name] - ta) * 1e3
+                          + n_batches * batch_ms)
+                if eta_ms > c.deadline_ms:
                     st.dropped += 1   # predicted miss: shed on arrival
                     continue
             queues[name].append(ta)
@@ -211,21 +265,34 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
             s_ms = svc.get(name)
             if s_ms is None:
                 continue   # starved this epoch; queue waits
+            c = by_class[name]
+            st = stats[name]
             while q:
                 # clamp to t: a leftover request from a starved epoch can
                 # start no earlier than the tick that granted the slice
                 start = max(q[0], busy_until[name], t)
                 if start >= t_next:
                     break
-                ta = q.popleft()
-                done = start + s_ms / 1e3
+                # batch everything already waiting at the start instant
+                k = 0
+                for ta in q:
+                    if ta <= start and k < c.max_batch:
+                        k += 1
+                    else:
+                        break
+                k = max(k, 1)
+                done = start + _service_ms(s_ms, k, c.max_batch,
+                                           service_model) / 1e3
                 busy_until[name] = done
-                lat_ms = (done - ta) * 1e3
-                st = stats[name]
-                st.completed += 1
-                st.latencies_ms.append(lat_ms)
-                if lat_ms <= by_class[name].deadline_ms:
-                    st.good += 1
+                st.batches += 1
+                st.batch_occupancy += k
+                for _ in range(k):
+                    ta = q.popleft()
+                    lat_ms = (done - ta) * 1e3
+                    st.completed += 1
+                    st.latencies_ms.append(lat_ms)
+                    if lat_ms <= c.deadline_ms:
+                        st.good += 1
         t = t_next
 
     for name, q in queues.items():

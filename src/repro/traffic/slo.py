@@ -31,6 +31,9 @@ class SLOClass:
     water-filling (and preemption) order; ``drop_policy`` picks the
     overload behaviour above.  ``service_frac`` is the fraction of the
     deadline budgeted for pure service — the rest absorbs queueing.
+    ``max_batch`` is the class's serving batch ceiling: the batching-aware
+    service model amortises one bucket-sized forward over up to this many
+    queued requests (mirrors ``DynamicServer(max_batch=...)``).
     """
     name: str
     deadline_ms: float
@@ -39,6 +42,7 @@ class SLOClass:
     min_accuracy: Optional[float] = None
     service_frac: float = 0.5
     degrade_factor: float = 4.0   # DEGRADE: relaxed-target multiplier
+    max_batch: int = 8            # serving batch ceiling (bucket ladder top)
 
     def __post_init__(self):
         if self.deadline_ms <= 0:
@@ -48,6 +52,8 @@ class SLOClass:
                              f"{self.drop_policy!r} not in {DROP_POLICIES}")
         if not 0.0 < self.service_frac <= 1.0:
             raise ValueError(f"{self.name}: service_frac must be in (0, 1]")
+        if self.max_batch < 1:
+            raise ValueError(f"{self.name}: max_batch must be >= 1")
 
     @property
     def service_target_ms(self) -> float:

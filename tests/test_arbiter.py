@@ -178,6 +178,53 @@ def test_power_budget_and_throttle_respected():
             assert a.point.hw_state.freq <= 0.7
 
 
+def test_backlogged_tenant_gets_surplus_first():
+    """Queue-depth-aware water-filling (ROADMAP item): with equal
+    priorities, the surplus goes to the backlogged tenant as SPEED — it
+    ends up on a faster point (and at least as many chips) than its
+    backlog-free peer, instead of everyone buying accuracy."""
+    arb = ResourceArbiter()
+    arb.register("a", make_lut(), target_latency_ms=40.0, priority=1)
+    arb.register("b", make_lut(), target_latency_ms=40.0, priority=1)
+    g = GlobalConstraints(total_chips=512)
+    base = arb.arbitrate(g)
+    assert base["a"].feasible and base["b"].feasible
+    arb.set_active("a", True, queue_depth=64, arrival_rate_rps=200.0)
+    arb.set_active("b", True, queue_depth=0)
+    allocs = arb.arbitrate(g)
+    assert allocs["a"].feasible and allocs["b"].feasible
+    assert allocs["a"].chips >= allocs["b"].chips
+    # the backlogged tenant runs strictly faster than the accuracy-first
+    # pick it got when no backlog was reported
+    assert allocs["a"].point.latency_ms < base["a"].point.latency_ms
+    # never oversubscribes
+    assert sum(x.chips for x in allocs.values()) <= 512
+
+
+def test_backlog_ewma_smooths_arrival_rate():
+    arb = ResourceArbiter()
+    w = arb.register("a", make_lut(), target_latency_ms=40.0)
+    arb.set_active("a", True, arrival_rate_rps=100.0)
+    first = w.arrival_ewma
+    assert 0.0 < first < 100.0              # smoothed, not raw
+    arb.set_active("a", True, arrival_rate_rps=100.0)
+    assert first < w.arrival_ewma < 100.0   # converging toward the rate
+
+
+def test_server_queue_depth_feeds_arbiter():
+    """A live tenant's backlog is read off its server automatically."""
+    arb = ResourceArbiter()
+    server = tiny_server()
+    w = arb.register("a", make_lut(), target_latency_ms=40.0, server=server)
+    x = np.zeros((16, 16, 3), "float32")
+    futs = [server.submit(x) for _ in range(5)]   # queued: never started
+    arb.arbitrate(GlobalConstraints(total_chips=256))
+    assert w.queue_depth == 5
+    server.stop()                                 # drains the futures
+    for f in futs:
+        assert f.get(timeout=5)["cancelled"]
+
+
 def test_constraints_carry_priority_and_share():
     arb = ResourceArbiter()
     w = arb.register("a", make_lut(), target_latency_ms=40.0, priority=3)

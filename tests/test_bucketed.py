@@ -1,0 +1,255 @@
+"""Bucketed continuous batching + pipelined dispatch (PR 3).
+
+Covers the acceptance items: bucket selection/padding bit-exactness vs
+the unbucketed pad-to-max baseline, zero cold compiles in steady state
+after bucket-ladder warmup, pipelined future resolution under
+stop()/pause races, the bounded switch log, and the batching-aware
+service model in the traffic simulator.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.types import ElasticSpace, SubnetSpec
+from repro.runtime import (GlobalConstraints, bucket_for, bucket_ladder,
+                           bucket_latency_ms, model_lut)
+from repro.runtime import hwmodel as hm
+
+TERMS = hm.RooflineTerms(t_compute=0.02, t_memory=0.008, t_collective=0.004)
+SPACE = ElasticSpace(width_mults=(0.5, 0.75, 1.0), ffn_mults=(0.5, 1.0),
+                     depth_mults=(0.5, 1.0))
+
+
+def tiny_server(**kw):
+    import jax
+    from repro.models.vit import ViTConfig, vit_apply, vit_init
+    from repro.runtime import DynamicServer
+    cfg = ViTConfig(name="t", img_res=16, patch=8, n_layers=2,
+                    d_model=32, n_heads=4, d_ff=64, n_classes=4,
+                    compute_dtype="float32")
+    params = vit_init(jax.random.PRNGKey(0), cfg)
+    dims = {"d_model": 32, "d_ff": 64, "n_heads": 4, "n_layers": 2}
+    return DynamicServer(lambda p, x, E: vit_apply(p, x, cfg, E=E)[0],
+                         params, dims, **kw)
+
+
+# --- bucket model -------------------------------------------------------------
+
+def test_bucket_ladder_and_selection():
+    assert bucket_ladder(8) == (1, 2, 4, 8)
+    assert bucket_ladder(1) == (1,)
+    assert bucket_ladder(6) == (1, 2, 4, 6)   # non-power-of-two ceiling
+    assert bucket_for(1, 8) == 1
+    assert bucket_for(3, 8) == 4
+    assert bucket_for(8, 8) == 8
+    assert bucket_for(5, 6) == 6
+    with pytest.raises(ValueError):
+        bucket_ladder(0)
+
+
+def test_bucket_latency_monotone_and_anchored():
+    lats = [bucket_latency_ms(24.0, b, 8) for b in bucket_ladder(8)]
+    assert lats == sorted(lats)               # monotone in bucket
+    assert lats[-1] == pytest.approx(24.0)    # full bucket = profiled cost
+    assert lats[0] < 24.0                     # small bucket genuinely cheaper
+    assert lats[0] >= 24.0 * 0.3              # but pays the fixed overhead
+
+
+def test_lut_bucket_latency_columns():
+    lut = model_lut(SPACE.enumerate(), full_terms=TERMS, full_chips=256)
+    cols = lut.bucket_latencies(lut.points[0], 8)
+    assert set(cols) == {1, 2, 4, 8}
+    assert cols[8] == pytest.approx(lut.points[0].latency_ms)
+    assert cols[1] < cols[8]
+
+
+# --- bucketed serving: bit-exactness + zero cold compiles ---------------------
+
+def test_bucketed_padding_bit_exact_vs_unbucketed():
+    """A bucketed batch of k (padded to the nearest bucket) must answer
+    exactly what the unbucketed pad-to-max path answers (acceptance)."""
+    server = tiny_server(max_batch=8, timeout_ms=50.0)
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=(3, 16, 16, 3)).astype("float32")
+    server.start()
+    try:
+        futs = [server.submit(xs[i]) for i in range(3)]
+        outs = [f.get(timeout=60) for f in futs]
+    finally:
+        server.stop()
+    assert all(not o.get("cancelled") for o in outs)
+    # unbucketed baseline: same requests padded all the way to max_batch
+    padded = np.concatenate([xs, np.zeros((5, 16, 16, 3), "float32")])
+    ref = np.asarray(server.infer(padded))
+    for i, o in enumerate(outs):
+        assert np.array_equal(o["y"], ref[i])   # bit-exact, not just close
+
+
+def test_zero_cold_compiles_after_ladder_warmup():
+    x1 = np.zeros((16, 16, 3), "float32")
+    half = SubnetSpec(width_mult=0.5, ffn_mult=0.5, depth_mult=0.5)
+    server = tiny_server(max_batch=4, timeout_ms=2.0,
+                         warm_specs=[SubnetSpec(), half], example_input=x1)
+    assert server.cold_compiles == 0
+    server.start()
+    try:
+        futs = []
+        for spec in (SubnetSpec(), half, SubnetSpec()):
+            server.switch(spec)
+            for k in (1, 2, 3, 4):            # hit every bucket
+                futs += [server.submit(x1) for _ in range(k)]
+                time.sleep(0.01)
+        outs = [f.get(timeout=60) for f in futs]
+    finally:
+        server.stop()
+    assert all(not o.get("cancelled") for o in outs)
+    assert server.cold_compiles == 0          # steady state: ladder warm
+    assert all(not e["cold"] for e in server.switch_log)
+
+
+def test_unwarmed_buckets_counted_cold():
+    x1 = np.zeros((16, 16, 3), "float32")
+    server = tiny_server(max_batch=4, timeout_ms=2.0)
+    server.start()
+    try:
+        assert server.submit(x1).get(timeout=60)["y"].shape == (4,)
+    finally:
+        server.stop()
+    assert server.cold_compiles >= 1          # nothing was warmed
+
+
+def test_no_buckets_restores_pad_to_max():
+    server = tiny_server(max_batch=4, batch_buckets=False)
+    assert server.buckets == (4,)
+    assert server._bucket_for(1) == 4
+
+
+# --- pipelined dispatch -------------------------------------------------------
+
+def test_pipelined_resolution_under_stop_race():
+    """Every submitted future resolves (answered or cancelled) when stop()
+    lands mid-stream with batches in flight (acceptance)."""
+    x1 = np.zeros((16, 16, 3), "float32")
+    server = tiny_server(max_batch=2, timeout_ms=1.0, pipeline=True)
+    server.start()
+    futs = [server.submit(x1) for _ in range(40)]
+    time.sleep(0.05)                          # some batches in flight
+    server.stop()
+    outs = [f.get(timeout=10) for f in futs]
+    answered = [o for o in outs if not o.get("cancelled")]
+    cancelled = [o for o in outs if o.get("cancelled")]
+    assert len(answered) + len(cancelled) == 40
+    assert all(o["y"].shape == (4,) for o in answered)
+    assert server.served == len(answered)
+    assert server.cancelled == len(cancelled)
+
+
+def test_pipelined_resolution_under_pause_churn():
+    """Arbiter-style preempt churn (pause/resume from another thread) must
+    not lose or double-resolve futures."""
+    x1 = np.zeros((16, 16, 3), "float32")
+    server = tiny_server(max_batch=2, timeout_ms=1.0, pipeline=True)
+    server.start()
+    stop_churn = threading.Event()
+
+    def churn():
+        while not stop_churn.is_set():
+            server.pause()
+            time.sleep(0.002)
+            server.resume()
+            time.sleep(0.002)
+
+    th = threading.Thread(target=churn)
+    th.start()
+    try:
+        futs = [server.submit(x1) for _ in range(30)]
+        outs = [f.get(timeout=60) for f in futs]
+    finally:
+        stop_churn.set()
+        th.join()
+        server.stop()
+    assert all(o["y"].shape == (4,) for o in outs)   # none lost or cancelled
+    assert server.served == 30
+
+
+def test_accounting_non_overlapping_under_pipeline():
+    """busy_s integrates non-overlapping dispatch->ready intervals: it can
+    never exceed the wall-clock span of the run."""
+    x1 = np.zeros((16, 16, 3), "float32")
+    server = tiny_server(max_batch=1, timeout_ms=0.5, pipeline=True)
+    t0 = time.perf_counter()
+    server.start()
+    futs = [server.submit(x1) for _ in range(20)]
+    for f in futs:
+        f.get(timeout=60)
+    server.stop()
+    span = time.perf_counter() - t0
+    assert 0.0 < server.busy_s <= span
+    assert server.measured_energy_mj > 0.0
+
+
+# --- bounded switch log -------------------------------------------------------
+
+def test_switch_log_bounded_with_drop_counter():
+    server = tiny_server(switch_log_cap=8)
+    specs = [SubnetSpec(), SubnetSpec(width_mult=0.5)]
+    for i in range(20):
+        server.switch(specs[i % 2])
+    assert len(server.switch_log) == 8
+    assert server.switch_log_dropped == 12
+    assert server.switch_log[-1]["ms"] >= 0.0
+
+
+# --- idle behaviour -----------------------------------------------------------
+
+def test_queue_depth_ignores_wake_tokens():
+    """pause()/stop() wake tokens must not read as phantom backlog."""
+    x1 = np.zeros((16, 16, 3), "float32")
+    server = tiny_server()
+    server.pause()                            # enqueues a wake token
+    assert server.queue_depth() == 0
+    futs = [server.submit(x1) for _ in range(3)]
+    assert server.queue_depth() == 3
+    server.stop()
+    assert all(f.get(timeout=5)["cancelled"] for f in futs)
+    assert server.queue_depth() == 0
+
+
+def test_idle_server_serves_immediately_after_wait():
+    """The worker blocks on the queue (no poll loop): a request after a
+    long idle period is still picked up promptly."""
+    x1 = np.zeros((16, 16, 3), "float32")
+    server = tiny_server(max_batch=4, timeout_ms=1.0)
+    server.start()
+    try:
+        time.sleep(0.3)                       # idle: worker parked on get()
+        out = server.submit(x1).get(timeout=60)
+        assert out["y"].shape == (4,)
+    finally:
+        server.stop()
+
+
+# --- batching-aware service model in the simulator ----------------------------
+
+def _cmp_sim(service_model):
+    from repro.traffic import SHED, SLO_POLICY, SLOClass, poisson, simulate
+    classes = [SLOClass("rt", deadline_ms=8.0, priority=1,
+                        drop_policy=SHED, service_frac=0.8)]
+    lut = model_lut(SPACE.enumerate(), full_terms=TERMS, full_chips=256)
+    streams = {"rt": poisson(400.0, 6.0, seed=4)}
+    g = lambda t: GlobalConstraints(total_chips=256)
+    return simulate(classes, {"rt": lut}, streams, g,
+                    policy=SLO_POLICY, service_model=service_model)
+
+
+def test_simulate_bucketed_beats_padded_at_low_occupancy():
+    from repro.traffic import BUCKETED_SERVICE, PADDED_SERVICE
+    bkt = _cmp_sim(BUCKETED_SERVICE)
+    pad = _cmp_sim(PADDED_SERVICE)
+    assert bkt.classes["rt"].mean_batch <= 4.0        # low occupancy
+    assert bkt.total_goodput >= 1.25 * max(pad.total_goodput, 1)
+    assert bkt.classes["rt"].p(95) <= pad.classes["rt"].p(95)
+    # deterministic: same seeds, same model => same report
+    assert bkt.summary() == _cmp_sim(BUCKETED_SERVICE).summary()
