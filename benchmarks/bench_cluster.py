@@ -1,0 +1,152 @@
+"""Cluster layer: multi-node scale-out, routing policies, and admission.
+
+Three experiments, all on seeded traces through the REAL per-node
+arbiters via the virtual-time cluster simulator (deterministic —
+rerunning reproduces every routing decision bit-for-bit):
+
+* **scale-out** — one overloaded SHED class replayed against 1, 2 and 4
+  identical 64-chip nodes.  One node saturates (~380 rps of bucketed
+  capacity); two must deliver >= 1.7x its goodput on the SAME trace
+  (asserted — near-linear scaling is the cluster's reason to exist);
+* **skewed capacity** — a 256-chip node next to a 64-chip node (4:1)
+  under a never-drop class.  Round-robin keeps feeding the slow node
+  half the traffic and its queue (and the class p95) explodes;
+  power-of-two-choices reads the backlog-per-chip signal and must hold
+  p95 at-or-below round-robin's (asserted — the routing headline);
+* **admission** — a latency class whose minimal share needs more chips
+  than any small node has: `cluster_admission` must raise
+  `AdmissionError` on a small-node-only cluster and admit the SAME class
+  once a big node joins (asserted — scaling out turns rejects into
+  placements).
+
+    PYTHONPATH=src python benchmarks/bench_cluster.py [--smoke]
+"""
+from __future__ import annotations
+
+from repro.cluster import (P2C, ROUND_ROBIN, ClusterNode, cluster_admission,
+                           simulate_cluster)
+from repro.core.types import ElasticSpace
+from repro.runtime import AdmissionError, GlobalConstraints, model_lut
+from repro.runtime import hwmodel as hm
+from repro.traffic import DEGRADE, SHED, SLOClass, poisson
+
+FULL_CHIPS = 256
+INTERVAL_S = 0.1
+
+SPACE = ElasticSpace(width_mults=(0.5, 0.75, 1.0), ffn_mults=(0.5, 1.0),
+                     depth_mults=(0.5, 1.0))
+_REF_TERMS = hm.RooflineTerms(t_compute=0.02, t_memory=0.008,
+                              t_collective=0.004)
+
+
+def make_lut(scale: float = 1.0):
+    terms = hm.RooflineTerms(_REF_TERMS.t_compute * scale,
+                             _REF_TERMS.t_memory * scale,
+                             _REF_TERMS.t_collective * scale)
+    return model_lut(SPACE.enumerate(), full_terms=terms,
+                     full_chips=FULL_CHIPS)
+
+
+def make_nodes(capacities):
+    """Homogeneous-or-not node fleet: one g_fn per chip capacity."""
+    return [ClusterNode(name=f"n{i}",
+                        g_fn=lambda t, c=cap: GlobalConstraints(total_chips=c))
+            for i, cap in enumerate(capacities)]
+
+
+def scale_out(horizon_s: float):
+    """One seeded overloaded trace vs 1/2/4-node clusters (p2c)."""
+    cls = [SLOClass("api", deadline_ms=200.0, priority=2, drop_policy=SHED)]
+    luts = {"api": make_lut()}
+    stream = poisson(1000.0, horizon_s, seed=1)
+    out = {}
+    for n in (1, 2, 4):
+        rep = simulate_cluster(cls, luts, {"api": list(stream)},
+                               make_nodes([64] * n), router=P2C,
+                               interval_s=INTERVAL_S)
+        out[n] = rep
+    return out
+
+
+def skewed_routing(horizon_s: float):
+    """4:1 skewed capacity (256 + 64 chips), p2c vs round-robin on the
+    same trace.  DEGRADE (never shed) so queueing shows up in p95."""
+    cls = [SLOClass("web", deadline_ms=200.0, priority=2,
+                    drop_policy=DEGRADE)]
+    luts = {"web": make_lut()}
+    stream = poisson(1000.0, horizon_s, seed=2)
+    out = {}
+    for router in (P2C, ROUND_ROBIN):
+        rep = simulate_cluster(cls, luts, {"web": list(stream)},
+                               make_nodes([256, 64]), router=router,
+                               interval_s=INTERVAL_S)
+        out[router] = rep
+    return out
+
+
+def admission_scaling():
+    """A 10ms class fits only a 256-chip node's headroom: rejected by a
+    small-node cluster, admitted once a big node joins."""
+    lut = make_lut()
+    target_ms = 10.0
+    small = make_nodes([64, 64])
+    try:
+        cluster_admission(small, lut, target_ms, priority=2)
+        raise AssertionError("10ms class admitted on 64-chip nodes")
+    except AdmissionError:
+        pass
+    placed = cluster_admission(make_nodes([64, 64, 256]), lut, target_ms,
+                               priority=2)
+    assert placed == ["n2"], placed
+    return placed
+
+
+def run(smoke: bool = False):
+    horizon_s = 8.0 if smoke else 24.0
+    rows = []
+
+    # --- scale-out ---------------------------------------------------------
+    scaled = scale_out(horizon_s)
+    for n, rep in scaled.items():
+        s = rep.classes["api"]
+        rows.append((f"cluster/scale/{n}_node/goodput", s.good,
+                     f"p95_ms={round(s.p(95), 1)} dropped={s.dropped} "
+                     f"submitted={s.submitted}"))
+    g1 = scaled[1].classes["api"].good
+    g2 = scaled[2].classes["api"].good
+    g4 = scaled[4].classes["api"].good
+    rows.append(("cluster/scale/2_node_speedup", g2 / max(g1, 1),
+                 f"goodput {g2} vs {g1} (4-node: {g4})"))
+    assert g2 >= 1.7 * g1, (
+        f"2-node goodput {g2} < 1.7x 1-node {g1} (acceptance)")
+    assert g4 >= g2, f"4-node goodput {g4} regressed vs 2-node {g2}"
+
+    # --- skewed-capacity routing ------------------------------------------
+    skew = skewed_routing(horizon_s)
+    p95 = {}
+    for router, rep in skew.items():
+        s = rep.classes["web"]
+        p95[router] = s.p(95)
+        rows.append((f"cluster/skew/{router}/p95_ms", s.p(95),
+                     f"goodput={s.good} routed={rep.routed['web']}"))
+    assert p95[P2C] <= p95[ROUND_ROBIN], (
+        f"p2c p95 {p95[P2C]:.1f}ms > round-robin {p95[ROUND_ROBIN]:.1f}ms "
+        f"under 4:1 skew (acceptance)")
+    assert (skew[P2C].classes["web"].good
+            >= skew[ROUND_ROBIN].classes["web"].good), "p2c goodput regressed"
+
+    # --- admission across cluster sizes -----------------------------------
+    placed = admission_scaling()
+    rows.append(("cluster/admission/placements_after_scaleout", len(placed),
+                 "AdmissionError on 2x64-chip nodes; admitted on +256"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short horizon (fast CI path)")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
+        print(",".join(str(c) for c in r))

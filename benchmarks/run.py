@@ -6,7 +6,8 @@ scalar of each row: wall-clock us, energy, %, or roofline time).
 ``--json PATH`` additionally writes the rows as machine-readable JSON
 (``{"suites": {title: [{"name", "value", "derived"}]}, ...}``) so the
 perf trajectory accumulates across PRs (BENCH_<n>.json files at the repo
-root; BENCH_3.json records the bucketed-vs-padded serving comparison).
+root; BENCH_3.json records the bucketed-vs-padded serving comparison,
+BENCH_4.json the cluster scale-out and p2c-vs-round-robin routing).
 """
 from __future__ import annotations
 
@@ -18,6 +19,7 @@ import traceback
 
 def main() -> None:
     import benchmarks.bench_arbiter as ba
+    import benchmarks.bench_cluster as bc
     import benchmarks.bench_governor as bg
     import benchmarks.bench_kernels as bk
     import benchmarks.bench_pareto as bp
@@ -38,6 +40,8 @@ def main() -> None:
         ("arbiter (multi-workload vs independent governors)", ba.run),
         ("traffic (SLO admission+preemption vs FIFO; bucketed vs padded)",
          lambda: bt.run(smoke=args.smoke)),
+        ("cluster (multi-node scale-out, p2c vs round-robin, admission)",
+         lambda: bc.run(smoke=args.smoke)),
         ("switching (paper: runtime architecture switching)", bs.run),
         ("kernels (elastic matmul / flash attention)", bk.run),
         ("roofline (dry-run derived)", rt.rows),

@@ -1,0 +1,244 @@
+"""Live cluster front-end: N arbiter-governed nodes behind one router.
+
+:class:`Cluster` composes :class:`~repro.cluster.node.ClusterNode`s into
+a single serving surface:
+
+* **register** runs cluster-level admission (:func:`cluster_admission`)
+  and places the class on every node that can host its minimal share —
+  one DynamicServer replica per placement, built by the caller's
+  ``make_server(node)`` factory;
+* **submit** routes one request to a placement via the
+  :class:`~repro.cluster.router.ClusterRouter` (p2c by default) and
+  returns the replica server's future — callers never see nodes;
+* **drain** stops routing to a node, waits for its backlog to resolve,
+  migrates its tenant registrations to surviving nodes (the arbiter's
+  :meth:`export_tenant` hook), and stops it;
+* **fail** is fail-stop: every queued request on the dead node resolves
+  with an error payload (:meth:`DynamicServer.kill`) and orphaned
+  classes are re-admitted elsewhere, so the class's share is
+  re-arbitrated instead of lost.
+
+Duck-types the ``arbiter`` argument of :func:`repro.traffic.drive_live`
+(``start``/``stop``/``summary``) and serves class ports that duck-type
+its ``servers`` dict, so the existing live driver drives a whole
+cluster unchanged.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.cluster.admission import cluster_admission
+from repro.cluster.node import DEAD, DRAINED, DRAINING, UP, ClusterNode
+from repro.cluster.router import P2C, ClusterRouter
+from repro.runtime.arbiter import AdmissionError
+from repro.runtime.engine import DynamicServer
+from repro.runtime.lut import LUT
+
+
+class _ClassPort:
+    """Submit-side view of one class: what drive_live treats as a server."""
+
+    def __init__(self, cluster: "Cluster", name: str):
+        self._cluster = cluster
+        self._name = name
+
+    def submit(self, x) -> "queue.Queue":
+        return self._cluster.submit(self._name, x)
+
+
+def _dead_future(reason: str) -> "queue.Queue":
+    fut: "queue.Queue" = queue.Queue(maxsize=1)
+    fut.put({"y": None, "cancelled": True, "error": reason,
+             "latency_ms": 0.0, "subnet": None})
+    return fut
+
+
+class Cluster:
+    def __init__(self, nodes: Sequence[ClusterNode], *,
+                 router: str = P2C, router_seed: int = 0):
+        if not nodes:
+            raise ValueError("a cluster needs at least one node")
+        names = [n.name for n in nodes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate node names: {names}")
+        self.nodes: Dict[str, ClusterNode] = {n.name: n for n in nodes}
+        self.router = ClusterRouter(router, seed=router_seed)
+        # _lock guards the routing state (placements, router picks) and is
+        # only ever held briefly; _admin_lock serialises lifecycle work
+        # (register/drain/fail) whose slow parts — thread joins, server
+        # construction/warmup — must NOT stall submits to healthy nodes
+        self._lock = threading.RLock()
+        self._admin_lock = threading.RLock()
+        # class -> registration info needed to re-place it (migration)
+        self._classes: Dict[str, dict] = {}
+        self.placements: Dict[str, List[str]] = {}
+        self._t0: Optional[float] = None
+
+    # --- time / state -------------------------------------------------------
+
+    def _now(self) -> float:
+        return 0.0 if self._t0 is None else time.perf_counter() - self._t0
+
+    def _routable(self, name: str) -> List[ClusterNode]:
+        return [self.nodes[nn] for nn in self.placements.get(name, ())
+                if self.nodes[nn].routable]
+
+    # --- registration / admission -------------------------------------------
+
+    def register(self, name: str, lut: LUT, target_latency_ms: float, *,
+                 priority: int = 0, min_accuracy: Optional[float] = None,
+                 make_server: Optional[
+                     Callable[[ClusterNode], DynamicServer]] = None
+                 ) -> List[str]:
+        """Admit + place one class cluster-wide.
+
+        Raises :class:`AdmissionError` when NO node's headroom fits the
+        class's minimal share; otherwise registers a replica on every
+        node that can host it and returns the placement list.
+        """
+        with self._admin_lock:
+            if name in self._classes:
+                raise ValueError(f"class {name!r} already registered")
+            info = dict(lut=lut, target_latency_ms=target_latency_ms,
+                        priority=priority, min_accuracy=min_accuracy,
+                        make_server=make_server)
+            placed = cluster_admission(
+                list(self.nodes.values()), lut, target_latency_ms,
+                priority=priority, min_accuracy=min_accuracy, t=self._now())
+            for nn in placed:
+                self._place_on(name, info, self.nodes[nn])
+            with self._lock:
+                self._classes[name] = info
+                self.placements[name] = list(placed)
+            return list(placed)
+
+    def _place_on(self, name: str, info: dict, node: ClusterNode):
+        server = (info["make_server"](node) if info["make_server"] else None)
+        node.arbiter.register(name, info["lut"], info["target_latency_ms"],
+                              priority=info["priority"],
+                              min_accuracy=info["min_accuracy"],
+                              server=server)
+        if server is not None:
+            node.servers[name] = server
+
+    def _readmit_orphans(self):
+        """Re-place classes whose every replica died/drained away — the
+        failed node's share is re-arbitrated on the survivors.  Caller
+        holds _admin_lock; server construction runs outside the routing
+        lock so healthy-node submits keep flowing."""
+        with self._lock:
+            orphans = [(name, info) for name, info in self._classes.items()
+                       if not self.placements.get(name)]
+        for name, info in orphans:
+            try:
+                placed = cluster_admission(
+                    [n for n in self.nodes.values()
+                     if name not in n.arbiter.tenants()],
+                    info["lut"], info["target_latency_ms"],
+                    priority=info["priority"],
+                    min_accuracy=info["min_accuracy"], t=self._now())
+            except AdmissionError:
+                continue   # nowhere to go; submits resolve with errors
+            for nn in placed:
+                self._place_on(name, info, self.nodes[nn])
+            with self._lock:
+                self.placements[name] = list(placed)
+
+    # --- request path -------------------------------------------------------
+
+    def submit(self, name: str, x) -> "queue.Queue":
+        with self._lock:
+            cands = self._routable(name)
+            node = self.router.pick(name, cands, t=self._now()) \
+                if cands else None
+        if node is None:
+            return _dead_future(f"class {name!r}: no routable node")
+        server = node.servers.get(name)
+        if server is None:
+            return _dead_future(f"class {name!r}: node {node.name} "
+                                f"has no server replica")
+        return server.submit(x)
+
+    def port(self, name: str) -> _ClassPort:
+        return _ClassPort(self, name)
+
+    def ports(self) -> Dict[str, _ClassPort]:
+        """``{class: submit-proxy}`` — drive_live's ``servers`` dict."""
+        return {name: _ClassPort(self, name) for name in self._classes}
+
+    # --- lifecycle ----------------------------------------------------------
+
+    def start(self, g_fn=None):
+        """Start every node's constraint clock (``g_fn`` is accepted for
+        drive_live compatibility; nodes use their own ``g_fn(t)``)."""
+        self._t0 = time.perf_counter()
+        for node in self.nodes.values():
+            if node.alive:
+                node.arbiter.start(lambda n=node: n.g(self._now()))
+
+    def stop(self):
+        for node in self.nodes.values():
+            if node.alive:
+                node.arbiter.stop()
+
+    def drain(self, node_name: str, timeout_s: float = 30.0) -> bool:
+        """Graceful node removal: stop routing, let the backlog resolve
+        (each replica's :meth:`DynamicServer.drain`), migrate tenant
+        registrations to survivors, stop the node."""
+        node = self.nodes[node_name]
+        with self._admin_lock:
+            with self._lock:
+                if node.state != UP:
+                    return False
+                node.state = DRAINING   # router skips it from here on
+            deadline = time.perf_counter() + timeout_s
+            drained = True
+            for server in node.servers.values():
+                # refuses racing submits, waits its backlog out, stops
+                drained &= server.drain(
+                    timeout_s=max(0.1, deadline - time.perf_counter()))
+            for name in node.arbiter.tenants():
+                # the servers are already stopped; export keeps the (now
+                # empty) registration out of the arbiter's stop path
+                node.arbiter.export_tenant(name)
+                with self._lock:
+                    if node_name in self.placements.get(name, ()):
+                        self.placements[name].remove(node_name)
+            node.arbiter.stop()
+            with self._lock:
+                node.state = DRAINED
+            self._readmit_orphans()
+        return drained
+
+    def fail(self, node_name: str, reason: str = "node failed") -> None:
+        """Fail-stop a node NOW: queued requests resolve with ``reason``
+        error payloads; orphaned classes re-arbitrate elsewhere."""
+        node = self.nodes[node_name]
+        with self._admin_lock:
+            with self._lock:
+                if node.state == DEAD:
+                    return
+                node.state = DEAD       # router skips it immediately
+                for name in list(self.placements):
+                    if node_name in self.placements[name]:
+                        self.placements[name].remove(node_name)
+            # slow half (thread joins) runs outside the routing lock
+            for server in node.servers.values():
+                server.kill(reason)
+            node.arbiter.stop()
+            self._readmit_orphans()
+
+    # --- accounting ---------------------------------------------------------
+
+    def summary(self) -> dict:
+        return {
+            "router": self.router.policy,
+            "placements": {n: list(p) for n, p in self.placements.items()},
+            "routed": self.router.routed_counts(),
+            "nodes": {nn: {"state": node.state,
+                           "arbiter": node.arbiter.summary()}
+                      for nn, node in self.nodes.items()},
+        }

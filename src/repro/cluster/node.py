@@ -1,0 +1,79 @@
+"""One serving node: a ResourceArbiter + its DynamicServers + lifecycle.
+
+A :class:`ClusterNode` is exactly the single-device stack PRs 1-3 built
+(water-filling arbiter, SLO-registered tenants, bucketed serving
+engines), wrapped with what the cluster front-end needs:
+
+* a **load signal** — the arbiter's summed queue-depth + arrival-rate
+  EWMA backlog, normalised by the node's chip count, so the router can
+  compare a busy small node against an idle big one;
+* a **lifecycle state** — UP (routable), DRAINING (stop routing, keep
+  serving until the queues empty), DRAINED (tenants migrated away), and
+  DEAD (fail-stop: queued work resolves with error payloads).
+
+The same object backs both the live front-end (:mod:`.frontend`) and
+the virtual-time simulator (:mod:`.sim`); ``g_fn(t)`` yields the node's
+machine state at virtual/elapsed time ``t`` (heterogeneous clusters are
+just nodes with different ``g_fn``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+from repro.runtime.arbiter import (GlobalConstraints, Headroom,
+                                   ResourceArbiter)
+from repro.runtime.engine import DynamicServer
+
+# lifecycle states
+UP = "up"
+DRAINING = "draining"   # no new routes; queues serve to empty
+DRAINED = "drained"     # graceful exit complete, tenants migrated
+DEAD = "dead"           # fail-stop: queued requests resolve with errors
+NODE_STATES = (UP, DRAINING, DRAINED, DEAD)
+
+
+@dataclasses.dataclass
+class ClusterNode:
+    """One arbiter-governed machine inside the cluster."""
+    name: str
+    g_fn: Callable[[float], GlobalConstraints]
+    arbiter: ResourceArbiter = dataclasses.field(
+        default_factory=ResourceArbiter)
+    servers: Dict[str, DynamicServer] = dataclasses.field(
+        default_factory=dict)
+    state: str = UP
+
+    @property
+    def routable(self) -> bool:
+        """May the router send NEW traffic here?"""
+        return self.state == UP
+
+    @property
+    def alive(self) -> bool:
+        """Does the node still serve (routable or draining)?"""
+        return self.state in (UP, DRAINING)
+
+    def g(self, t: float = 0.0) -> GlobalConstraints:
+        return self.g_fn(t)
+
+    def load(self, t: float = 0.0, extra_backlog: float = 0.0) -> float:
+        """Backlog per chip — the router's comparison key.
+
+        The numerator is the arbiter's summed per-tenant backlog (queue
+        depth + arrival-rate EWMA, refreshed each arbitration) plus any
+        ``extra_backlog`` the caller tracks between ticks (the simulator
+        passes this-epoch arrivals); the denominator makes a half-full
+        small node rank busier than a half-full big one, which is what
+        lets power-of-two-choices exploit skewed capacity.
+        """
+        chips = max(1, self.g(t).total_chips)
+        return (self.arbiter.total_backlog() + extra_backlog) / chips
+
+    def headroom(self, t: float = 0.0) -> Headroom:
+        """Unreserved capacity after tenant minimal shares (admission)."""
+        return self.arbiter.headroom(self.g(t))
+
+    def outstanding(self) -> int:
+        """Unresolved futures across this node's servers (live drain)."""
+        return sum(s.outstanding() for s in self.servers.values())

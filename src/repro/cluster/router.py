@@ -1,0 +1,84 @@
+"""Cluster request routing: round-robin, least-loaded, power-of-two.
+
+The router spreads ONE SLO class's traffic across the nodes where that
+class is placed.  Three policies, all deterministic under a fixed seed:
+
+* ``round_robin``   — cycle the routable placements; ignores load.  The
+  baseline: under skewed node capacity it keeps feeding the slow node
+  its full share and the slow node's queue (and the class p95) explodes;
+* ``least_loaded``  — always the minimum :meth:`ClusterNode.load`
+  (backlog per chip).  Optimal signal use, but every front-end choosing
+  the same minimum herds onto one node between signal refreshes;
+* ``p2c``           — power-of-two-choices (Mitzenmacher 2001): sample
+  two distinct candidates with a seeded rng, send to the less loaded.
+  Near-least-loaded tail behaviour without the herding, and the default.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cluster.node import ClusterNode
+
+P2C = "p2c"
+LEAST_LOADED = "least_loaded"
+ROUND_ROBIN = "round_robin"
+ROUTERS = (P2C, LEAST_LOADED, ROUND_ROBIN)
+
+
+class ClusterRouter:
+    """Per-class routing decisions over routable placements.
+
+    ``decisions`` logs every pick as ``(t, class, node)`` — the cluster
+    determinism tests compare it across runs, and :meth:`routed_counts`
+    aggregates it for reports.
+    """
+
+    def __init__(self, policy: str = P2C, *, seed: int = 0,
+                 decision_log_cap: int = 1 << 20):
+        if policy not in ROUTERS:
+            raise ValueError(f"router {policy!r} not in {ROUTERS}")
+        self.policy = policy
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+        self._rr: dict = {}            # per-class round-robin cursor
+        self.decisions: List[Tuple[float, str, str]] = []
+        self.decision_log_cap = decision_log_cap
+        self.decisions_dropped = 0
+        self.routed: dict = {}         # class -> node -> count
+
+    def pick(self, cls_name: str, candidates: Sequence[ClusterNode], *,
+             t: float = 0.0,
+             load_fn: Optional[Callable[[ClusterNode], float]] = None
+             ) -> Optional[ClusterNode]:
+        """Choose a node for one request of ``cls_name`` (None: nowhere
+        to go — every placement is draining or dead)."""
+        cands = [n for n in candidates if n.routable]
+        if not cands:
+            return None
+        load = load_fn if load_fn is not None else (lambda n: n.load(t))
+        if len(cands) == 1:
+            node = cands[0]
+        elif self.policy == ROUND_ROBIN:
+            i = self._rr.get(cls_name, 0)
+            node = cands[i % len(cands)]
+            self._rr[cls_name] = i + 1
+        elif self.policy == LEAST_LOADED:
+            # stable: ties go to the earliest candidate
+            node = min(cands, key=load)
+        else:   # P2C
+            i, j = self._rng.choice(len(cands), size=2, replace=False)
+            a, b = cands[int(i)], cands[int(j)]
+            node = a if load(a) <= load(b) else b
+        if len(self.decisions) < self.decision_log_cap:
+            self.decisions.append((t, cls_name, node.name))
+        else:
+            self.decisions_dropped += 1
+        per_cls = self.routed.setdefault(cls_name, {})
+        per_cls[node.name] = per_cls.get(node.name, 0) + 1
+        return node
+
+    def routed_counts(self) -> dict:
+        """``{class: {node: requests_routed}}`` for reports."""
+        return {c: dict(m) for c, m in self.routed.items()}

@@ -1,0 +1,321 @@
+"""Deterministic virtual-time cluster simulation.
+
+Mirrors :func:`repro.traffic.driver.simulate` — the same constraint-clock
+epochs, SLO policies, batching-aware service model and per-class
+accounting — but over N :class:`ClusterNode`s with a
+:class:`ClusterRouter` in front:
+
+* each arrival is routed (p2c / least-loaded / round-robin) among the
+  routable nodes of its class's placement set, using the per-node
+  backlog-per-chip signal the arbiters already track;
+* every node runs its OWN real :class:`ResourceArbiter` — per-node
+  admission, water-filling, preemption and set_active are all exercised,
+  exactly as in the single-node simulator;
+* node lifecycle is scriptable: ``drain_at`` stops routing to a node and
+  migrates its tenants once its queues empty; ``fail_at`` is fail-stop —
+  queued requests resolve as ``failed`` and orphaned classes re-admit on
+  the survivors (share re-arbitrated elsewhere).
+
+Everything is seeded (arrival streams + router rng), so one trace under
+two routing policies — or the same trace twice — is an exact,
+reproducible comparison: the determinism tests assert identical routing
+``decisions`` and :class:`ClusterReport` summaries across runs.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.cluster.node import DEAD, DRAINED, DRAINING, UP, ClusterNode
+from repro.cluster.router import P2C, ClusterRouter
+from repro.runtime.lut import LUT
+from repro.traffic import arrivals as arr
+from repro.traffic.driver import (BUCKETED_SERVICE, POLICIES, SERVICE_MODELS,
+                                  SLO_POLICY, FIFO_POLICY, ClassStats,
+                                  _service_ms)
+from repro.traffic.slo import DEGRADE, SHED, SLOClass
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    """One cluster run: per-class stats + per-node view + routing log."""
+    policy: str
+    router: str
+    classes: Dict[str, ClassStats]
+    nodes: Dict[str, dict]
+    decisions: List[Tuple[float, str, str]]
+    routed: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_goodput(self) -> int:
+        return sum(s.good for s in self.classes.values())
+
+    @property
+    def total_dropped(self) -> int:
+        return sum(s.dropped for s in self.classes.values())
+
+    @property
+    def total_failed(self) -> int:
+        return sum(s.failed for s in self.classes.values())
+
+    def summary(self) -> dict:
+        return {"policy": self.policy, "router": self.router,
+                "total_goodput": self.total_goodput,
+                "total_dropped": self.total_dropped,
+                "total_failed": self.total_failed,
+                "classes": {n: s.summary()
+                            for n, s in self.classes.items()},
+                "routed": self.routed,
+                "nodes": self.nodes}
+
+
+def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
+                     streams: Dict[str, Sequence[float]],
+                     nodes: Sequence[ClusterNode], *,
+                     router: str = P2C, router_seed: int = 0,
+                     interval_s: float = 0.1, policy: str = SLO_POLICY,
+                     service_model: str = BUCKETED_SERVICE,
+                     max_drain_s: float = 120.0,
+                     fail_at: Optional[Dict[str, float]] = None,
+                     drain_at: Optional[Dict[str, float]] = None
+                     ) -> ClusterReport:
+    """Run one seeded trace through the cluster in virtual time.
+
+    ``nodes`` must be freshly-built (their arbiters get the class
+    registrations).  ``fail_at``/``drain_at`` map node names to the
+    virtual second their lifecycle event lands (processed on the next
+    epoch boundary; a failing node stops COMPLETING batches at the exact
+    fail instant — work that would finish after it is left queued and
+    resolves as ``failed``).
+    """
+    assert policy in POLICIES, policy
+    assert service_model in SERVICE_MODELS, service_model
+    by_class = {c.name: c for c in classes}
+    stats = {c.name: ClassStats() for c in classes}
+    nodes = list(nodes)
+    by_node = {n.name: n for n in nodes}
+    rtr = ClusterRouter(router, seed=router_seed)
+    fail_at = dict(fail_at or {})
+    drain_at = dict(drain_at or {})
+
+    # --- cluster admission + placement (mirrors _register_classes) ---------
+    placements: Dict[str, List[str]] = {}
+    for c in classes:
+        placed: List[str] = []
+        for node in nodes:
+            if policy == FIFO_POLICY:
+                node.arbiter.register(c.name, luts[c.name],
+                                      c.service_target_ms, priority=0)
+                placed.append(node.name)
+                continue
+            ok = node.arbiter.admission_check(
+                luts[c.name], c.service_target_ms, node.g(0.0),
+                priority=c.priority, min_accuracy=c.min_accuracy)
+            if ok is not None:
+                node.arbiter.register(c.name, luts[c.name],
+                                      c.service_target_ms,
+                                      priority=c.priority,
+                                      min_accuracy=c.min_accuracy)
+                placed.append(node.name)
+        if not placed and policy == SLO_POLICY and c.drop_policy == DEGRADE:
+            # never drop: serve best-effort everywhere at the relaxed target
+            for node in nodes:
+                node.arbiter.register(c.name, luts[c.name],
+                                      c.degraded_target_ms,
+                                      priority=c.priority)
+                placed.append(node.name)
+        placements[c.name] = placed
+    # distinguishes "admission never placed it" (rejected) from "its
+    # placements died mid-trace and nobody re-admitted it" (dropped)
+    admitted0 = {cn: bool(p) for cn, p in placements.items()}
+
+    def readmit_orphans():
+        """A class whose every placement died/drained re-arbitrates its
+        share on whichever survivors can host its minimal share."""
+        if policy != SLO_POLICY:
+            return
+        for c in classes:
+            if placements[c.name]:
+                continue
+            for node in nodes:
+                if not node.routable or c.name in node.arbiter.tenants():
+                    continue
+                ok = node.arbiter.admission_check(
+                    luts[c.name], c.service_target_ms, node.g(t),
+                    priority=c.priority, min_accuracy=c.min_accuracy)
+                if ok is not None:
+                    node.arbiter.register(c.name, luts[c.name],
+                                          c.service_target_ms,
+                                          priority=c.priority,
+                                          min_accuracy=c.min_accuracy)
+                    placements[c.name].append(node.name)
+
+    events = arr.merge({n: ts for n, ts in streams.items()})
+    queues = {n.name: {c.name: collections.deque() for c in classes}
+              for n in nodes}
+    busy_until = {n.name: {c.name: 0.0 for c in classes} for n in nodes}
+    arrived_epoch = {n.name: {c.name: 0 for c in classes} for n in nodes}
+    last_arrival = events[-1][0] if events else 0.0
+
+    def svc_of(allocs):
+        return {n: (a.point.latency_ms if a.point is not None else None)
+                for n, a in allocs.items()}
+
+    ei = 0
+    t = 0.0
+    while True:
+        alive = [n for n in nodes if n.alive]
+        backlog = ei < len(events) or any(
+            q for n in alive for q in queues[n.name].values())
+        in_flight = any(b > t for n in alive
+                        for b in busy_until[n.name].values())
+        if not backlog and not in_flight:
+            break
+        if t > last_arrival + max_drain_s:
+            break   # safety: leftover queues flushed as dropped below
+
+        # --- lifecycle events (epoch boundary) ------------------------------
+        for nn, td in drain_at.items():
+            if by_node[nn].state == UP and t >= td:
+                by_node[nn].state = DRAINING
+        for nn, tf in fail_at.items():
+            node = by_node[nn]
+            if node.state != DEAD and t >= tf:
+                node.state = DEAD
+                for cn, q in queues[nn].items():
+                    stats[cn].failed += len(q)   # error payloads, not lost
+                    q.clear()
+                    busy_until[nn][cn] = 0.0
+                for cn in placements:
+                    if nn in placements[cn]:
+                        placements[cn].remove(nn)
+                readmit_orphans()
+        for node in nodes:
+            nn = node.name
+            if node.state == DRAINING and not any(
+                    queues[nn].values()) and not any(
+                    b > t for b in busy_until[nn].values()):
+                # queues emptied: migrate the registrations off the node
+                node.state = DRAINED
+                for cn in node.arbiter.tenants():
+                    node.arbiter.export_tenant(cn)
+                    if nn in placements.get(cn, ()):
+                        placements[cn].remove(nn)
+                readmit_orphans()
+
+        # --- per-node arbitration with backlog signals ----------------------
+        allocs: Dict[str, dict] = {}
+        svc: Dict[str, dict] = {}
+        for node in nodes:
+            if not node.alive:
+                continue
+            nn = node.name
+            for cn in node.arbiter.tenants():
+                q = queues[nn][cn]
+                node.arbiter.set_active(
+                    cn, bool(q) or busy_until[nn][cn] > t,
+                    queue_depth=len(q),
+                    arrival_rate_rps=arrived_epoch[nn][cn] / interval_s)
+                arrived_epoch[nn][cn] = 0
+            allocs[nn] = node.arbiter.tick(node.g(t))
+            svc[nn] = svc_of(allocs[nn])
+        t_next = t + interval_s
+
+        # --- route + admit/shed this epoch's arrivals -----------------------
+        while ei < len(events) and events[ei][0] < t_next:
+            ta, cn = events[ei]
+            ei += 1
+            c = by_class[cn]
+            st = stats[cn]
+            st.submitted += 1
+            if not placements[cn]:
+                if admitted0[cn]:
+                    st.dropped += 1   # lost its nodes to failures/drains
+                else:
+                    st.rejected += 1  # admission never placed the class
+                continue
+            cands = [by_node[nn] for nn in placements[cn]]
+            node = rtr.pick(
+                cn, cands, t=ta,
+                load_fn=lambda nd: nd.load(
+                    ta, extra_backlog=sum(arrived_epoch[nd.name].values())))
+            if node is None:
+                st.dropped += 1     # placements exist but none routable
+                continue
+            nn = node.name
+            arrived_epoch[nn][cn] += 1
+            if policy == SLO_POLICY and svc[nn].get(cn) is None:
+                # arrival for a class holding no slice on its node:
+                # preempt NOW, mid-cycle, exactly as the single-node path
+                node.arbiter.preempt(cn, node.g(ta))
+                allocs[nn] = node.arbiter.last_alloc
+                svc[nn] = svc_of(allocs[nn])
+            if (policy == SLO_POLICY and c.drop_policy == SHED
+                    and svc[nn].get(cn) is not None):
+                q_len = len(queues[nn][cn])
+                occ = min(q_len + 1, c.max_batch)
+                batch_ms = _service_ms(svc[nn][cn], occ, c.max_batch,
+                                       service_model)
+                n_batches = math.ceil((q_len + 1) / c.max_batch)
+                eta_ms = (max(0.0, busy_until[nn][cn] - ta) * 1e3
+                          + n_batches * batch_ms)
+                if eta_ms > c.deadline_ms:
+                    st.dropped += 1   # predicted miss: shed on arrival
+                    continue
+            queues[nn][cn].append(ta)
+
+        # --- serve each node's queues in batches ----------------------------
+        for node in nodes:
+            if not node.alive:
+                continue
+            nn = node.name
+            dies = fail_at.get(nn, math.inf)
+            for cn, q in queues[nn].items():
+                s_ms = svc.get(nn, {}).get(cn)
+                if s_ms is None:
+                    continue   # starved this epoch; queue waits
+                c = by_class[cn]
+                st = stats[cn]
+                while q:
+                    start = max(q[0], busy_until[nn][cn], t)
+                    if start >= t_next:
+                        break
+                    k = 0
+                    for ta in q:
+                        if ta <= start and k < c.max_batch:
+                            k += 1
+                        else:
+                            break
+                    k = max(k, 1)
+                    done = start + _service_ms(s_ms, k, c.max_batch,
+                                               service_model) / 1e3
+                    if done > dies:
+                        break   # the node dies first: fail_at errors these
+                    busy_until[nn][cn] = done
+                    st.batches += 1
+                    st.batch_occupancy += k
+                    for _ in range(k):
+                        ta = q.popleft()
+                        lat_ms = (done - ta) * 1e3
+                        st.completed += 1
+                        st.latencies_ms.append(lat_ms)
+                        if lat_ms <= c.deadline_ms:
+                            st.good += 1
+        t = t_next
+
+    for node in nodes:
+        for cn, q in queues[node.name].items():
+            if node.state == DEAD:
+                stats[cn].failed += len(q)
+            else:
+                stats[cn].dropped += len(q)   # unserved within the horizon
+            q.clear()
+    node_view = {n.name: {"state": n.state,
+                          "capacity_chips": n.g(t).total_chips,
+                          "arbiter": n.arbiter.summary()}
+                 for n in nodes}
+    return ClusterReport(policy=policy, router=router, classes=stats,
+                         nodes=node_view, decisions=list(rtr.decisions),
+                         routed=rtr.routed_counts())

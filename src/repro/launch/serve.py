@@ -17,6 +17,14 @@ Serving data-path knobs (mirrored by ``DynamicServer``):
 * ``--no-pipeline``   — dispatch synchronously instead of overlapping
   batch N+1's host-side stacking with batch N's device time.
 
+Cluster / trace knobs (``--trace`` mode):
+
+* ``--nodes N``       — scale the SLO classes out over N arbiter-governed
+  nodes behind the cluster front-end (``repro.cluster``);
+* ``--router p2c|round_robin|least_loaded`` — the routing policy;
+* ``--record PATH``   — save the ACTUAL arrivals as a replayable
+  schedule JSON (feed it back via ``--trace PATH``).
+
 The governed server warms its bucket ladder for the profiled subnets
 before taking traffic, so steady-state serving performs zero cold
 compiles (``server.cold_compiles`` stays 0).
@@ -62,13 +70,17 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
     as separate DynamicServers behind one ResourceArbiter; the traffic
     layer replays a seeded arrival schedule (or a recorded one from a
     JSON file) open-loop against them and reports per-class percentile
-    latency, goodput and drops.
+    latency, goodput and drops.  ``--nodes N`` scales the same classes
+    out over N arbiter-governed nodes behind a ``--router`` cluster
+    front-end; ``--record PATH`` saves the actual arrivals as a replayable
+    schedule.
     """
     from repro.traffic import (DEGRADE, SLOClass, drive_live, load_schedule,
                                onoff, poisson)
 
     dur = args.trace_duration
     rate = args.requests / dur
+    a_batch = poisson(max(rate / 2, 0.5), dur, seed=1)
     if args.trace == "poisson":
         a_int = poisson(rate, dur, seed=0)
     elif args.trace == "bursty":
@@ -77,21 +89,61 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
         from repro.traffic import diurnal
         a_int = diurnal(2.0 * rate, dur, period_s=dur / 2, seed=0)
     else:
-        a_int = load_schedule(args.trace)   # recorded schedule replay
-    a_batch = poisson(max(rate / 2, 0.5), dur, seed=1)
+        loaded = load_schedule(args.trace)   # recorded schedule replay
+        if isinstance(loaded, dict):
+            # multi-stream recording (drive_live --record): replay every
+            # class it holds, falling back to the defaults for the rest
+            a_int = loaded.get("interactive", poisson(rate, dur, seed=0))
+            a_batch = loaded.get("batch", a_batch)
+        else:
+            a_int = loaded
 
     classes = [
         SLOClass("interactive", deadline_ms=base_ms * 8, priority=2),
         SLOClass("batch", deadline_ms=base_ms * 30, priority=0,
                  drop_policy=DEGRADE),
     ]
+    streams = {"interactive": a_int, "batch": a_batch}
+    # warm each bucket ladder for every profiled subnet (the arbiter's
+    # governors pick from the LUT): the live trace pays zero cold compiles
+    warm = list(dict.fromkeys(p.subnet for p in lut.points))
+
+    if args.nodes > 1:
+        from repro.cluster import Cluster, ClusterNode
+        nodes = [ClusterNode(name=f"node{i}",
+                             g_fn=lambda t: GlobalConstraints(total_chips=2))
+                 for i in range(args.nodes)]
+        cluster = Cluster(nodes, router=args.router)
+
+        def mk_server(node):
+            s = build_server(arch, cfg, max_batch=server.max_batch,
+                             batch_buckets=server.batch_buckets,
+                             pipeline=server.pipeline)
+            s.warm(warm, example_input=x[0])
+            return s
+
+        for c in classes:
+            placed = cluster.register(c.name, lut,
+                                      target_latency_ms=c.service_target_ms,
+                                      priority=c.priority,
+                                      make_server=mk_server)
+            print(f"  {c.name}: placed on {placed}")
+        report = drive_live(
+            classes, cluster.ports(), cluster, streams, lambda name: x[0],
+            g_fn=lambda: GlobalConstraints(total_chips=2),
+            record_path=args.record)
+        print(f"\ncluster trace mode [{args.trace}] x{args.nodes} nodes, "
+              f"router={args.router}: {len(a_int)} interactive + "
+              f"{len(a_batch)} batch arrivals over {dur:.1f}s")
+        for name, cs in report.classes.items():
+            print(f"  {name:12s} {cs.summary()}")
+        print(f"  routed       {report.arbiter['routed']}")
+        return
+
     batch_server = build_server(arch, cfg, max_batch=server.max_batch,
                                 batch_buckets=server.batch_buckets,
                                 pipeline=server.pipeline)
     servers = {"interactive": server, "batch": batch_server}
-    # warm each bucket ladder for every profiled subnet (the arbiter's
-    # governors pick from the LUT): the live trace pays zero cold compiles
-    warm = list(dict.fromkeys(p.subnet for p in lut.points))
     for s in servers.values():
         s.warm(warm, example_input=x[0])
     arbiter = ResourceArbiter(interval_s=0.05)
@@ -101,15 +153,16 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
         arbiter.register(c.name, lut, target_latency_ms=c.service_target_ms,
                          priority=c.priority, server=servers[c.name])
     report = drive_live(
-        classes, servers, arbiter,
-        {"interactive": a_int, "batch": a_batch},
-        lambda name: x[0],
-        g_fn=lambda: GlobalConstraints(total_chips=2))
+        classes, servers, arbiter, streams, lambda name: x[0],
+        g_fn=lambda: GlobalConstraints(total_chips=2),
+        record_path=args.record)
     print(f"\ntrace mode [{args.trace}] {len(a_int)} interactive + "
           f"{len(a_batch)} batch arrivals over {dur:.1f}s")
     for name, cs in report.classes.items():
         print(f"  {name:12s} {cs.summary()}")
     print(f"  arbiter      {report.arbiter}")
+    if args.record:
+        print(f"  recorded actual arrivals -> {args.record}")
 
 
 def main(argv=None):
@@ -123,6 +176,15 @@ def main(argv=None):
                          "path to a recorded schedule JSON")
     ap.add_argument("--trace-duration", type=float, default=5.0,
                     help="seconds of arrival schedule in --trace mode")
+    ap.add_argument("--nodes", type=int, default=1,
+                    help="cluster mode: N arbiter-governed nodes behind "
+                         "the router (--trace only)")
+    ap.add_argument("--router", default="p2c",
+                    choices=["p2c", "round_robin", "least_loaded"],
+                    help="cluster routing policy for --nodes > 1")
+    ap.add_argument("--record", default=None, metavar="PATH",
+                    help="record the ACTUAL --trace arrivals to a "
+                         "replayable schedule JSON")
     ap.add_argument("--max-batch", type=int, default=8,
                     help="batching ceiling (bucket ladder = powers of two)")
     ap.add_argument("--no-buckets", action="store_true",

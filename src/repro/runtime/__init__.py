@@ -17,5 +17,5 @@ from repro.runtime.governor import (Constraints, JointGovernor,
 from repro.runtime.monitor import Monitor, paper_trace, run_governor, quantile
 from repro.runtime.engine import DynamicServer
 from repro.runtime.arbiter import (AdmissionError, Allocation,
-                                   GlobalConstraints, ResourceArbiter,
-                                   Workload)
+                                   GlobalConstraints, Headroom,
+                                   ResourceArbiter, Workload)

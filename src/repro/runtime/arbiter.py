@@ -103,6 +103,13 @@ class Workload:
 
 
 @dataclasses.dataclass
+class Headroom:
+    """Unreserved capacity after minimal shares (cluster admission export)."""
+    chips: int
+    power_w: float   # math.inf when the node has no power budget
+
+
+@dataclasses.dataclass
 class Allocation:
     """One workload's share of the machine for one arbitration cycle."""
     workload: str
@@ -162,8 +169,27 @@ class ResourceArbiter:
         with self._lock:
             w = self._workloads.pop(name, None)
             self.last_alloc.pop(name, None)
+            # a later tenant registering under the same name must not
+            # inherit this one's accumulated cycles/meet-rate/energy
+            self._stats.pop(name, None)
             if w is not None and w.server is not None:
                 w.server.stop()   # the clock drove it; don't leak the worker
+
+    def export_tenant(self, name: str) -> Workload:
+        """Remove a tenant WITHOUT stopping its server (migration hook).
+
+        The cluster layer moves a draining node's registrations to
+        surviving nodes: the returned :class:`Workload` carries the
+        lut/target/priority needed to re-register elsewhere, and the
+        server (if any) stays up so in-flight work still resolves.
+        Stats are cleared like :meth:`unregister` — the new host starts
+        the tenant's accounting fresh.
+        """
+        with self._lock:
+            w = self._workloads.pop(name)   # KeyError: unknown workload
+            self.last_alloc.pop(name, None)
+            self._stats.pop(name, None)
+            return w
 
     def set_active(self, name: str, active: bool = True, *,
                    queue_depth: Optional[int] = None,
@@ -192,6 +218,23 @@ class ResourceArbiter:
         the arrivals expected before the next arbitration."""
         return w.queue_depth + w.arrival_ewma * self.interval_s
 
+    def tenants(self) -> List[str]:
+        """Registered workload names, in registration order."""
+        with self._lock:
+            return list(self._workloads)
+
+    def backlog(self, name: str) -> float:
+        """One tenant's pending-work signal (cluster routing reads it)."""
+        with self._lock:
+            return self._backlog(self._workloads[name])
+
+    def total_backlog(self) -> float:
+        """Summed pending work across active tenants — the per-node load
+        signal the cluster router's least-loaded/p2c policies compare."""
+        with self._lock:
+            return sum(self._backlog(w) for w in self._workloads.values()
+                       if w.active)
+
     def _priority_order(self) -> List[Workload]:
         # stable sort: ties broken by registration order
         return sorted(self._workloads.values(), key=lambda w: -w.priority)
@@ -211,22 +254,47 @@ class ResourceArbiter:
         (ROADMAP admission-control item).
         """
         with self._lock:
-            chips_left = g.total_chips
-            power_left = (g.power_budget_w if g.power_budget_w is not None
-                          else math.inf)
-            for w in self._priority_order():
-                if w.priority < priority:
-                    continue
-                p = self._min_share_point(w, chips_left, power_left,
-                                          g.temperature_throttle)
-                if p is not None:
-                    chips_left -= p.hw_state.chips
-                    power_left -= hm.slice_power_w(p.hw_state)
+            chips_left, power_left = self._after_min_shares(
+                g, min_priority=priority)
             probe = Workload(name="__probe__", lut=lut,
                              target_latency_ms=target_latency_ms,
                              priority=priority, min_accuracy=min_accuracy)
             return self._min_share_point(probe, chips_left, power_left,
                                          g.temperature_throttle)
+
+    def _after_min_shares(self, g: GlobalConstraints,
+                          min_priority: Optional[int] = None
+                          ) -> "tuple[int, float]":
+        """(chips, power) left after reserving tenants' minimal feasible
+        shares — all tenants, or only those at ``min_priority`` and above
+        (lower-priority tenants are preemptable)."""
+        chips_left = g.total_chips
+        power_left = (g.power_budget_w if g.power_budget_w is not None
+                      else math.inf)
+        for w in self._priority_order():
+            if min_priority is not None and w.priority < min_priority:
+                continue
+            p = self._min_share_point(w, chips_left, power_left,
+                                      g.temperature_throttle)
+            if p is not None:
+                chips_left -= p.hw_state.chips
+                power_left -= hm.slice_power_w(p.hw_state)
+        return chips_left, power_left
+
+    def headroom(self, g: GlobalConstraints) -> "Headroom":
+        """Chips/power left after EVERY tenant's minimal feasible share —
+        the node's observability export (dashboards, `cluster_headroom`).
+
+        This is deliberately more conservative than admission: it
+        reserves all tenants, while the admission path
+        (:meth:`admission_check`, called per node by
+        ``repro.cluster.cluster_admission``) skips lower-priority ones
+        because they are preemptable.  Don't compute admission from this
+        number.
+        """
+        with self._lock:
+            chips_left, power_left = self._after_min_shares(g)
+            return Headroom(chips=chips_left, power_w=power_left)
 
     # --- water-filling ------------------------------------------------------
 
@@ -270,6 +338,12 @@ class ResourceArbiter:
                 if w.server is not None:
                     # live tenants report backlog automatically
                     w.queue_depth = w.server.queue_depth()
+                    # arrivals since the last arbitration feed the same
+                    # EWMA set_active() maintains for simulated tenants
+                    n = w.server.take_arrival_count()
+                    w.arrival_ewma = (_EWMA_BETA * w.arrival_ewma
+                                      + (1.0 - _EWMA_BETA)
+                                      * (n / self.interval_s))
             order = [w for w in self._priority_order() if w.active]
             chips_left = g.total_chips
             power_left = (g.power_budget_w if g.power_budget_w is not None
@@ -382,6 +456,9 @@ class ResourceArbiter:
             c = self.constraints_for(w, alloc, g)
             point = w.governor.select(c)
             if w.server is not None:
+                # the arbiter's EWMA sizes the server's adaptive batching
+                # window (a no-op unless adaptive_window=True)
+                w.server.note_arrival_rate(w.arrival_ewma)
                 if point.subnet != w.server.active_spec:
                     w.server.switch(point.subnet, point)
                 else:

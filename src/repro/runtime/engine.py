@@ -75,7 +75,9 @@ class DynamicServer:
                  warm_specs: Optional[List[SubnetSpec]] = None,
                  batch_buckets: bool = True, pipeline: bool = True,
                  pipeline_depth: int = 2, example_input=None,
-                 switch_log_cap: int = 1024):
+                 switch_log_cap: int = 1024,
+                 adaptive_window: bool = False,
+                 min_window_ms: float = 0.5):
         """``apply_fn(params, x, E) -> output`` (pure; jit-able).
 
         ``dims`` maps knob names to full sizes (see spec_to_static).
@@ -85,6 +87,13 @@ class DynamicServer:
         one request-shaped array; when given, ``warm_specs`` warms the
         whole bucket ladder (compile + one execution per bucket) instead
         of only building the jit wrappers.
+
+        ``adaptive_window=True`` sizes the batching window from the
+        arrival-rate EWMA the arbiter tracks (ROADMAP item): under load
+        the collector holds the window open only about one expected
+        inter-arrival time (floored at ``min_window_ms``), when traffic
+        is sparse it keeps the full ``timeout_ms`` — a lone request never
+        waits out a window no second request will join.
         """
         self.apply_fn = apply_fn
         self.params = params
@@ -112,12 +121,23 @@ class DynamicServer:
         # can zero-copy host arrays).  Steady state: zero host allocation.
         self._pad_pool: Dict[Tuple[int, tuple, str], List[np.ndarray]] = {}
         self._pad_lock = threading.Lock()
+        self.adaptive_window = adaptive_window
+        self.min_window_s = min_window_ms / 1e3
+        self._arrival_rate_rps = 0.0
         self._queue: "queue.Queue" = queue.Queue()
         # _WAKE entries in _queue (not real backlog); lock-protected because
         # pause()/stop() (arbiter clock, callers) and the worker all touch
         # it and queue_depth() feeds the arbiter's water-filling
         self._wake_tokens = 0
         self._wake_lock = threading.Lock()
+        # unresolved futures + arrivals since the last arbiter pull; the
+        # cluster layer drains on _outstanding and the arbiter's EWMA
+        # feeds off take_arrival_count()
+        self._outstanding = 0
+        self._arrivals = 0
+        self._acct_lock = threading.Lock()
+        self._draining = False
+        self._fail_reason: Optional[str] = None
         self._completions: Optional["queue.Queue"] = None
         self._stop = threading.Event()
         self._paused = threading.Event()
@@ -214,18 +234,31 @@ class DynamicServer:
     # --- batched serving loop -------------------------------------------------
 
     def _cancel(self, r: Request, reason: str):
+        # "failed" marks fail-stop (kill) resolutions apart from ordinary
+        # cancels (stop/drain/shed) so live accounting can separate a node
+        # failure from load shedding, as the cluster simulator does
         r.future.put({"y": None, "cancelled": True, "error": reason,
+                      "failed": self._fail_reason is not None,
                       "latency_ms": (time.perf_counter() - r.t_submit) * 1e3,
                       "subnet": None})
         self.cancelled += 1
+        with self._acct_lock:
+            self._outstanding = max(0, self._outstanding - 1)
+
+    def _stop_reason(self) -> str:
+        return self._fail_reason or "server stopped"
 
     def submit(self, x) -> "queue.Queue":
         fut: "queue.Queue" = queue.Queue(maxsize=1)
         r = Request(x=x, t_submit=time.perf_counter(), future=fut)
-        if self._stop.is_set():
-            # stopped server: resolve immediately instead of queueing a
-            # request no worker will ever pick up
-            self._cancel(r, "server stopped")
+        with self._acct_lock:
+            self._outstanding += 1
+            self._arrivals += 1
+        if self._stop.is_set() or self._draining:
+            # stopped/draining server: resolve immediately instead of
+            # queueing a request no worker will ever pick up
+            self._cancel(r, "server draining" if self._draining
+                         and not self._stop.is_set() else self._stop_reason())
             return fut
         self._queue.put(r)
         if self._stop.is_set() and not self.is_running:
@@ -233,6 +266,32 @@ class DynamicServer:
             # drain again (queue.get is atomic, each request resolves once)
             self._drain_queue()
         return fut
+
+    def outstanding(self) -> int:
+        """Futures submitted but not yet resolved (drain watches this)."""
+        with self._acct_lock:
+            return self._outstanding
+
+    def take_arrival_count(self) -> int:
+        """Arrivals since the last call — the arbiter's EWMA input."""
+        with self._acct_lock:
+            n = self._arrivals
+            self._arrivals = 0
+            return n
+
+    def note_arrival_rate(self, rps: float):
+        """The arbiter pushes its smoothed per-tenant arrival rate here;
+        the adaptive batching window is sized from it."""
+        self._arrival_rate_rps = max(0.0, float(rps))
+
+    def effective_timeout_s(self) -> float:
+        """Current batching window: the expected inter-arrival time under
+        load (floored at ``min_window_s``), the full ``timeout_s`` when
+        sparse, and always ``timeout_s`` unless ``adaptive_window``."""
+        rate = self._arrival_rate_rps
+        if not self.adaptive_window or rate <= 0.0:
+            return self.timeout_s
+        return min(self.timeout_s, max(self.min_window_s, 1.0 / rate))
 
     def queue_depth(self) -> int:
         """Requests waiting for a batch (the arbiter's backlog signal)."""
@@ -258,7 +317,7 @@ class DynamicServer:
             if r is _WAKE:
                 self._took_wake()
                 continue
-            self._cancel(r, "server stopped")
+            self._cancel(r, self._stop_reason())
 
     def _collect_batch(self) -> List[Request]:
         """Block (no poll) until a request arrives, then hold the batching
@@ -278,7 +337,7 @@ class DynamicServer:
                 self._took_wake()
                 break
             if not reqs:
-                deadline = time.perf_counter() + self.timeout_s
+                deadline = time.perf_counter() + self.effective_timeout_s()
             reqs.append(r)
         return reqs
 
@@ -357,6 +416,8 @@ class DynamicServer:
             r.future.put({"y": out[i],
                           "latency_ms": (t_ready - r.t_submit) * 1e3,
                           "subnet": item.subnet})
+            with self._acct_lock:
+                self._outstanding = max(0, self._outstanding - 1)
         self.served += len(item.reqs)
 
     def _complete_safe(self, item: _InFlight):
@@ -430,6 +491,8 @@ class DynamicServer:
         self._stop.clear()
         self._paused.clear()
         self._resume.set()
+        self._draining = False
+        self._fail_reason = None
         self._last_ready = 0.0
         if self.pipeline:
             self._completions = queue.Queue(maxsize=self.pipeline_depth)
@@ -440,6 +503,33 @@ class DynamicServer:
             target=self._serve_loop, args=(constraints_fn, govern_every),
             daemon=True)
         self._worker.start()
+
+    def drain(self, timeout_s: float = 30.0) -> bool:
+        """Graceful node-drain handoff: refuse new work, let the backlog
+        resolve, then stop.
+
+        New submits resolve immediately with a ``"server draining"``
+        payload (the cluster router stops sending them first); everything
+        already accepted is served.  Returns True when the backlog fully
+        resolved inside the timeout — False means leftovers were cancelled
+        by :meth:`stop` (e.g. the server was paused/starved the whole
+        time).
+        """
+        self._draining = True
+        deadline = time.perf_counter() + timeout_s
+        while self.outstanding() and time.perf_counter() < deadline:
+            time.sleep(0.005)
+        drained = self.outstanding() == 0
+        self.stop()
+        return drained
+
+    def kill(self, reason: str = "node failed"):
+        """Fail-stop: everything queued (and every racing submit) resolves
+        with an error payload carrying ``reason`` — no caller ever hangs
+        on a dead node.  Batches already on the device still complete and
+        answer normally (fail-stop kills the node, not physics)."""
+        self._fail_reason = reason
+        self.stop()
 
     def stop(self):
         self._stop.set()

@@ -93,22 +93,46 @@ def replay(schedule: Union[str, Sequence[float]]) -> np.ndarray:
     """Trace replay: a recorded schedule (sequence of seconds, or a JSON
     path written by :func:`save_schedule`) becomes an arrival stream."""
     if isinstance(schedule, str):
-        return load_schedule(schedule)
+        loaded = load_schedule(schedule)
+        if isinstance(loaded, dict):
+            raise ValueError(
+                f"{schedule}: multi-stream schedule; pass one of its "
+                f"streams ({sorted(loaded)}) to replay()")
+        return loaded
     ts = np.asarray(list(schedule), dtype=float)
     return np.sort(ts)
 
 
-def save_schedule(path: str, arrivals: Sequence[float], *,
+def save_schedule(path: str,
+                  arrivals: Union[Sequence[float],
+                                  Dict[str, Sequence[float]]], *,
                   meta: dict = None) -> None:
-    """Record a schedule for later replay (the ``--trace`` file format)."""
+    """Record a schedule for later replay (the ``--trace`` file format).
+
+    ``arrivals`` is one stream (sequence of seconds) or a dict of
+    per-class streams — what ``drive_live(record_path=...)`` records.
+    JSON floats round-trip exactly, so a replayed schedule is
+    bit-identical to the recorded one.
+    """
+    if isinstance(arrivals, dict):
+        payload = {"streams": {name: [float(t) for t in ts]
+                               for name, ts in arrivals.items()},
+                   "meta": meta or {}}
+    else:
+        payload = {"arrival_s": [float(t) for t in arrivals],
+                   "meta": meta or {}}
     with open(path, "w") as f:
-        json.dump({"arrival_s": [float(t) for t in arrivals],
-                   "meta": meta or {}}, f)
+        json.dump(payload, f)
 
 
-def load_schedule(path: str) -> np.ndarray:
+def load_schedule(path: str) -> Union[np.ndarray, Dict[str, np.ndarray]]:
+    """Load a recorded schedule: an array for single-stream files, a
+    ``{class: array}`` dict for multi-stream recordings."""
     with open(path) as f:
         d = json.load(f)
+    if "streams" in d:
+        return {name: np.sort(np.asarray(ts, dtype=float))
+                for name, ts in d["streams"].items()}
     return np.sort(np.asarray(d["arrival_s"], dtype=float))
 
 

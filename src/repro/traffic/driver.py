@@ -57,10 +57,12 @@ SERVICE_MODELS = (BUCKETED_SERVICE, PADDED_SERVICE)
 @dataclasses.dataclass
 class ClassStats:
     """Per-class accounting: every submitted request ends in exactly one
-    of rejected / dropped / completed (+ pending if the sim is cut off)."""
+    of rejected / dropped / failed / completed (+ pending if the sim is
+    cut off)."""
     submitted: int = 0
     rejected: int = 0      # admission-rejected class
     dropped: int = 0       # shed on arrival (or unserved at horizon)
+    failed: int = 0        # resolved with an error payload (node fail-stop)
     completed: int = 0
     good: int = 0          # completed within the deadline
     batches: int = 0       # serving batches dispatched (sim service model)
@@ -81,7 +83,8 @@ class ClassStats:
 
     def summary(self) -> dict:
         out = {"submitted": self.submitted, "rejected": self.rejected,
-               "dropped": self.dropped, "completed": self.completed,
+               "dropped": self.dropped, "failed": self.failed,
+               "completed": self.completed,
                "goodput": self.good,
                "goodput_rate": round(self.good / self.submitted, 4)
                if self.submitted else 0.0,
@@ -308,8 +311,8 @@ def drive_live(classes: Sequence[SLOClass],
                streams: Dict[str, Sequence[float]],
                make_input: Callable[[str], object], *,
                g_fn: Callable[[], GlobalConstraints],
-               speed: float = 1.0, timeout_s: float = 120.0
-               ) -> TrafficReport:
+               speed: float = 1.0, timeout_s: float = 120.0,
+               record_path: Optional[str] = None) -> TrafficReport:
     """Wall-clock open-loop driver: real requests to real servers.
 
     Classes must already be registered on ``arbiter`` with their servers
@@ -317,11 +320,22 @@ def drive_live(classes: Sequence[SLOClass],
     compresses the arrival schedule; deadlines stay in real ms.  The
     arbiter clock runs for the duration and is stopped (draining the
     servers) before the report is built, so every future resolves.
+
+    ``arbiter``/``servers`` may equally be a :class:`repro.cluster.Cluster`
+    and its class ports — the duck interface is start/stop/summary and
+    per-class ``.submit``.
+
+    ``record_path`` writes the ACTUAL per-class submission times (not the
+    planned schedule — sleep overshoot and submit cost shift them) as a
+    multi-stream schedule JSON, so a real run becomes a regression trace:
+    ``load_schedule`` feeds it back to :func:`simulate` (bit-identical
+    replay) or ``launch.serve --trace <file>``.
     """
     by_class = {c.name: c for c in classes}
     stats = {c.name: ClassStats() for c in classes}
     events = arr.merge({n: ts for n, ts in streams.items()})
     pending: List = []
+    recorded: Dict[str, List[float]] = {c.name: [] for c in classes}
     arbiter.start(g_fn)
     try:
         t0 = time.perf_counter()
@@ -329,6 +343,7 @@ def drive_live(classes: Sequence[SLOClass],
             wait = ta / speed - (time.perf_counter() - t0)
             if wait > 0:
                 time.sleep(wait)
+            recorded[name].append(time.perf_counter() - t0)
             pending.append((name, servers[name].submit(make_input(name))))
         # wait for the fleet to drain; a starved server's requests may
         # never run — arbiter.stop() below cancels them so no get() hangs
@@ -338,6 +353,10 @@ def drive_live(classes: Sequence[SLOClass],
             time.sleep(0.02)
     finally:
         arbiter.stop()
+    if record_path is not None:
+        arr.save_schedule(record_path, recorded,
+                          meta={"kind": "drive_live", "speed": speed,
+                                "classes": [c.name for c in classes]})
     for name, fut in pending:
         st = stats[name]
         st.submitted += 1
@@ -347,7 +366,12 @@ def drive_live(classes: Sequence[SLOClass],
             st.dropped += 1
             continue
         if out.get("cancelled"):
-            st.dropped += 1
+            # a fail-stopped node's error payloads are failures, not load
+            # shedding — same split the cluster simulator reports
+            if out.get("failed"):
+                st.failed += 1
+            else:
+                st.dropped += 1
             continue
         lat = out["latency_ms"]
         st.completed += 1

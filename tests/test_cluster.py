@@ -1,0 +1,475 @@
+"""Cluster layer: routing policies, cluster admission, node lifecycle
+(drain/failover), determinism, the live front-end, and this PR's
+satellites (record/replay, adaptive batching window, unregister-stats
+bugfix)."""
+import numpy as np
+import pytest
+
+from repro.cluster import (DEAD, DRAINED, P2C, LEAST_LOADED, ROUND_ROBIN,
+                           Cluster, ClusterNode, ClusterRouter,
+                           cluster_admission, cluster_headroom,
+                           simulate_cluster)
+from repro.core.types import ElasticSpace
+from repro.runtime import (AdmissionError, GlobalConstraints, ResourceArbiter,
+                           model_lut)
+from repro.runtime import hwmodel as hm
+from repro.traffic import (DEGRADE, SHED, SLOClass, load_schedule, poisson,
+                           save_schedule, simulate)
+
+TERMS = hm.RooflineTerms(t_compute=0.02, t_memory=0.008, t_collective=0.004)
+SPACE = ElasticSpace(width_mults=(0.5, 0.75, 1.0), ffn_mults=(0.5, 1.0),
+                     depth_mults=(0.5, 1.0))
+
+
+def make_lut(scale=1.0, full_chips=256):
+    terms = hm.RooflineTerms(TERMS.t_compute * scale, TERMS.t_memory * scale,
+                             TERMS.t_collective * scale)
+    return model_lut(SPACE.enumerate(), full_terms=terms,
+                     full_chips=full_chips)
+
+
+def make_nodes(capacities):
+    return [ClusterNode(name=f"n{i}",
+                        g_fn=lambda t, c=cap: GlobalConstraints(total_chips=c))
+            for i, cap in enumerate(capacities)]
+
+
+def one_class(deadline_ms=200.0, drop_policy=SHED, name="api"):
+    return SLOClass(name, deadline_ms=deadline_ms, priority=2,
+                    drop_policy=drop_policy)
+
+
+# --- router ------------------------------------------------------------------
+
+def test_round_robin_cycles():
+    nodes = make_nodes([64, 64, 64])
+    r = ClusterRouter(ROUND_ROBIN)
+    picks = [r.pick("a", nodes).name for _ in range(6)]
+    assert picks == ["n0", "n1", "n2", "n0", "n1", "n2"]
+
+
+def test_least_loaded_follows_signal():
+    nodes = make_nodes([64, 64])
+    nodes[0].arbiter.register("a", make_lut(), target_latency_ms=40.0)
+    nodes[0].arbiter.set_active("a", True, queue_depth=10)
+    nodes[1].arbiter.register("a", make_lut(), target_latency_ms=40.0)
+    r = ClusterRouter(LEAST_LOADED)
+    assert r.pick("a", nodes).name == "n1"       # n0 is backlogged
+    # load normalises by chips: same backlog on a 4x bigger node is lighter
+    big = make_nodes([256])[0]
+    big.name = "big"
+    big.arbiter.register("a", make_lut(), target_latency_ms=40.0)
+    big.arbiter.set_active("a", True, queue_depth=10)
+    assert r.pick("a", [nodes[0], big]).name == "big"
+
+
+def test_p2c_is_seed_deterministic_and_skips_unroutable():
+    nodes = make_nodes([64, 64, 64])
+    a = ClusterRouter(P2C, seed=7)
+    b = ClusterRouter(P2C, seed=7)
+    pa = [a.pick("x", nodes).name for _ in range(32)]
+    pb = [b.pick("x", nodes).name for _ in range(32)]
+    assert pa == pb
+    assert len(set(pa)) > 1                      # it really spreads
+    nodes[0].state = DEAD
+    assert a.pick("x", nodes).name in ("n1", "n2")
+    assert a.pick("x", []) is None
+
+
+def test_router_rejects_unknown_policy():
+    with pytest.raises(ValueError):
+        ClusterRouter("random")
+
+
+# --- cluster admission -------------------------------------------------------
+
+def test_admission_needs_one_fitting_node():
+    """A 10ms class's minimal share exceeds a 64-chip node: rejected on
+    small nodes, admitted (and placed on the big node only) after
+    scale-out — the acceptance scenario."""
+    lut = make_lut()
+    with pytest.raises(AdmissionError):
+        cluster_admission(make_nodes([64, 64]), lut, 10.0, priority=2)
+    placed = cluster_admission(make_nodes([64, 64, 256]), lut, 10.0,
+                               priority=2)
+    assert placed == ["n2"]
+
+
+def test_admission_skips_unroutable_nodes():
+    lut = make_lut()
+    nodes = make_nodes([256, 64])
+    nodes[0].state = DEAD
+    with pytest.raises(AdmissionError):
+        cluster_admission(nodes, lut, 10.0, priority=2)
+
+
+def test_cluster_headroom_sums_routable():
+    nodes = make_nodes([64, 64])
+    hr = cluster_headroom(nodes)
+    assert hr.chips == 128                       # idle: everything free
+    nodes[1].state = DEAD
+    assert cluster_headroom(nodes).chips == 64
+
+
+def test_headroom_shrinks_with_tenants():
+    node = make_nodes([256])[0]
+    free = node.headroom().chips
+    node.arbiter.register("a", make_lut(), target_latency_ms=40.0)
+    assert node.headroom().chips < free
+
+
+# --- simulate_cluster: scaling + routing -------------------------------------
+
+def _sim(caps, router=P2C, **kw):
+    cls = [one_class()]
+    return simulate_cluster(cls, {"api": make_lut()},
+                            {"api": poisson(1000.0, 4.0, seed=1)},
+                            make_nodes(caps), router=router, **kw)
+
+
+def test_two_nodes_scale_goodput():
+    g1 = _sim([64]).classes["api"].good
+    g2 = _sim([64, 64]).classes["api"].good
+    assert g2 >= 1.7 * g1
+
+
+def test_p2c_beats_round_robin_under_skew():
+    cls = [one_class(drop_policy=DEGRADE, name="web")]
+    luts = {"web": make_lut()}
+    stream = poisson(1000.0, 4.0, seed=2)
+    reps = {r: simulate_cluster(cls, luts, {"web": list(stream)},
+                                make_nodes([256, 64]), router=r)
+            for r in (P2C, ROUND_ROBIN)}
+    assert (reps[P2C].classes["web"].p(95)
+            <= reps[ROUND_ROBIN].classes["web"].p(95))
+    # p2c sent the slow node LESS than its round-robin half
+    assert (reps[P2C].routed["web"]["n1"]
+            < reps[ROUND_ROBIN].routed["web"]["n1"])
+
+
+def test_rejected_class_counts_rejected():
+    cls = [SLOClass("rt", deadline_ms=2.0, priority=1, drop_policy=SHED)]
+    rep = simulate_cluster(cls, {"rt": make_lut()},
+                           {"rt": poisson(50.0, 2.0, seed=3)},
+                           make_nodes([64]))
+    s = rep.classes["rt"]
+    assert s.rejected == s.submitted > 0
+    assert s.completed == 0
+
+
+# --- determinism (acceptance) ------------------------------------------------
+
+def test_cluster_sim_deterministic():
+    """Same seed + same trace => identical routing decisions and
+    ClusterReport across runs."""
+    a = _sim([64, 64, 64])
+    b = _sim([64, 64, 64])
+    assert a.decisions == b.decisions
+    assert a.summary() == b.summary()
+
+
+def test_cluster_sim_deterministic_with_failover():
+    a = _sim([64, 64], fail_at={"n1": 2.0})
+    b = _sim([64, 64], fail_at={"n1": 2.0})
+    assert a.decisions == b.decisions
+    assert a.summary() == b.summary()
+
+
+# --- node lifecycle in the simulator -----------------------------------------
+
+def test_failover_loses_no_requests():
+    """Killing a node mid-trace: every submitted request still ends in
+    exactly one bucket, the dead node's backlog resolves as failed, and
+    traffic re-routes to the survivor."""
+    rep = _sim([64, 64], fail_at={"n1": 2.0})
+    s = rep.classes["api"]
+    assert s.submitted == s.rejected + s.dropped + s.failed + s.completed
+    assert s.failed > 0                          # overloaded: n1 had backlog
+    assert rep.nodes["n1"]["state"] == DEAD
+    # post-fail arrivals all go to n0: n1 got fewer than half
+    assert rep.routed["api"]["n1"] < rep.routed["api"]["n0"]
+
+
+def test_drain_migrates_without_failures():
+    """Draining a node serves its backlog (nothing failed), stops new
+    routes, and migrates the registration off the node."""
+    rep = _sim([64, 64], drain_at={"n1": 2.0})
+    s = rep.classes["api"]
+    assert s.failed == 0
+    assert s.submitted == s.rejected + s.dropped + s.completed
+    assert rep.nodes["n1"]["state"] == DRAINED
+    # the drained arbiter holds no tenants any more (export_tenant ran)
+    assert "api" not in rep.nodes["n1"]["arbiter"]
+
+
+def test_fail_unplaceable_class_counts_dropped_not_rejected():
+    """Arrivals after a class lost its only placement to a failure are
+    availability losses (dropped), not admission rejects: the 10ms class
+    fits only the 256-chip node, and no survivor can re-admit it."""
+    cls = [SLOClass("rt", deadline_ms=20.0, priority=2, drop_policy=SHED)]
+    rep = simulate_cluster(cls, {"rt": make_lut()},
+                           {"rt": poisson(100.0, 4.0, seed=5)},
+                           make_nodes([256, 64]), fail_at={"n0": 2.0})
+    s = rep.classes["rt"]
+    assert s.rejected == 0                       # admission DID place it
+    assert s.dropped > 0                         # post-failover arrivals
+    assert s.submitted == s.dropped + s.failed + s.completed
+
+
+def test_fail_only_placement_readmits_elsewhere():
+    """A class whose ONLY placement dies re-arbitrates on a survivor:
+    the 10ms class fits just the big node; when that dies mid-trace the
+    class is orphaned (no survivor fits it) and later arrivals drop —
+    while a survivor WITH headroom picks it up when capacities allow."""
+    lut = make_lut()
+    cls = [SLOClass("rt", deadline_ms=20.0, priority=2, drop_policy=SHED,
+                    service_frac=0.5)]
+    # rt (10ms target) fits only the 256-chip nodes
+    rep = simulate_cluster(cls, {"rt": lut},
+                           {"rt": poisson(100.0, 4.0, seed=4)},
+                           make_nodes([256, 256]), fail_at={"n0": 2.0})
+    s = rep.classes["rt"]
+    assert s.submitted == s.rejected + s.dropped + s.failed + s.completed
+    # service continued on n1 after n0 died
+    post_fail = [d for d in rep.decisions if d[0] > 2.0]
+    assert post_fail and all(d[2] == "n1" for d in post_fail)
+
+
+# --- live front-end ----------------------------------------------------------
+
+def tiny_server(*_node):
+    import jax
+    from repro.models.vit import ViTConfig, vit_apply, vit_init
+    from repro.runtime import DynamicServer
+    cfg = ViTConfig(name="t", img_res=16, patch=8, n_layers=2,
+                    d_model=32, n_heads=4, d_ff=64, n_classes=4,
+                    compute_dtype="float32")
+    params = vit_init(jax.random.PRNGKey(0), cfg)
+    dims = {"d_model": 32, "d_ff": 64, "n_heads": 4, "n_layers": 2}
+    return DynamicServer(lambda p, x, E: vit_apply(p, x, cfg, E=E)[0],
+                         params, dims)
+
+
+def live_lut():
+    from repro.core.types import SubnetSpec
+    return model_lut([SubnetSpec()], full_terms=TERMS, full_chips=2,
+                     hw_states=[hm.HwState(chips=1, freq=1.0)])
+
+
+def live_cluster(n=2):
+    nodes = [ClusterNode(name=f"n{i}",
+                         g_fn=lambda t: GlobalConstraints(total_chips=2))
+             for i in range(n)]
+    cluster = Cluster(nodes, router=P2C)
+    cluster.register("api", live_lut(), target_latency_ms=500.0,
+                     priority=1, make_server=tiny_server)
+    return cluster
+
+
+def test_live_cluster_routes_and_serves():
+    cluster = live_cluster()
+    cluster.start()
+    try:
+        x = np.zeros((16, 16, 3), "float32")
+        outs = [cluster.submit("api", x).get(timeout=30) for _ in range(8)]
+        assert all(not o.get("cancelled") for o in outs)
+    finally:
+        cluster.stop()
+    routed = cluster.summary()["routed"]["api"]
+    assert sum(routed.values()) == 8
+
+
+def test_live_drain_serves_backlog_then_migrates():
+    cluster = live_cluster()
+    cluster.start()
+    try:
+        x = np.zeros((16, 16, 3), "float32")
+        futs = [cluster.submit("api", x) for _ in range(6)]
+        assert cluster.drain("n0", timeout_s=20.0)
+        # nothing in flight was cancelled by the drain
+        outs = [f.get(timeout=30) for f in futs]
+        assert all(not o.get("cancelled") for o in outs)
+        assert cluster.placements["api"] == ["n1"]
+        assert cluster.nodes["n0"].state == DRAINED
+        # the survivor still serves
+        out = cluster.submit("api", x).get(timeout=30)
+        assert not out.get("cancelled")
+    finally:
+        cluster.stop()
+
+
+def test_live_fail_resolves_every_future():
+    """Fail-stop mid-burst: no future ever hangs — each resolves served
+    or with the fail-reason error payload."""
+    cluster = live_cluster()
+    cluster.start()
+    try:
+        x = np.zeros((16, 16, 3), "float32")
+        futs = [cluster.submit("api", x) for _ in range(16)]
+        cluster.fail("n0", reason="pulled the plug")
+        outs = [f.get(timeout=30) for f in futs]    # nothing hangs
+        errored = [o for o in outs if o.get("cancelled")]
+        for o in errored:
+            assert o["error"] in ("pulled the plug", "server stopped")
+        assert cluster.nodes["n0"].state == DEAD
+        # the class survives on n1
+        out = cluster.submit("api", x).get(timeout=30)
+        assert not out.get("cancelled")
+    finally:
+        cluster.stop()
+
+
+def test_kill_payloads_marked_failed():
+    """Fail-stop resolutions carry failed=True so live accounting can
+    split node failures from ordinary cancels (stop/drain/shed)."""
+    server = tiny_server()
+    x = np.zeros((16, 16, 3), "float32")
+    futs = [server.submit(x) for _ in range(3)]   # queued, never started
+    server.kill("node failed")
+    for f in futs:
+        out = f.get(timeout=5)
+        assert out["cancelled"] and out["failed"]
+        assert out["error"] == "node failed"
+    other = tiny_server()
+    fut = other.submit(x)
+    other.stop()                                  # ordinary stop: no failure
+    out = fut.get(timeout=5)
+    assert out["cancelled"] and not out["failed"]
+
+
+def test_live_fail_last_node_errors_new_submits():
+    cluster = live_cluster(n=1)
+    cluster.start()
+    try:
+        cluster.fail("n0")
+        out = cluster.submit("api", np.zeros((16, 16, 3), "float32")
+                             ).get(timeout=5)
+        assert out["cancelled"] and "no routable node" in out["error"]
+    finally:
+        cluster.stop()
+
+
+# --- satellite: record/replay of live traces ---------------------------------
+
+def test_save_load_multi_stream_roundtrip(tmp_path):
+    path = str(tmp_path / "multi.json")
+    streams = {"a": [0.1, 0.25, 0.9], "b": [0.2]}
+    save_schedule(path, streams, meta={"kind": "test"})
+    back = load_schedule(path)
+    assert set(back) == {"a", "b"}
+    assert np.array_equal(back["a"], np.asarray(streams["a"]))
+    from repro.traffic import replay
+    with pytest.raises(ValueError):
+        replay(path)                             # must pick one stream
+
+
+def test_drive_live_records_replayable_trace(tmp_path):
+    """drive_live(record_path=) writes the ACTUAL arrivals; feeding them
+    back into simulate is bit-identical run-to-run (acceptance)."""
+    from repro.traffic import drive_live
+    path = str(tmp_path / "rec.json")
+    server = tiny_server()
+    arb = ResourceArbiter(interval_s=0.05)
+    cls = SLOClass("api", deadline_ms=500.0, priority=1)
+    arb.register("api", live_lut(), cls.service_target_ms, priority=1,
+                 server=server)
+    x = np.zeros((16, 16, 3), "float32")
+    rep = drive_live([cls], {"api": server}, arb,
+                     {"api": poisson(40.0, 0.5, seed=0)},
+                     lambda name: x,
+                     g_fn=lambda: GlobalConstraints(total_chips=2),
+                     record_path=path)
+    rec = load_schedule(path)
+    assert rep.classes["api"].submitted == len(rec["api"]) > 0
+    # recorded arrivals differ from the planned schedule (real clock)
+    # but replay through the simulator exactly reproduces itself
+    lut = make_lut()
+    g_fn = lambda t: GlobalConstraints(total_chips=256)
+    cls2 = SLOClass("api", deadline_ms=60.0, priority=1)
+    a = simulate([cls2], {"api": lut}, {"api": rec["api"]}, g_fn).summary()
+    b = simulate([cls2], {"api": lut}, {"api": rec["api"]}, g_fn).summary()
+    assert a == b
+    # and a second load is bit-identical (JSON floats round-trip exactly)
+    again = load_schedule(path)
+    assert np.array_equal(again["api"], rec["api"])
+
+
+# --- satellite: adaptive batching window -------------------------------------
+
+def test_adaptive_window_shrinks_with_arrival_rate():
+    """The collector window tracks the expected inter-arrival time: it
+    shrinks as the arbiter-reported EWMA rises and recovers when traffic
+    goes sparse."""
+    server = tiny_server()
+    server.adaptive_window = True
+    base = server.timeout_s
+    assert server.effective_timeout_s() == base   # no signal yet
+    windows = []
+    for rate in (10.0, 500.0, 2000.0, 20000.0):
+        server.note_arrival_rate(rate)
+        windows.append(server.effective_timeout_s())
+    assert windows[0] == base                     # sparse: full window
+    assert windows[1] == pytest.approx(1 / 500.0)
+    assert all(a >= b for a, b in zip(windows, windows[1:]))
+    assert windows[-1] == server.min_window_s     # floored, never zero
+    server.note_arrival_rate(0.0)
+    assert server.effective_timeout_s() == base   # sparse again: recovers
+
+
+def test_adaptive_window_off_by_default():
+    server = tiny_server()
+    server.note_arrival_rate(1e6)
+    assert server.effective_timeout_s() == server.timeout_s
+
+
+def test_arbiter_pushes_ewma_into_server():
+    """tick() refreshes the workload EWMA from real submits and pushes it
+    to the server, sizing the live window."""
+    server = tiny_server()
+    server.adaptive_window = True
+    arb = ResourceArbiter(interval_s=0.05)
+    arb.register("api", live_lut(), target_latency_ms=500.0, server=server)
+    x = np.zeros((16, 16, 3), "float32")
+    futs = [server.submit(x) for _ in range(64)]
+    arb.tick(GlobalConstraints(total_chips=2))
+    assert server._arrival_rate_rps > 0
+    assert server.effective_timeout_s() < server.timeout_s
+    server.start()
+    try:
+        for f in futs:
+            f.get(timeout=60)
+    finally:
+        server.stop()
+
+
+# --- satellite: unregister clears stats (bugfix) -----------------------------
+
+def test_unregister_clears_stats_row():
+    """Re-registering a tenant under the same name must start fresh
+    accounting — the old bug leaked cycles/meet-rate/energy into the new
+    tenant's summary (breaks cluster tenant migration, which re-registers
+    by name)."""
+    arb = ResourceArbiter()
+    g = GlobalConstraints(total_chips=256)
+    arb.register("t", make_lut(), target_latency_ms=40.0)
+    for _ in range(5):
+        arb.tick(g)
+    assert arb.summary()["t"]["cycles"] == 5
+    arb.unregister("t")
+    arb.register("t", make_lut(), target_latency_ms=40.0)
+    assert arb.summary()["t"].get("cycles", 0) == 0   # fresh row
+    arb.tick(g)
+    assert arb.summary()["t"]["cycles"] == 1          # not 6
+
+
+def test_export_tenant_keeps_server_and_clears_stats():
+    server = tiny_server()
+    arb = ResourceArbiter()
+    arb.register("t", live_lut(), target_latency_ms=500.0, server=server)
+    arb.tick(GlobalConstraints(total_chips=2))
+    w = arb.export_tenant("t")
+    assert w.name == "t" and w.server is server
+    assert "t" not in arb.tenants()
+    assert "t" not in arb.summary()
+    # unlike unregister, the server was NOT stopped (migration keeps it)
+    assert not server._stop.is_set()
