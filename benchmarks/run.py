@@ -7,7 +7,15 @@ scalar of each row: wall-clock us, energy, %, or roofline time).
 (``{"suites": {title: [{"name", "value", "derived"}]}, ...}``) so the
 perf trajectory accumulates across PRs (BENCH_<n>.json files at the repo
 root; BENCH_3.json records the bucketed-vs-padded serving comparison,
-BENCH_4.json the cluster scale-out and p2c-vs-round-robin routing).
+BENCH_4.json the cluster scale-out and p2c-vs-round-robin routing,
+BENCH_5.json the calibration loop: closed-loop energy ratio and replay
+p95-error ratio).
+
+``--compare PREV.json`` guards the trajectory: after the run, every
+HEADLINE metric present in both the previous file and this run is
+checked for a >10 % regression in its bad direction (goodput/speedups
+falling, error/energy ratios rising) and the process exits non-zero if
+any regressed — CI wires two invocations together as a perf gate.
 """
 from __future__ import annotations
 
@@ -16,9 +24,62 @@ import json
 import sys
 import traceback
 
+# Headline metrics --compare guards.  Deterministic (seeded virtual-time)
+# metrics are gated RELATIVE to the previous file: a >tol move in the bad
+# direction fails.  Live wall-clock ratios vary several-fold run to run
+# (host contention), so prev-relative gating would false-flag honest
+# runs — they are gated against an ABSOLUTE ceiling instead (the same
+# invariant the bench itself asserts: calibrated must beat open-loop).
+HEADLINES = {
+    "traffic/serving_bucketed_speedup": {"direction": "higher",
+                                         "tol": 0.10},
+    "cluster/scale/2_node_speedup": {"direction": "higher", "tol": 0.10},
+    "calibration/energy_ratio": {"max": 1.0},
+    "calibration/p95_err_ratio": {"max": 1.0},
+}
+REGRESSION_TOL = 0.10
+
+
+def _flatten(suites: dict) -> dict:
+    out = {}
+    for rows in suites.values():
+        for row in rows:
+            out[row["name"]] = row["value"]
+    return out
+
+
+def compare_headlines(prev_suites: dict, new_suites: dict) -> list:
+    """[(name, prev, new, why)] for every regressed headline metric."""
+    prev = _flatten(prev_suites)
+    new = _flatten(new_suites)
+    regressions = []
+    for name, spec in HEADLINES.items():
+        if name not in new:
+            continue
+        n = new[name]
+        if "max" in spec:
+            if n > spec["max"]:
+                regressions.append((name, prev.get(name), n,
+                                    f"above absolute ceiling "
+                                    f"{spec['max']:g}"))
+            continue
+        if name not in prev:
+            continue
+        p = prev[name]
+        tol = spec.get("tol", REGRESSION_TOL)
+        direction = spec["direction"]
+        if direction == "higher" and n < p * (1.0 - tol):
+            regressions.append((name, p, n,
+                                f"higher is better, tol {tol:.0%}"))
+        elif direction == "lower" and n > p * (1.0 + tol):
+            regressions.append((name, p, n,
+                                f"lower is better, tol {tol:.0%}"))
+    return regressions
+
 
 def main() -> None:
     import benchmarks.bench_arbiter as ba
+    import benchmarks.bench_calibration as bcal
     import benchmarks.bench_cluster as bc
     import benchmarks.bench_governor as bg
     import benchmarks.bench_kernels as bk
@@ -32,6 +93,9 @@ def main() -> None:
                     help="fast path for suites that support it")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write per-benchmark metrics as JSON")
+    ap.add_argument("--compare", metavar="PREV_JSON", default=None,
+                    help="exit non-zero on >10%% regression of any "
+                         "headline metric vs a previous --json file")
     args = ap.parse_args()
 
     suites = [
@@ -42,6 +106,8 @@ def main() -> None:
          lambda: bt.run(smoke=args.smoke)),
         ("cluster (multi-node scale-out, p2c vs round-robin, admission)",
          lambda: bc.run(smoke=args.smoke)),
+        ("calibration (closed-loop measured planning vs open-loop)",
+         lambda: bcal.run(smoke=args.smoke)),
         ("switching (paper: runtime architecture switching)", bs.run),
         ("kernels (elastic matmul / flash attention)", bk.run),
         ("roofline (dry-run derived)", rt.rows),
@@ -67,6 +133,16 @@ def main() -> None:
                        "failures": failures, "suites": results},
                       f, indent=1, sort_keys=True)
         print(f"# wrote {args.json}")
+    if args.compare:
+        with open(args.compare) as f:
+            prev = json.load(f)
+        regressions = compare_headlines(prev.get("suites", {}), results)
+        for name, p, n, why in regressions:
+            prev_s = "n/a" if p is None else f"{p:.3f}"
+            print(f"# REGRESSION {name}: {prev_s} -> {n:.3f} ({why})")
+        if regressions:
+            sys.exit(2)
+        print(f"# compare vs {args.compare}: no headline regression")
     if failures:
         sys.exit(1)
 

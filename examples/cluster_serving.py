@@ -1,6 +1,6 @@
 """Multi-node cluster serving walkthrough.
 
-Three acts:
+Four acts:
 
 1. **Scale-out (virtual time)** — one overloaded SLO class replayed
    against 1-node and 2-node clusters through the deterministic
@@ -13,13 +13,23 @@ Three acts:
    node drains (backlog served, tenants migrated), then the survivor is
    fail-stopped (every outstanding future resolves with an error payload
    instead of hanging).
+4. **Wedged-node auto-failover (health checking)** — the failure mode
+   acts 1-3 can't see: a node that silently stops completing while still
+   accepting routed work (hung worker, lost device).  First in virtual
+   time (``wedge_at`` + ``health_epochs``: the stall detector fails the
+   node within K epochs and the survivor absorbs the class), then live —
+   a cluster started with ``health_interval_s`` watches every node's
+   completion counters, and a wedged replica's stuck futures all resolve
+   with failed payloads instead of hanging their callers.
 
     PYTHONPATH=src python examples/cluster_serving.py
 """
+import time
+
 import jax
 import numpy as np
 
-from repro.cluster import (P2C, ROUND_ROBIN, Cluster, ClusterNode,
+from repro.cluster import (DEAD, P2C, ROUND_ROBIN, Cluster, ClusterNode,
                            simulate_cluster)
 from repro.core.types import ElasticSpace, SubnetSpec
 from repro.models.vit import ViTConfig, vit_apply, vit_init
@@ -108,7 +118,55 @@ def act_3_live_lifecycle():
     cluster.stop()
 
 
+def act_4_wedged_node_auto_failover():
+    print("== act 4: wedged-node auto-failover (stall health check) ==")
+    # virtual time first: n1 wedges at t=2s — still routable, completing
+    # nothing — and the stall detector fails it over after 3 flat epochs
+    lut = model_lut(SPACE.enumerate(), full_terms=TERMS, full_chips=256)
+    cls = [SLOClass("api", deadline_ms=200.0, priority=2, drop_policy=SHED)]
+    stream = poisson(1000.0, 6.0, seed=3)
+    rep = simulate_cluster(cls, {"api": lut}, {"api": list(stream)},
+                           make_nodes([64, 64]), router=ROUND_ROBIN,
+                           wedge_at={"n1": 2.0}, health_epochs=3)
+    s = rep.classes["api"]
+    print(f"  sim: n1 wedged at t=2.0s, health failed it at "
+          f"t={rep.health_failed[0][0]:.1f}s; "
+          f"completed={s.completed} failed={s.failed} dropped={s.dropped} "
+          f"(all {s.submitted} accounted)")
+
+    # live: a hung worker — completions flat while futures pile up.  The
+    # health thread fails the node; nothing hangs.
+    nodes = [ClusterNode(name=f"n{i}",
+                         g_fn=lambda t: GlobalConstraints(total_chips=2))
+             for i in range(2)]
+    cluster = Cluster(nodes, router=P2C, health_interval_s=0.05,
+                      health_epochs=3)
+    lut1 = model_lut([SubnetSpec()], full_terms=TERMS, full_chips=2,
+                     hw_states=[hm.HwState(chips=1, freq=1.0)])
+    cluster.register("api", lut1, target_latency_ms=500.0, priority=1,
+                     make_server=tiny_server)
+    x = np.zeros((16, 16, 3), "float32")
+    for node in nodes:       # warmed replicas: a cold compile looks like
+        node.servers["api"].warm([SubnetSpec()], example_input=x)  # a stall
+    cluster.start()
+    srv = nodes[0].servers["api"]
+    srv.resume = lambda: None      # simulate a hung worker: stays parked
+    srv.pause()
+    futs = [srv.submit(x) for _ in range(4)]
+    deadline = time.time() + 15.0
+    while nodes[0].state != DEAD and time.time() < deadline:
+        time.sleep(0.02)
+    outs = [f.get(timeout=10) for f in futs]
+    print(f"  live: health checker failed {cluster.health_log} "
+          f"({outs[0]['error']!r})")
+    print(f"  live: {sum(o.get('failed', False) for o in outs)}/4 stuck "
+          f"futures resolved with failed payloads, survivor serves: "
+          f"{not cluster.submit('api', x).get(timeout=30).get('cancelled')}")
+    cluster.stop()
+
+
 if __name__ == "__main__":
     act_1_scale_out()
     act_2_skewed_routing()
     act_3_live_lifecycle()
+    act_4_wedged_node_auto_failover()

@@ -24,8 +24,8 @@ under a cluster front-end that adds
   compared bit-reproducibly on one seeded trace
   (``benchmarks/bench_cluster.py``).
 """
-from repro.cluster.node import (DEAD, DRAINED, DRAINING, NODE_STATES, UP,
-                                ClusterNode)
+from repro.cluster.node import (DEAD, DRAINED, DRAINING, HEALTH_EPOCHS,
+                                NODE_STATES, UP, ClusterNode, StallDetector)
 from repro.cluster.router import (LEAST_LOADED, P2C, ROUND_ROBIN, ROUTERS,
                                   ClusterRouter)
 from repro.cluster.admission import cluster_admission, cluster_headroom

@@ -16,7 +16,15 @@ a single serving surface:
 * **fail** is fail-stop: every queued request on the dead node resolves
   with an error payload (:meth:`DynamicServer.kill`) and orphaned
   classes are re-admitted elsewhere, so the class's share is
-  re-arbitrated instead of lost.
+  re-arbitrated instead of lost;
+* a **health checker** (``health_interval_s``) closes the liveness loop:
+  each health epoch every UP node's cumulative completion counter is
+  compared against its outstanding futures
+  (:meth:`~repro.cluster.node.ClusterNode.check_health`); a node whose
+  completions stay flat for K epochs while work is outstanding is
+  WEDGED — silently stuck, invisible to the router's load signal — and
+  is failed over through the same :meth:`fail` path an operator would
+  use, so no caller hangs on it.
 
 Duck-types the ``arbiter`` argument of :func:`repro.traffic.drive_live`
 (``start``/``stop``/``summary``) and serves class ports that duck-type
@@ -31,7 +39,8 @@ import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.cluster.admission import cluster_admission
-from repro.cluster.node import DEAD, DRAINED, DRAINING, UP, ClusterNode
+from repro.cluster.node import (DEAD, DRAINED, DRAINING, HEALTH_EPOCHS, UP,
+                                ClusterNode)
 from repro.cluster.router import P2C, ClusterRouter
 from repro.runtime.arbiter import AdmissionError
 from repro.runtime.engine import DynamicServer
@@ -58,7 +67,9 @@ def _dead_future(reason: str) -> "queue.Queue":
 
 class Cluster:
     def __init__(self, nodes: Sequence[ClusterNode], *,
-                 router: str = P2C, router_seed: int = 0):
+                 router: str = P2C, router_seed: int = 0,
+                 health_interval_s: Optional[float] = None,
+                 health_epochs: int = HEALTH_EPOCHS):
         if not nodes:
             raise ValueError("a cluster needs at least one node")
         names = [n.name for n in nodes]
@@ -66,6 +77,14 @@ class Cluster:
             raise ValueError(f"duplicate node names: {names}")
         self.nodes: Dict[str, ClusterNode] = {n.name: n for n in nodes}
         self.router = ClusterRouter(router, seed=router_seed)
+        # stall-based health checking: None disables the checker thread
+        self.health_interval_s = health_interval_s
+        self.health_epochs = health_epochs
+        self.health_log: List[str] = []   # nodes auto-failed by health
+        self._health_stop = threading.Event()
+        self._health_thread: Optional[threading.Thread] = None
+        for n in nodes:
+            n.health.epochs = health_epochs
         # _lock guards the routing state (placements, router picks) and is
         # only ever held briefly; _admin_lock serialises lifecycle work
         # (register/drain/fail) whose slow parts — thread joins, server
@@ -173,13 +192,45 @@ class Cluster:
 
     def start(self, g_fn=None):
         """Start every node's constraint clock (``g_fn`` is accepted for
-        drive_live compatibility; nodes use their own ``g_fn(t)``)."""
+        drive_live compatibility; nodes use their own ``g_fn(t)``) and,
+        when ``health_interval_s`` is set, the stall-based health
+        checker."""
         self._t0 = time.perf_counter()
         for node in self.nodes.values():
             if node.alive:
                 node.arbiter.start(lambda n=node: n.g(self._now()))
+        if self.health_interval_s is not None:
+            self._health_stop.clear()
+            self._health_thread = threading.Thread(target=self._health_loop,
+                                                   daemon=True)
+            self._health_thread.start()
+
+    def _health_loop(self):
+        # Operator contract: health_epochs x health_interval_s must
+        # exceed the node's worst-case single-batch time (a warmed
+        # server's batch is milliseconds; an un-warmed cold compile can
+        # legitimately stall completions for hundreds of ms and would —
+        # correctly, from the detector's point of view — read as a wedge)
+        while not self._health_stop.is_set():
+            for node in list(self.nodes.values()):
+                if node.state == UP and node.check_health():
+                    # wedged: completions flat for K epochs with futures
+                    # outstanding — run the SAME failover path an
+                    # operator's fail() would (queued futures resolve
+                    # with error payloads, classes re-admit elsewhere)
+                    self.health_log.append(node.name)
+                    self.fail(node.name,
+                              reason=f"health: node {node.name} wedged "
+                                     f"(completions stalled "
+                                     f"{node.health.stalled_epochs} epochs "
+                                     f"with backlog)")
+            self._health_stop.wait(self.health_interval_s)
 
     def stop(self):
+        self._health_stop.set()
+        if self._health_thread is not None:
+            self._health_thread.join(timeout=5)
+            self._health_thread = None
         for node in self.nodes.values():
             if node.alive:
                 node.arbiter.stop()
@@ -238,6 +289,7 @@ class Cluster:
             "router": self.router.policy,
             "placements": {n: list(p) for n, p in self.placements.items()},
             "routed": self.router.routed_counts(),
+            "health_failed": list(self.health_log),
             "nodes": {nn: {"state": node.state,
                            "arbiter": node.arbiter.summary()}
                       for nn, node in self.nodes.items()},

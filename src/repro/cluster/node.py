@@ -9,7 +9,13 @@ engines), wrapped with what the cluster front-end needs:
   compare a busy small node against an idle big one;
 * a **lifecycle state** — UP (routable), DRAINING (stop routing, keep
   serving until the queues empty), DRAINED (tenants migrated away), and
-  DEAD (fail-stop: queued work resolves with error payloads).
+  DEAD (fail-stop: queued work resolves with error payloads);
+* a **liveness signal** — :class:`StallDetector` turns the node's
+  completion counters into a health verdict: completions flat while
+  backlog is non-zero for K consecutive health epochs means the node is
+  WEDGED (silently stuck — worker hung, device lost — without
+  fail-stopping), and the health checker fails it over automatically
+  instead of waiting for an operator's ``fail_at``/``drain``.
 
 The same object backs both the live front-end (:mod:`.frontend`) and
 the virtual-time simulator (:mod:`.sim`); ``g_fn(t)`` yields the node's
@@ -19,11 +25,45 @@ just nodes with different ``g_fn``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 from repro.runtime.arbiter import (GlobalConstraints, Headroom,
                                    ResourceArbiter)
 from repro.runtime.engine import DynamicServer
+
+# health-check default: epochs of flat completions (with backlog) before
+# a node is declared wedged and failed over
+HEALTH_EPOCHS = 3
+
+
+@dataclasses.dataclass
+class StallDetector:
+    """Stall-based liveness: completions flat while backlog > 0.
+
+    One :meth:`observe` per health epoch with the node's cumulative
+    completion count and current backlog.  A healthy node under load
+    moves its counter every epoch; a wedged one accepts work (backlog
+    grows) but completes nothing.  K consecutive stalled epochs return
+    True — the caller's cue to run the existing failover path
+    (:meth:`repro.cluster.frontend.Cluster.fail` live, the ``fail_at``
+    machinery in :func:`repro.cluster.sim.simulate_cluster`).
+    Completions moving — or the backlog emptying — resets the streak.
+    """
+    epochs: int = HEALTH_EPOCHS
+    _last_completed: Optional[int] = None
+    _stalled: int = 0
+
+    def observe(self, completed: int, backlog: float) -> bool:
+        stalled = (self._last_completed is not None
+                   and completed == self._last_completed
+                   and backlog > 0)
+        self._stalled = self._stalled + 1 if stalled else 0
+        self._last_completed = completed
+        return self._stalled >= self.epochs
+
+    @property
+    def stalled_epochs(self) -> int:
+        return self._stalled
 
 # lifecycle states
 UP = "up"
@@ -43,6 +83,7 @@ class ClusterNode:
     servers: Dict[str, DynamicServer] = dataclasses.field(
         default_factory=dict)
     state: str = UP
+    health: StallDetector = dataclasses.field(default_factory=StallDetector)
 
     @property
     def routable(self) -> bool:
@@ -77,3 +118,31 @@ class ClusterNode:
     def outstanding(self) -> int:
         """Unresolved futures across this node's servers (live drain)."""
         return sum(s.outstanding() for s in self.servers.values())
+
+    def completed(self) -> int:
+        """Cumulative requests answered across this node's servers — the
+        liveness counter the health checker watches for stalls."""
+        return sum(s.served for s in self.servers.values())
+
+    def starved(self) -> bool:
+        """Did the last arbitration deliberately park EVERY tenant?
+
+        A fully starved node (thermal throttle, power dip, higher-priority
+        tenants holding all chips) shows the same signature as a wedge —
+        completions flat, futures outstanding — but it is the arbiter's
+        own doing and recovers the moment conditions improve.  The health
+        check must not kill it."""
+        last = self.arbiter.last_alloc
+        return bool(last) and all(a.point is None for a in last.values())
+
+    def check_health(self) -> bool:
+        """One live health epoch: True when the node looks wedged
+        (completions flat across K epochs while futures are outstanding).
+        The front-end's health loop calls this and runs ``fail()``.
+
+        Epochs where the arbiter parked every tenant
+        (:meth:`starved`) report zero backlog to the detector, so a
+        deliberate starvation resets the stall streak instead of
+        counting toward a false-positive failover."""
+        backlog = 0 if self.starved() else self.outstanding()
+        return self.health.observe(self.completed(), backlog)

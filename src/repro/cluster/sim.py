@@ -14,7 +14,21 @@ accounting — but over N :class:`ClusterNode`s with a
 * node lifecycle is scriptable: ``drain_at`` stops routing to a node and
   migrates its tenants once its queues empty; ``fail_at`` is fail-stop —
   queued requests resolve as ``failed`` and orphaned classes re-admit on
-  the survivors (share re-arbitrated elsewhere).
+  the survivors (share re-arbitrated elsewhere); ``wedge_at`` is the
+  SILENT failure mode fail-stop can't model — the node keeps accepting
+  routed work but completes nothing (hung worker, lost device);
+* **stall-based health checking** (``health_epochs=K``): each epoch
+  every up node's completion counter is run through its
+  :class:`~repro.cluster.node.StallDetector`; completions flat while its
+  queues are non-empty for K epochs auto-fails the node through the SAME
+  failover path as ``fail_at`` — queued requests resolve as ``failed``,
+  orphaned classes re-admit on survivors — replacing operator-only
+  lifecycle scripting with measurement-driven liveness;
+* a warmed :class:`repro.runtime.telemetry.CalibrationStore`
+  (``calibration=``) makes the replay predict with MEASURED numbers:
+  every node's arbiter water-fills on calibrated latencies/watts and
+  batches are priced by measured per-bucket EWMAs (see
+  :func:`repro.traffic.driver.simulate`).
 
 Everything is seeded (arrival streams + router rng), so one trace under
 two routing policies — or the same trace twice — is an exact,
@@ -28,7 +42,8 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.cluster.node import DEAD, DRAINED, DRAINING, UP, ClusterNode
+from repro.cluster.node import (DEAD, DRAINED, DRAINING, UP, ClusterNode,
+                                StallDetector)
 from repro.cluster.router import P2C, ClusterRouter
 from repro.runtime.lut import LUT
 from repro.traffic import arrivals as arr
@@ -47,6 +62,9 @@ class ClusterReport:
     nodes: Dict[str, dict]
     decisions: List[Tuple[float, str, str]]
     routed: dict = dataclasses.field(default_factory=dict)
+    # (virtual second, node) pairs auto-failed by the stall health check
+    health_failed: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def total_goodput(self) -> int:
@@ -68,6 +86,7 @@ class ClusterReport:
                 "classes": {n: s.summary()
                             for n, s in self.classes.items()},
                 "routed": self.routed,
+                "health_failed": list(self.health_failed),
                 "nodes": self.nodes}
 
 
@@ -79,8 +98,10 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                      service_model: str = BUCKETED_SERVICE,
                      max_drain_s: float = 120.0,
                      fail_at: Optional[Dict[str, float]] = None,
-                     drain_at: Optional[Dict[str, float]] = None
-                     ) -> ClusterReport:
+                     drain_at: Optional[Dict[str, float]] = None,
+                     wedge_at: Optional[Dict[str, float]] = None,
+                     health_epochs: Optional[int] = None,
+                     calibration=None) -> ClusterReport:
     """Run one seeded trace through the cluster in virtual time.
 
     ``nodes`` must be freshly-built (their arbiters get the class
@@ -89,6 +110,17 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     epoch boundary; a failing node stops COMPLETING batches at the exact
     fail instant — work that would finish after it is left queued and
     resolves as ``failed``).
+
+    ``wedge_at`` silently wedges a node: it stays routable and keeps
+    accepting work, but completes nothing from that instant on — the
+    failure mode only measurement can see.  With ``health_epochs=K`` the
+    stall-based health check watches every node's completion counters
+    and auto-fails a wedged node after K flat epochs with backlog,
+    driving the same failover path as ``fail_at`` (queued requests
+    resolve ``failed``, orphaned classes re-admit on survivors).
+
+    ``calibration`` threads a warmed measurement store through every
+    node's arbiter and the batch service model.
     """
     assert policy in POLICIES, policy
     assert service_model in SERVICE_MODELS, service_model
@@ -99,6 +131,16 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     rtr = ClusterRouter(router, seed=router_seed)
     fail_at = dict(fail_at or {})
     drain_at = dict(drain_at or {})
+    wedge_at = dict(wedge_at or {})
+    wedged = {n.name: False for n in nodes}
+    completions = {n.name: 0 for n in nodes}   # liveness counters
+    health = {n.name: StallDetector(epochs=health_epochs or 0)
+              for n in nodes} if health_epochs else {}
+    health_failed: List[Tuple[float, str]] = []
+    if calibration is not None:
+        for node in nodes:
+            if node.arbiter.calibration is None:
+                node.arbiter.calibration = calibration
 
     # --- cluster admission + placement (mirrors _register_classes) ---------
     placements: Dict[str, List[str]] = {}
@@ -160,8 +202,23 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     last_arrival = events[-1][0] if events else 0.0
 
     def svc_of(allocs):
-        return {n: (a.point.latency_ms if a.point is not None else None)
-                for n, a in allocs.items()}
+        # granted OpPoints: the calibrated service model keys measured
+        # bucket columns by the point's subnet spec
+        return {n: a.point for n, a in allocs.items()}
+
+    def fail_node(nn: str):
+        """Fail-stop one node: queued work resolves as failed (error
+        payloads live), placements shrink, orphans re-admit — shared by
+        ``fail_at`` scripting and the stall health check."""
+        by_node[nn].state = DEAD
+        for cn, q in queues[nn].items():
+            stats[cn].failed += len(q)   # error payloads, not lost
+            q.clear()
+            busy_until[nn][cn] = 0.0
+        for cn in placements:
+            if nn in placements[cn]:
+                placements[cn].remove(nn)
+        readmit_orphans()
 
     ei = 0
     t = 0.0
@@ -180,18 +237,14 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
         for nn, td in drain_at.items():
             if by_node[nn].state == UP and t >= td:
                 by_node[nn].state = DRAINING
+        for nn, tw in wedge_at.items():
+            # silent stall: stays routable, stops completing — only the
+            # health check (or the drain-horizon safety) can end this
+            if by_node[nn].alive and t >= tw:
+                wedged[nn] = True
         for nn, tf in fail_at.items():
-            node = by_node[nn]
-            if node.state != DEAD and t >= tf:
-                node.state = DEAD
-                for cn, q in queues[nn].items():
-                    stats[cn].failed += len(q)   # error payloads, not lost
-                    q.clear()
-                    busy_until[nn][cn] = 0.0
-                for cn in placements:
-                    if nn in placements[cn]:
-                        placements[cn].remove(nn)
-                readmit_orphans()
+            if by_node[nn].state != DEAD and t >= tf:
+                fail_node(nn)
         for node in nodes:
             nn = node.name
             if node.state == DRAINING and not any(
@@ -256,8 +309,10 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                     and svc[nn].get(cn) is not None):
                 q_len = len(queues[nn][cn])
                 occ = min(q_len + 1, c.max_batch)
-                batch_ms = _service_ms(svc[nn][cn], occ, c.max_batch,
-                                       service_model)
+                pt = svc[nn][cn]
+                batch_ms = _service_ms(pt.latency_ms, occ, c.max_batch,
+                                       service_model, spec=pt.subnet,
+                                       calibration=calibration)
                 n_batches = math.ceil((q_len + 1) / c.max_batch)
                 eta_ms = (max(0.0, busy_until[nn][cn] - ta) * 1e3
                           + n_batches * batch_ms)
@@ -268,13 +323,13 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
 
         # --- serve each node's queues in batches ----------------------------
         for node in nodes:
-            if not node.alive:
-                continue
+            if not node.alive or wedged[node.name]:
+                continue   # wedged: accepts routes, completes nothing
             nn = node.name
             dies = fail_at.get(nn, math.inf)
             for cn, q in queues[nn].items():
-                s_ms = svc.get(nn, {}).get(cn)
-                if s_ms is None:
+                pt = svc.get(nn, {}).get(cn)
+                if pt is None:
                     continue   # starved this epoch; queue waits
                 c = by_class[cn]
                 st = stats[cn]
@@ -289,13 +344,15 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                         else:
                             break
                     k = max(k, 1)
-                    done = start + _service_ms(s_ms, k, c.max_batch,
-                                               service_model) / 1e3
+                    done = start + _service_ms(
+                        pt.latency_ms, k, c.max_batch, service_model,
+                        spec=pt.subnet, calibration=calibration) / 1e3
                     if done > dies:
                         break   # the node dies first: fail_at errors these
                     busy_until[nn][cn] = done
                     st.batches += 1
                     st.batch_occupancy += k
+                    completions[nn] += k
                     for _ in range(k):
                         ta = q.popleft()
                         lat_ms = (done - ta) * 1e3
@@ -303,6 +360,19 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                         st.latencies_ms.append(lat_ms)
                         if lat_ms <= c.deadline_ms:
                             st.good += 1
+
+        # --- stall-based health check (end of epoch) ------------------------
+        for node in nodes:
+            nn = node.name
+            if nn not in health or node.state != UP:
+                continue
+            backlog_n = sum(len(q) for q in queues[nn].values())
+            if health[nn].observe(completions[nn], backlog_n):
+                # completions flat for K epochs with queued work: the
+                # node is wedged — auto-fail it over, exactly the path
+                # an operator-scripted fail_at would take
+                health_failed.append((t_next, nn))
+                fail_node(nn)
         t = t_next
 
     for node in nodes:
@@ -318,4 +388,5 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                  for n in nodes}
     return ClusterReport(policy=policy, router=router, classes=stats,
                          nodes=node_view, decisions=list(rtr.decisions),
-                         routed=rtr.routed_counts())
+                         routed=rtr.routed_counts(),
+                         health_failed=health_failed)

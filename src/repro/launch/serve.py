@@ -23,7 +23,15 @@ Cluster / trace knobs (``--trace`` mode):
   nodes behind the cluster front-end (``repro.cluster``);
 * ``--router p2c|round_robin|least_loaded`` — the routing policy;
 * ``--record PATH``   — save the ACTUAL arrivals as a replayable
-  schedule JSON (feed it back via ``--trace PATH``).
+  schedule JSON (feed it back via ``--trace PATH``);
+* ``--calibrate``     — close the measurement loop: servers record
+  per-(subnet, bucket) latency EWMAs and measured tenant energy into a
+  ``CalibrationStore`` the arbiter plans off (measured watts in the
+  water-filling, calibrated LUT columns); ``--calibrate-out PATH``
+  additionally saves the warmed store as JSON for calibrated replays;
+* ``--health-interval S`` — cluster mode: run the stall-based health
+  checker every S seconds (a node whose completions stay flat with
+  futures outstanding is auto-failed over).
 
 The governed server warms its bucket ladder for the profiled subnets
 before taking traffic, so steady-state serving performs zero cold
@@ -39,16 +47,17 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core.types import SubnetSpec
-from repro.runtime import (Constraints, DynamicServer, GlobalConstraints,
-                           JointGovernor, Monitor, PerformanceGovernor,
-                           ResourceArbiter, SchedutilGovernor,
-                           StaticPrunedGovernor, measured_lut, model_lut,
-                           paper_trace, run_governor)
+from repro.runtime import (CalibrationStore, Constraints, DynamicServer,
+                           GlobalConstraints, JointGovernor, Monitor,
+                           PerformanceGovernor, ResourceArbiter,
+                           SchedutilGovernor, StaticPrunedGovernor,
+                           measured_lut, model_lut, paper_trace,
+                           run_governor)
 from repro.runtime import hwmodel as hm
 
 
 def build_server(arch, cfg, *, max_batch=8, batch_buckets=True,
-                 pipeline=True):
+                 pipeline=True, calibration=None, tenant=None):
     key = jax.random.PRNGKey(0)
     if arch.arch_id.startswith(("deit", "vit", "dynamic-ofa")):
         from repro.models.vit import vit_apply, vit_init
@@ -60,7 +69,8 @@ def build_server(arch, cfg, *, max_batch=8, batch_buckets=True,
         raise SystemExit("serve launcher: vision transformer archs only "
                          "(the paper serves image classification)")
     return DynamicServer(apply_fn, params, dims, max_batch=max_batch,
-                         batch_buckets=batch_buckets, pipeline=pipeline)
+                         batch_buckets=batch_buckets, pipeline=pipeline,
+                         calibration=calibration, tenant=tenant)
 
 
 def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
@@ -107,22 +117,28 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
     # warm each bucket ladder for every profiled subnet (the arbiter's
     # governors pick from the LUT): the live trace pays zero cold compiles
     warm = list(dict.fromkeys(p.subnet for p in lut.points))
+    store = CalibrationStore() if args.calibrate else None
 
     if args.nodes > 1:
         from repro.cluster import Cluster, ClusterNode
         nodes = [ClusterNode(name=f"node{i}",
                              g_fn=lambda t: GlobalConstraints(total_chips=2))
                  for i in range(args.nodes)]
-        cluster = Cluster(nodes, router=args.router)
-
-        def mk_server(node):
-            s = build_server(arch, cfg, max_batch=server.max_batch,
-                             batch_buckets=server.batch_buckets,
-                             pipeline=server.pipeline)
-            s.warm(warm, example_input=x[0])
-            return s
+        cluster = Cluster(nodes, router=args.router,
+                          health_interval_s=args.health_interval)
+        if store is not None:
+            for node in nodes:
+                node.arbiter.calibration = store
 
         for c in classes:
+            def mk_server(node, _name=c.name):
+                s = build_server(arch, cfg, max_batch=server.max_batch,
+                                 batch_buckets=server.batch_buckets,
+                                 pipeline=server.pipeline,
+                                 calibration=store, tenant=_name)
+                s.warm(warm, example_input=x[0])
+                return s
+
             placed = cluster.register(c.name, lut,
                                       target_latency_ms=c.service_target_ms,
                                       priority=c.priority,
@@ -138,15 +154,24 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
         for name, cs in report.classes.items():
             print(f"  {name:12s} {cs.summary()}")
         print(f"  routed       {report.arbiter['routed']}")
+        if args.health_interval is not None:
+            print(f"  health-failed nodes: "
+                  f"{report.arbiter.get('health_failed', [])}")
+        _report_calibration(store, args)
         return
 
     batch_server = build_server(arch, cfg, max_batch=server.max_batch,
                                 batch_buckets=server.batch_buckets,
-                                pipeline=server.pipeline)
+                                pipeline=server.pipeline,
+                                calibration=store, tenant="batch")
+    if store is not None:
+        # the profiling server becomes the interactive tenant: tag it so
+        # its measured energy lands under the right calibration row
+        server.calibration, server.tenant = store, "interactive"
     servers = {"interactive": server, "batch": batch_server}
     for s in servers.values():
         s.warm(warm, example_input=x[0])
-    arbiter = ResourceArbiter(interval_s=0.05)
+    arbiter = ResourceArbiter(interval_s=0.05, calibration=store)
     for c in classes:
         # two modelled 1-chip slices: the measured LUT profiles chips=1,
         # so a 2-chip pool lets both tenants hold a slice at once
@@ -163,6 +188,18 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
     print(f"  arbiter      {report.arbiter}")
     if args.record:
         print(f"  recorded actual arrivals -> {args.record}")
+    _report_calibration(store, args)
+
+
+def _report_calibration(store, args):
+    if store is None:
+        return
+    s = store.summary()
+    print(f"  calibration: {len(s['latency'])} (subnet, bucket) latency "
+          f"columns, power rows: {s['power']}")
+    if args.calibrate_out:
+        store.save(args.calibrate_out)
+        print(f"  calibration store saved -> {args.calibrate_out}")
 
 
 def main(argv=None):
@@ -185,6 +222,17 @@ def main(argv=None):
     ap.add_argument("--record", default=None, metavar="PATH",
                     help="record the ACTUAL --trace arrivals to a "
                          "replayable schedule JSON")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="close the measurement loop: record measured "
+                         "(subnet, bucket) latency + tenant energy and "
+                         "let the arbiter plan off it")
+    ap.add_argument("--calibrate-out", default=None, metavar="PATH",
+                    help="save the warmed CalibrationStore as JSON "
+                         "(implies nothing without --calibrate)")
+    ap.add_argument("--health-interval", type=float, default=None,
+                    metavar="S",
+                    help="cluster mode: stall-based health check every "
+                         "S seconds (auto-failover of wedged nodes)")
     ap.add_argument("--max-batch", type=int, default=8,
                     help="batching ceiling (bucket ladder = powers of two)")
     ap.add_argument("--no-buckets", action="store_true",

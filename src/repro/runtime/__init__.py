@@ -6,6 +6,10 @@ governor — joint algorithm+hardware governor and Linux-governor baselines
 monitor  — latency/energy accounting and the paper's workload traces
 engine   — dynamic serving engine with a sub-network executable cache
 arbiter  — multi-workload water-filling arbiter over shared chips/power
+telemetry— measured-performance CalibrationStore closing the loop:
+           engine-recorded (subnet, bucket) latency EWMAs and measured
+           tenant watts feed the LUT columns and the arbiter's energy
+           objective
 """
 from repro.runtime.hwmodel import HwState, RooflineTerms, roofline, FREQ_LADDER
 from repro.runtime.lut import (LUT, model_lut, measured_lut,
@@ -16,6 +20,7 @@ from repro.runtime.governor import (Constraints, JointGovernor,
                                     StaticPrunedGovernor)
 from repro.runtime.monitor import Monitor, paper_trace, run_governor, quantile
 from repro.runtime.engine import DynamicServer
+from repro.runtime.telemetry import CalibrationStore
 from repro.runtime.arbiter import (AdmissionError, Allocation,
                                    GlobalConstraints, Headroom,
                                    ResourceArbiter, Workload)

@@ -40,6 +40,16 @@ The traffic layer (``repro.traffic``) adds two ROADMAP items on top:
   mid-cycle on behalf of a high-priority arrival, evicting lower-priority
   slices immediately instead of waiting for the next constraint clock
   tick.  Idle workloads release their slice via :meth:`set_active`.
+
+With a :class:`repro.runtime.telemetry.CalibrationStore` attached
+(``ResourceArbiter(calibration=...)``) the planner is CLOSED-LOOP (the
+paper's runtime layer "monitors the dynamically changing algorithms'
+performance targets as well as hardware resources"): feasibility runs on
+calibrated point latencies (measured per-bucket EWMAs blended over the
+analytic prior) and the power budget is charged the tenant's MEASURED
+watts — modelled slice power scaled by its observed duty cycle — so the
+energy objective the paper optimises is driven by observed energy, not
+the open-loop ``slice_power_w`` model.
 """
 from __future__ import annotations
 
@@ -47,7 +57,8 @@ import collections
 import dataclasses
 import math
 import threading
-from typing import Callable, Deque, Dict, List, Optional
+import time
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.pareto import OpPoint
 from repro.runtime import hwmodel as hm
@@ -56,6 +67,8 @@ from repro.runtime.governor import Constraints, JointGovernor
 from repro.runtime.lut import LUT
 
 _MAX_FILL_PASSES = 8
+# new latency observations before a tenant's calibrated LUT is rebuilt
+_LUT_REFRESH_SAMPLES = 16
 # smoothing for the arrival-rate EWMA reported through set_active()
 _EWMA_BETA = 0.6
 # below this many pending requests a tenant counts as backlog-free (the
@@ -96,6 +109,14 @@ class Workload:
     # set_active() or refreshed from server.queue_depth() each arbitration
     queue_depth: int = 0
     arrival_ewma: float = 0.0   # requests/s, smoothed
+    # exactly-once rate smoothing: arrivals pulled off the server since
+    # the last EWMA update, and when that update happened (monotonic s).
+    # A mid-cycle preempt() accumulates counts here instead of smoothing
+    # a partial window a second time.
+    rate_pending: int = 0
+    rate_last_t: Optional[float] = None
+    # last seen server.measured_energy_mj (per-tick measured-watts delta)
+    energy_last_mj: float = 0.0
 
     def __post_init__(self):
         if self.governor is None:
@@ -118,17 +139,32 @@ class Allocation:
     power_w: float
     feasible: bool             # meets its latency target within its share
     share: float = 0.0         # chips / total_chips
+    # what the slice costs against the global power budget: modelled
+    # watts scaled by the tenant's MEASURED duty cycle when a calibration
+    # store is attached (== power_w otherwise).  Summing priced watts is
+    # how the energy-aware water-filling packs more tenants under one
+    # budget without oversubscribing observed draw.
+    priced_power_w: float = 0.0
 
 
 class ResourceArbiter:
     """Water-filling allocator + shared constraint clock over N workloads."""
 
-    def __init__(self, *, interval_s: float = 0.05):
+    def __init__(self, *, interval_s: float = 0.05, calibration=None,
+                 time_fn: Callable[[], float] = time.monotonic):
         self.interval_s = interval_s
+        # measured-performance feedback (repro.runtime.telemetry
+        # .CalibrationStore): when set, water-filling plans off CALIBRATED
+        # point latencies and prices candidate slices with each tenant's
+        # measured watts instead of the raw modelled slice_power_w
+        self.calibration = calibration
+        self._time_fn = time_fn   # injectable for deterministic tests
         self._workloads: Dict[str, Workload] = {}
         self._lock = threading.RLock()
         self._stop = threading.Event()
         self._clock: Optional[threading.Thread] = None
+        # per-tenant calibrated-LUT cache: (raw lut, store version, eff)
+        self._lut_cache: Dict[str, Tuple[LUT, int, LUT]] = {}
         # recent cycles only; summary() uses the running accumulators so a
         # 20 Hz clock doesn't grow memory without bound
         self.alloc_log: Deque[Dict[str, Allocation]] = collections.deque(
@@ -172,6 +208,7 @@ class ResourceArbiter:
             # a later tenant registering under the same name must not
             # inherit this one's accumulated cycles/meet-rate/energy
             self._stats.pop(name, None)
+            self._lut_cache.pop(name, None)
             if w is not None and w.server is not None:
                 w.server.stop()   # the clock drove it; don't leak the worker
 
@@ -189,6 +226,7 @@ class ResourceArbiter:
             w = self._workloads.pop(name)   # KeyError: unknown workload
             self.last_alloc.pop(name, None)
             self._stats.pop(name, None)
+            self._lut_cache.pop(name, None)
             return w
 
     def set_active(self, name: str, active: bool = True, *,
@@ -202,13 +240,21 @@ class ResourceArbiter:
         surplus pass fills the most backlogged tenant first, buying it
         speed instead of accuracy.  The arrival rate is EWMA-smoothed here
         so callers can report instantaneous per-epoch rates.
+
+        For a tenant WITH a server the reported rate is ignored: the
+        server's own arrival counter is authoritative and is smoothed
+        once per interval by :meth:`arbitrate` — accepting a second
+        report of the same arrivals here would run them through the EWMA
+        twice (the double-smoothing bug: the twice-smoothed value then
+        feeds the server's adaptive batching window at an effective
+        beta² instead of the configured beta).
         """
         with self._lock:
             w = self._workloads[name]
             w.active = active
             if queue_depth is not None:
                 w.queue_depth = max(0, int(queue_depth))
-            if arrival_rate_rps is not None:
+            if arrival_rate_rps is not None and w.server is None:
                 w.arrival_ewma = (_EWMA_BETA * w.arrival_ewma
                                   + (1.0 - _EWMA_BETA)
                                   * max(0.0, float(arrival_rate_rps)))
@@ -278,7 +324,8 @@ class ResourceArbiter:
                                       g.temperature_throttle)
             if p is not None:
                 chips_left -= p.hw_state.chips
-                power_left -= hm.slice_power_w(p.hw_state)
+                power_left -= (hm.slice_power_w(p.hw_state)
+                               * self._power_scale(w.name))
         return chips_left, power_left
 
     def headroom(self, g: GlobalConstraints) -> "Headroom":
@@ -296,6 +343,51 @@ class ResourceArbiter:
             chips_left, power_left = self._after_min_shares(g)
             return Headroom(chips=chips_left, power_w=power_left)
 
+    # --- calibration (measured-performance feedback) ------------------------
+
+    def _power_scale(self, name: str) -> float:
+        """Measured/modelled watts ratio for one tenant (1.0 uncalibrated).
+
+        Pricing a candidate slice at ``slice_power_w(hw) * scale`` makes
+        the water-filling's power arithmetic run on OBSERVED draw: a
+        tenant that historically keeps its slice 30 % busy charges the
+        budget 30 % of the modelled board power.  Equivalently, its
+        power cap is divided by the scale before the LUT filter.
+        """
+        if self.calibration is None:
+            return 1.0
+        return max(1e-6, self.calibration.power_scale(name))
+
+    def _lut_for(self, w: Workload) -> LUT:
+        """The tenant's planning LUT: raw, or calibrated point latencies.
+
+        With a calibration store, each point's pad-to-max latency is
+        re-estimated from the measured per-bucket EWMAs
+        (:meth:`CalibrationStore.point_latency_ms` — analytic value as
+        the prior, measurement blended in by sample count), so
+        feasibility checks run on what the engine actually observed.
+
+        Cached per tenant against the store's latency-observation
+        counter, refreshed only after ``_LUT_REFRESH_SAMPLES`` new
+        observations: under live traffic every completed batch bumps the
+        counter, and rebuilding the table per 20 Hz tick would contend
+        the store lock with the completer for no benefit — the blend
+        moves negligibly per sample (EWMA + count confidence).
+        """
+        if self.calibration is None:
+            return w.lut
+        version = self.calibration.version()
+        cached = self._lut_cache.get(w.name)
+        if (cached is not None and cached[0] is w.lut
+                and version - cached[1] < _LUT_REFRESH_SAMPLES):
+            return cached[2]
+        eff = LUT([dataclasses.replace(
+            p, latency_ms=self.calibration.point_latency_ms(
+                p.subnet, p.latency_ms)) for p in w.lut.points])
+        if w.name != "__probe__":
+            self._lut_cache[w.name] = (w.lut, version, eff)
+        return eff
+
     # --- water-filling ------------------------------------------------------
 
     @staticmethod
@@ -307,12 +399,18 @@ class ResourceArbiter:
     def _min_share_point(self, w: Workload, chips_cap: int,
                          power_cap: float, throttle: float
                          ) -> Optional[OpPoint]:
-        """Feasible point with the smallest (chips, power), max accuracy."""
-        pts = w.lut.feasible(max_latency_ms=w.target_latency_ms,
-                             chips_available=chips_cap,
-                             power_budget_w=(None if math.isinf(power_cap)
-                                             else power_cap),
-                             min_accuracy=w.min_accuracy, max_freq=throttle)
+        """Feasible point with the smallest (chips, power), max accuracy.
+
+        ``power_cap`` is in PRICED watts (measured-duty-cycle scaled);
+        it is converted back to modelled watts for the LUT filter.
+        """
+        scale = self._power_scale(w.name)
+        pts = self._lut_for(w).feasible(
+            max_latency_ms=w.target_latency_ms,
+            chips_available=chips_cap,
+            power_budget_w=(None if math.isinf(power_cap)
+                            else power_cap / scale),
+            min_accuracy=w.min_accuracy, max_freq=throttle)
         if not pts:
             return None
         return min(pts, key=lambda p: (p.hw_state.chips,
@@ -323,34 +421,68 @@ class ResourceArbiter:
                            power_cap: float, throttle: float
                            ) -> Optional[OpPoint]:
         """Fastest point that fits the leftover budget (target missed)."""
-        cands = [p for p in w.lut.points
+        scale = self._power_scale(w.name)
+        cands = [p for p in self._lut_for(w).points
                  if p.hw_state.chips <= chips_cap
-                 and hm.slice_power_w(p.hw_state) <= power_cap]
+                 and hm.slice_power_w(p.hw_state) * scale <= power_cap]
         cands = self._throttled(cands, throttle) or cands
         if not cands:
             return None
         return min(cands, key=lambda p: p.latency_ms)
 
+    def _refresh_live_tenant(self, w: Workload, now: float):
+        """Pull a live tenant's measured signals (backlog, arrival rate,
+        energy) — each observation smoothed EXACTLY once.
+
+        Arrivals accumulate in ``rate_pending`` and enter the EWMA only
+        when at least half an interval has elapsed since the last update,
+        with the ACTUAL elapsed time as the rate denominator.  A
+        mid-cycle :meth:`preempt` therefore neither re-smooths a partial
+        window nor inflates the rate by dividing a few arrivals by a full
+        ``interval_s``; the counts it drains are folded into the next
+        tick's window instead.
+        """
+        w.queue_depth = w.server.queue_depth()
+        w.rate_pending += w.server.take_arrival_count()
+        elapsed = (self.interval_s if w.rate_last_t is None
+                   else now - w.rate_last_t)
+        if elapsed < 0.5 * self.interval_s:
+            return
+        w.arrival_ewma = (_EWMA_BETA * w.arrival_ewma
+                          + (1.0 - _EWMA_BETA)
+                          * (w.rate_pending / max(elapsed, 1e-9)))
+        w.rate_pending = 0
+        w.rate_last_t = now
+        if self.calibration is not None:
+            # measured tenant watts over the window vs the modelled watts
+            # of the slice it held: the duty-cycle ratio that prices its
+            # candidate points in the next water-filling pass
+            energy_mj = w.server.measured_energy_mj
+            d_mj = energy_mj - w.energy_last_mj
+            w.energy_last_mj = energy_mj
+            last = self.last_alloc.get(w.name)
+            if last is not None and last.point is not None and d_mj >= 0:
+                self.calibration.note_power(
+                    w.name, (d_mj / max(elapsed, 1e-9)) / 1e3,
+                    hm.slice_power_w(last.point.hw_state))
+
     def arbitrate(self, g: GlobalConstraints) -> Dict[str, Allocation]:
         """Divide (chips, power) among all registered workloads."""
         with self._lock:
+            now = self._time_fn()
             for w in self._workloads.values():
                 if w.server is not None:
-                    # live tenants report backlog automatically
-                    w.queue_depth = w.server.queue_depth()
-                    # arrivals since the last arbitration feed the same
-                    # EWMA set_active() maintains for simulated tenants
-                    n = w.server.take_arrival_count()
-                    w.arrival_ewma = (_EWMA_BETA * w.arrival_ewma
-                                      + (1.0 - _EWMA_BETA)
-                                      * (n / self.interval_s))
+                    # live tenants report backlog/rate/energy automatically
+                    self._refresh_live_tenant(w, now)
             order = [w for w in self._priority_order() if w.active]
             chips_left = g.total_chips
             power_left = (g.power_budget_w if g.power_budget_w is not None
                           else math.inf)
             allocs: Dict[str, Allocation] = {}
 
-            # pass 1: minimal feasible share, highest priority first
+            # pass 1: minimal feasible share, highest priority first.
+            # power_left is tracked in PRICED watts: modelled slice power
+            # times the tenant's measured duty cycle (1.0 uncalibrated)
             for w in order:
                 point = self._min_share_point(w, chips_left, power_left,
                                               g.temperature_throttle)
@@ -360,11 +492,13 @@ class ResourceArbiter:
                         w, chips_left, power_left, g.temperature_throttle)
                 chips = point.hw_state.chips if point else 0
                 power = hm.slice_power_w(point.hw_state) if point else 0.0
+                priced = power * self._power_scale(w.name)
                 chips_left -= chips
-                power_left -= power
+                power_left -= priced
                 allocs[w.name] = Allocation(workload=w.name, point=point,
                                             chips=chips, power_w=power,
-                                            feasible=feasible)
+                                            feasible=feasible,
+                                            priced_power_w=priced)
 
             # pass 2+: water-fill the surplus to a fixpoint.  Backlogged
             # tenants come FIRST (deepest queue wins, then priority) and
@@ -378,13 +512,14 @@ class ResourceArbiter:
                 changed = False
                 for w in fill_order:
                     cur = allocs[w.name]
+                    scale = self._power_scale(w.name)
                     cap_chips = cur.chips + chips_left
-                    cap_power = cur.power_w + power_left
-                    pts = w.lut.feasible(
+                    cap_power = cur.priced_power_w + power_left
+                    pts = self._lut_for(w).feasible(
                         max_latency_ms=w.target_latency_ms,
                         chips_available=cap_chips,
                         power_budget_w=(None if math.isinf(cap_power)
-                                        else cap_power),
+                                        else cap_power / scale),
                         min_accuracy=w.min_accuracy,
                         max_freq=g.temperature_throttle)
                     if not pts:
@@ -407,13 +542,14 @@ class ResourceArbiter:
                                     > cur.point.accuracy + 1e-12)
                     if not upgraded:
                         continue
+                    priced = hm.slice_power_w(best.hw_state) * scale
                     chips_left = cap_chips - best.hw_state.chips
-                    power_left = cap_power - hm.slice_power_w(best.hw_state)
+                    power_left = cap_power - priced
                     allocs[w.name] = Allocation(
                         workload=w.name, point=best,
                         chips=best.hw_state.chips,
                         power_w=hm.slice_power_w(best.hw_state),
-                        feasible=True)
+                        feasible=True, priced_power_w=priced)
                     changed = True
                 if not changed:
                     break
@@ -454,6 +590,11 @@ class ResourceArbiter:
                     w.server.pause()
                 continue
             c = self.constraints_for(w, alloc, g)
+            if self.calibration is not None and hasattr(w.governor, "lut"):
+                # the governor must re-pick from the same calibrated
+                # table the water-filling planned with, or it would undo
+                # the measurement loop with analytic latencies
+                w.governor.lut = self._lut_for(w)
             point = w.governor.select(c)
             if w.server is not None:
                 # the arbiter's EWMA sizes the server's adaptive batching
@@ -560,5 +701,7 @@ class ResourceArbiter:
             if w.queue_depth or w.arrival_ewma:
                 row["queue_depth"] = w.queue_depth
                 row["arrival_ewma_rps"] = round(w.arrival_ewma, 2)
+            if self.calibration is not None:
+                row["power_scale"] = round(self._power_scale(name), 4)
             out[name] = row
         return out

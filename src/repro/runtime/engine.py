@@ -22,7 +22,13 @@ Serves a supernet through its Pareto sub-networks:
 * the runtime governor in the loop: every ``govern_every`` batches it
   re-reads the performance target + hardware state and may switch the
   active sub-network and the (modelled) DVFS point;
-* wall-clock measurement hooks that feed the measured LUT.
+* wall-clock measurement hooks that feed the measured LUT, and — with a
+  :class:`repro.runtime.telemetry.CalibrationStore` attached — the
+  CLOSED measurement loop: every completed batch records its
+  dispatch→ready latency under its ``(SubnetSpec, bucket)`` executable
+  key and its measured energy/busy under the server's tenant label, the
+  numbers the LUT columns and the arbiter's energy objective then plan
+  off.
 
 The worker blocks on the request queue and on pause/resume events (no
 polling): an idle or paused server burns no CPU and wakes immediately.
@@ -66,6 +72,8 @@ class _InFlight:
     subnet: str
     buf_key: tuple             # pad-buffer pool slot to recycle when ready
     buf: Optional[np.ndarray]  # None once returned to the pool
+    spec: SubnetSpec = SubnetSpec()   # calibration key: the dispatched
+    bucket: int = 0                   # (SubnetSpec, bucket) executable
 
 
 class DynamicServer:
@@ -77,7 +85,8 @@ class DynamicServer:
                  pipeline_depth: int = 2, example_input=None,
                  switch_log_cap: int = 1024,
                  adaptive_window: bool = False,
-                 min_window_ms: float = 0.5):
+                 min_window_ms: float = 0.5,
+                 calibration=None, tenant: Optional[str] = None):
         """``apply_fn(params, x, E) -> output`` (pure; jit-able).
 
         ``dims`` maps knob names to full sizes (see spec_to_static).
@@ -94,6 +103,14 @@ class DynamicServer:
         inter-arrival time (floored at ``min_window_ms``), when traffic
         is sparse it keeps the full ``timeout_ms`` — a lone request never
         waits out a window no second request will join.
+
+        ``calibration`` (a :class:`repro.runtime.telemetry
+        .CalibrationStore`) closes the measurement loop: every completed
+        batch records its dispatch→ready latency under its
+        ``(SubnetSpec, bucket)`` key, and — when ``tenant`` names this
+        server's workload — its measured energy/busy integral, so LUT
+        columns and the arbiter's energy objective run on observed
+        numbers instead of the analytic model.
         """
         self.apply_fn = apply_fn
         self.params = params
@@ -123,6 +140,8 @@ class DynamicServer:
         self._pad_lock = threading.Lock()
         self.adaptive_window = adaptive_window
         self.min_window_s = min_window_ms / 1e3
+        self.calibration = calibration
+        self.tenant = tenant
         self._arrival_rate_rps = 0.0
         self._queue: "queue.Queue" = queue.Queue()
         # _WAKE entries in _queue (not real backlog); lock-protected because
@@ -397,7 +416,8 @@ class DynamicServer:
         t_disp = time.perf_counter()
         out = fn(self.params, buf)       # async: returns before ready
         return _InFlight(out=out, reqs=reqs, t_dispatch=t_disp, hw=hw,
-                         subnet=spec.name(), buf_key=buf_key, buf=buf)
+                         subnet=spec.name(), buf_key=buf_key, buf=buf,
+                         spec=spec, bucket=bucket)
 
     def _complete(self, item: _InFlight):
         """Resolve one in-flight batch: wait for the device, account the
@@ -407,11 +427,26 @@ class DynamicServer:
             self._give_buffer(item.buf_key, item.buf)
             item.buf = None          # _complete_safe must not re-pool it
         t_ready = time.perf_counter()
-        dt = t_ready - max(item.t_dispatch, self._last_ready)
-        self._last_ready = t_ready
+        # clamp: completions can land out of order across the pipeline
+        # (completer vs synchronous paths), and a stale _last_ready past
+        # t_ready would otherwise integrate NEGATIVE busy time/energy —
+        # which would corrupt the calibration loop's measured watts
+        dt = max(0.0, t_ready - max(item.t_dispatch, self._last_ready))
+        self._last_ready = max(self._last_ready, t_ready)
         if dt > 0:
             self.busy_s += dt
             self.measured_energy_mj += hm.slice_power_w(item.hw) * dt * 1e3
+        if self.calibration is not None:
+            # dispatch→ready is the batch's effective service latency
+            # (under pipeline overlap it includes device queueing, which
+            # is exactly what the replay simulators should price)
+            self.calibration.note_latency(
+                item.spec, item.bucket,
+                (t_ready - item.t_dispatch) * 1e3,
+                max_batch=self.max_batch)
+            if self.tenant is not None and dt > 0:
+                self.calibration.note_energy(
+                    self.tenant, hm.slice_power_w(item.hw) * dt * 1e3, dt)
         for i, r in enumerate(item.reqs):
             r.future.put({"y": out[i],
                           "latency_ms": (t_ready - r.t_submit) * 1e3,

@@ -94,20 +94,52 @@ def bucket_for(n: int, max_batch: int) -> int:
     return max_batch
 
 
+def _analytic_bucket_ms(full_batch_ms: float, bucket: int, max_batch: int,
+                        overhead_frac: float) -> float:
+    frac = overhead_frac + (1.0 - overhead_frac) * min(bucket, max_batch) \
+        / max_batch
+    return full_batch_ms * min(frac, 1.0)
+
+
 def bucket_latency_ms(full_batch_ms: float, bucket: int, max_batch: int, *,
-                      overhead_frac: float = BUCKET_OVERHEAD_FRAC) -> float:
-    """Modelled latency of one bucket-sized forward.
+                      overhead_frac: float = BUCKET_OVERHEAD_FRAC,
+                      calibration=None, spec: Optional[SubnetSpec] = None
+                      ) -> float:
+    """Latency of one bucket-sized forward, analytic or calibrated.
 
     ``full_batch_ms`` is the profiled pad-to-max latency (what the LUT
     stores); a smaller bucket pays the fixed overhead fraction plus the
     linearly-scaled compute part.  Monotone in ``bucket`` and equal to
     ``full_batch_ms`` at ``bucket == max_batch``.
+
+    With a warmed :class:`repro.runtime.telemetry.CalibrationStore` (and
+    the ``spec`` to key it), each rung's analytic value is only the
+    *prior*: the measured dispatch→ready EWMA is blended in with a
+    confidence weight on its sample count, so the column converges to
+    what the serving engine actually observed.  Columns are kept
+    **isotonic** — a noisy measurement must never report a larger bucket
+    as faster than a smaller one (that would break ``bucket_for``
+    selection and the bucketed simulators' service model), so each rung
+    is clamped to at least the rung below it.
     """
     if max_batch <= 0:
         return full_batch_ms
-    frac = overhead_frac + (1.0 - overhead_frac) * min(bucket, max_batch) \
-        / max_batch
-    return full_batch_ms * min(frac, 1.0)
+    if calibration is None or spec is None:
+        # the analytic shape is monotone by construction (affine in the
+        # bucket with a non-negative slope once frac is capped at 1)
+        return _analytic_bucket_ms(full_batch_ms, bucket, max_batch,
+                                   overhead_frac)
+    # calibrated: walk the ladder up to the requested rung, carrying the
+    # running max so the returned value respects the isotonic guarantee
+    out = 0.0
+    target = min(bucket, max_batch)
+    for b in bucket_ladder(max_batch):
+        prior = _analytic_bucket_ms(full_batch_ms, b, max_batch,
+                                    overhead_frac)
+        out = max(out, calibration.blended_latency_ms(spec, b, prior))
+        if b >= target:
+            break
+    return out
 
 
 # Chip-tier divisors of full_chips: a ~1.33x-spaced ladder down to 1/16.
@@ -155,20 +187,34 @@ class LUT:
             out.append(p)
         return out
 
-    def bucket_latencies(self, point: OpPoint, max_batch: int
-                         ) -> Dict[int, float]:
+    def bucket_latencies(self, point: OpPoint, max_batch: int,
+                         calibration=None) -> Dict[int, float]:
         """Per-bucket latency columns for one operating point (inspection
         helper).
 
         The stored ``latency_ms`` is the pad-to-max (full batch) cost; the
         columns expand it with :func:`bucket_latency_ms`, the same model
         the batching-aware service model in ``traffic.driver.simulate``
-        applies point-wise.  Use this to tabulate a point's whole ladder
-        (reports, EXPERIMENTS.md); the hot paths call
-        :func:`bucket_latency_ms` directly.
+        applies point-wise.  With a ``calibration`` store the measured
+        per-bucket EWMAs are blended over the analytic prior and the
+        column is isotonic-guarded (see :func:`bucket_latency_ms`).  Use
+        this to tabulate a point's whole ladder (reports,
+        EXPERIMENTS.md); the hot paths call :func:`bucket_latency_ms`
+        directly.
         """
-        return {b: bucket_latency_ms(point.latency_ms, b, max_batch)
-                for b in bucket_ladder(max_batch)}
+        # single bottom-up walk: blend each rung, carry the running max
+        # (bucket_latency_ms performs the same walk for one rung; calling
+        # it per rung would redo the prefix each time)
+        col: Dict[int, float] = {}
+        run = 0.0
+        for b in bucket_ladder(max_batch):
+            v = _analytic_bucket_ms(point.latency_ms, b, max_batch,
+                                    BUCKET_OVERHEAD_FRAC)
+            if calibration is not None:
+                v = calibration.blended_latency_ms(point.subnet, b, v)
+            run = max(run, v)
+            col[b] = run
+        return col
 
     def fastest(self, chips_available: int, max_freq: float = 1.0,
                 power_budget_w: Optional[float] = None) -> OpPoint:

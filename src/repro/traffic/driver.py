@@ -159,17 +159,21 @@ def _register_classes(arbiter: ResourceArbiter, classes: Sequence[SLOClass],
 
 
 def _service_ms(full_ms: float, occupancy: int, max_batch: int,
-                service_model: str) -> float:
+                service_model: str, *, spec=None, calibration=None) -> float:
     """Cost of one serving batch of ``occupancy`` requests.
 
     The LUT point latency is the profiled pad-to-max (full batch) cost;
     the bucketed model pays only the nearest power-of-two bucket, the
-    padded baseline always pays the full forward.
+    padded baseline always pays the full forward.  With a warmed
+    :class:`repro.runtime.telemetry.CalibrationStore` (and the point's
+    ``spec`` to key it) the bucket cost is the MEASURED dispatch→ready
+    EWMA blended over that analytic prior — a replayed trace then
+    predicts with the numbers the live engine actually observed.
     """
     if service_model == PADDED_SERVICE:
         return full_ms
     return bucket_latency_ms(full_ms, bucket_for(occupancy, max_batch),
-                             max_batch)
+                             max_batch, calibration=calibration, spec=spec)
 
 
 def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
@@ -177,7 +181,8 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
              g_fn: Callable[[float], GlobalConstraints], *,
              interval_s: float = 0.1, policy: str = SLO_POLICY,
              service_model: str = BUCKETED_SERVICE,
-             max_drain_s: float = 120.0) -> TrafficReport:
+             max_drain_s: float = 120.0,
+             calibration=None) -> TrafficReport:
     """Deterministic discrete-event run of a traffic trace.
 
     Virtual time advances in constraint-clock epochs of ``interval_s``.
@@ -190,12 +195,20 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     for ``k`` under ``service_model="bucketed"`` or the full pad-to-max
     latency under ``"padded"``.  A batch locks in the service time
     current when it starts.
+
+    ``calibration`` (a warmed :class:`repro.runtime.telemetry
+    .CalibrationStore`, typically recorded by :func:`drive_live`) makes
+    the replay CLOSED-LOOP: the arbiter water-fills on calibrated point
+    latencies and measured tenant watts, and every batch is priced by
+    the measured per-bucket EWMA instead of the analytic bucket model —
+    so a recorded trace predicts the live system with measured numbers.
     """
     assert policy in POLICIES, policy
     assert service_model in SERVICE_MODELS, service_model
     by_class = {c.name: c for c in classes}
     stats = {c.name: ClassStats() for c in classes}
-    arbiter = ResourceArbiter(interval_s=interval_s)
+    arbiter = ResourceArbiter(interval_s=interval_s,
+                              calibration=calibration)
     admitted = _register_classes(arbiter, classes, luts, policy, g_fn(0.0))
 
     events = arr.merge({n: ts for n, ts in streams.items()})
@@ -205,8 +218,9 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     last_arrival = events[-1][0] if events else 0.0
 
     def svc_of(allocs):
-        return {n: (a.point.latency_ms if a.point is not None else None)
-                for n, a in allocs.items()}
+        # the granted OpPoint (not just its latency): the calibrated
+        # service model needs the subnet spec to key the measured columns
+        return {n: a.point for n, a in allocs.items()}
 
     ei = 0
     t = 0.0
@@ -254,8 +268,10 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 # JOINS a batch — don't double-count its service)
                 q_len = len(queues[name])
                 occ = min(q_len + 1, c.max_batch)
-                batch_ms = _service_ms(svc[name], occ, c.max_batch,
-                                       service_model)
+                batch_ms = _service_ms(svc[name].latency_ms, occ,
+                                       c.max_batch, service_model,
+                                       spec=svc[name].subnet,
+                                       calibration=calibration)
                 n_batches = math.ceil((q_len + 1) / c.max_batch)
                 eta_ms = (max(0.0, busy_until[name] - ta) * 1e3
                           + n_batches * batch_ms)
@@ -265,8 +281,8 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
             queues[name].append(ta)
 
         for name, q in queues.items():
-            s_ms = svc.get(name)
-            if s_ms is None:
+            pt = svc.get(name)
+            if pt is None:
                 continue   # starved this epoch; queue waits
             c = by_class[name]
             st = stats[name]
@@ -284,8 +300,9 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                     else:
                         break
                 k = max(k, 1)
-                done = start + _service_ms(s_ms, k, c.max_batch,
-                                           service_model) / 1e3
+                done = start + _service_ms(pt.latency_ms, k, c.max_batch,
+                                           service_model, spec=pt.subnet,
+                                           calibration=calibration) / 1e3
                 busy_until[name] = done
                 st.batches += 1
                 st.batch_occupancy += k

@@ -1,0 +1,397 @@
+"""Measurement loop (PR 5): CalibrationStore, calibrated LUT columns,
+energy-aware water-filling, exactly-once arrival smoothing, the
+out-of-order completion clamp, and simulate-vs-live parity."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.types import ElasticSpace, SubnetSpec
+from repro.runtime import (CalibrationStore, GlobalConstraints,
+                           ResourceArbiter, bucket_latency_ms, model_lut)
+from repro.runtime import hwmodel as hm
+from repro.runtime.engine import _InFlight
+from repro.runtime.lut import BUCKET_OVERHEAD_FRAC
+
+FULL = SubnetSpec()
+HALF = SubnetSpec(width_mult=0.5)
+SPACE = ElasticSpace(width_mults=(0.5, 1.0))
+TERMS = hm.RooflineTerms(t_compute=0.02, t_memory=0.008, t_collective=0.004)
+
+
+def make_lut(scale=1.0, chips=(256, 128, 64, 32)):
+    terms = hm.RooflineTerms(TERMS.t_compute * scale, TERMS.t_memory * scale,
+                             TERMS.t_collective * scale)
+    hw = [hm.HwState(chips=c, freq=f) for c in chips for f in hm.FREQ_LADDER]
+    return model_lut(SPACE.enumerate(), full_terms=terms, full_chips=256,
+                     hw_states=hw)
+
+
+def tiny_server(**kw):
+    import jax
+    from repro.models.vit import ViTConfig, vit_apply, vit_init
+    from repro.runtime import DynamicServer
+    cfg = ViTConfig(name="t", img_res=16, patch=8, n_layers=2, d_model=32,
+                    n_heads=4, d_ff=64, n_classes=4, compute_dtype="float32")
+    params = vit_init(jax.random.PRNGKey(0), cfg)
+    dims = {"d_model": 32, "d_ff": 64, "n_heads": 4, "n_layers": 2}
+    return DynamicServer(lambda p, x, E: vit_apply(p, x, cfg, E=E)[0],
+                         params, dims, **kw)
+
+
+# --- CalibrationStore unit behaviour -----------------------------------------
+
+def test_store_blends_measured_over_prior_by_confidence():
+    store = CalibrationStore()
+    prior = 100.0
+    assert store.blended_latency_ms(FULL, 1, prior) == prior  # no samples
+    store.note_latency(FULL, 1, 10.0, max_batch=8)
+    one = store.blended_latency_ms(FULL, 1, prior)
+    assert 10.0 < one < prior          # one sample only nudges the prior
+    for _ in range(100):
+        store.note_latency(FULL, 1, 10.0, max_batch=8)
+    many = store.blended_latency_ms(FULL, 1, prior)
+    assert many < one                  # confidence grows with samples
+    # w = n/(n+K): at n=101, 93% measured / 7% prior
+    expect = (101 / 109) * 10.0 + (8 / 109) * prior
+    assert many == pytest.approx(expect, rel=1e-6)
+
+
+def test_store_point_latency_projects_bucket_to_full():
+    store = CalibrationStore()
+    # a bucket-2 observation on an 8-ladder implies full-batch = ms / frac
+    frac = BUCKET_OVERHEAD_FRAC + (1 - BUCKET_OVERHEAD_FRAC) * 2 / 8
+    for _ in range(200):
+        store.note_latency(FULL, 2, 5.0, max_batch=8)
+    prior = 20.0
+    w = 200 / 208
+    est = store.point_latency_ms(FULL, prior_ms=prior)
+    assert est == pytest.approx(w * (5.0 / frac) + (1 - w) * prior, rel=1e-6)
+
+
+def test_store_power_scale_is_duty_cycle_ratio():
+    store = CalibrationStore()
+    assert store.power_scale("t") == 1.0          # prior
+    for _ in range(100):
+        store.note_power("t", measured_w=50.0, modelled_w=200.0)
+    w = 100 / 108        # ratio blended with the 1.0 prior by confidence
+    assert store.power_scale("t") == pytest.approx(
+        w * 0.25 + (1 - w) * 1.0, rel=1e-6)
+    # energy/busy bookkeeping
+    store.note_energy("t", energy_mj=400.0, busy_s=2.0)
+    assert store.busy_power_w("t") == pytest.approx(0.2)   # 0.4 J / 2 s
+    store.note_energy("t", -5.0, 1.0)             # negative: ignored
+    assert store.busy_power_w("t") == pytest.approx(0.2)
+
+
+def test_store_save_load_roundtrip(tmp_path):
+    store = CalibrationStore()
+    for _ in range(10):
+        store.note_latency(HALF, 4, 7.5, max_batch=8)
+        store.note_power("api", 80.0, 160.0)
+    store.note_energy("api", 100.0, 0.5)
+    path = str(tmp_path / "cal.json")
+    store.save(path)
+    again = CalibrationStore.load(path)
+    assert again.latency_ms(HALF, 4) == pytest.approx(store.latency_ms(HALF, 4))
+    assert again.latency_samples(HALF, 4) == 10
+    assert again.power_scale("api") == pytest.approx(store.power_scale("api"))
+    assert again.busy_power_w("api") == pytest.approx(0.2)  # 0.1 J / 0.5 s
+
+
+# --- satellite: isotonic bucket columns --------------------------------------
+
+def test_bucket_column_isotonic_under_noisy_measurements():
+    """A calibrated column must never report a larger bucket as faster
+    than a smaller one — noisy EWMAs would otherwise break bucket_for
+    selection and the bucketed service model."""
+    store = CalibrationStore()
+    # pathological measurements: bucket 4 "slower" than bucket 8
+    for _ in range(200):
+        store.note_latency(FULL, 4, 50.0, max_batch=8)
+        store.note_latency(FULL, 8, 20.0, max_batch=8)
+    lut = make_lut()
+    point = next(p for p in lut.points if p.subnet == FULL)
+    col = lut.bucket_latencies(point, 8, calibration=store)
+    ladder = sorted(col)
+    assert all(col[a] <= col[b] for a, b in zip(ladder, ladder[1:])), col
+    # the direct hot-path call agrees with the column (same guard)
+    for b in ladder:
+        assert bucket_latency_ms(point.latency_ms, b, 8, calibration=store,
+                                 spec=FULL) == pytest.approx(col[b])
+    # bucket 8 was clamped UP to bucket 4's level, not 4 down to 8's
+    assert col[8] >= col[4]
+
+
+def test_bucket_column_analytic_unchanged_without_store():
+    lut = make_lut()
+    point = next(p for p in lut.points if p.subnet == FULL)
+    col = lut.bucket_latencies(point, 8)
+    assert col[8] == pytest.approx(point.latency_ms)
+    frac1 = BUCKET_OVERHEAD_FRAC + (1 - BUCKET_OVERHEAD_FRAC) / 8
+    assert col[1] == pytest.approx(point.latency_ms * frac1)
+
+
+# --- satellite: out-of-order completion clamp --------------------------------
+
+def test_out_of_order_completion_never_integrates_negative_energy():
+    """dt = t_ready - max(t_dispatch, _last_ready) goes negative when a
+    pipelined completion lands after a later batch already advanced
+    _last_ready — it must clamp to 0, not subtract busy time/energy."""
+    server = tiny_server()
+    hw = hm.HwState(chips=1, freq=1.0)
+    # a batch that "completed" before an earlier one: _last_ready is
+    # already far in the future when this completion lands
+    server._last_ready = time.perf_counter() + 100.0
+    stale = _InFlight(out=np.zeros((1, 4), "float32"), reqs=[],
+                      t_dispatch=time.perf_counter() - 1.0, hw=hw,
+                      subnet="full", buf_key=(1, (), "f4"), buf=None,
+                      spec=FULL, bucket=1)
+    server._complete(stale)
+    assert server.busy_s == 0.0                 # clamped, not negative
+    assert server.measured_energy_mj == 0.0
+    # _last_ready must not move backwards either
+    assert server._last_ready >= time.perf_counter() + 50.0
+
+
+def test_completion_records_latency_into_store():
+    store = CalibrationStore()
+    server = tiny_server(calibration=store, tenant="api")
+    server.start()
+    try:
+        x = np.zeros((16, 16, 3), "float32")
+        fut = server.submit(x)
+        assert fut.get(timeout=60)["y"].shape == (4,)
+    finally:
+        server.stop()
+    assert store.latency_samples(FULL, 1) >= 1
+    assert store.latency_ms(FULL, 1) > 0
+    # per-tenant energy/busy recorded under the tenant label
+    assert store.busy_power_w("api") is not None
+
+
+# --- satellite: exactly-once arrival-rate smoothing --------------------------
+
+def test_step_change_converges_at_configured_beta():
+    """After a rate step 0 -> R, the live-tenant EWMA must follow the
+    single-smoothing trajectory R * (1 - beta^k) — the old path smoothed
+    externally-reported rates AND the server counter (beta applied twice
+    per observation), converging at beta^2 and corrupting the adaptive
+    batching window pushed back via note_arrival_rate."""
+    from repro.runtime.arbiter import _EWMA_BETA
+    clock = [0.0]
+    interval = 0.1
+    arb = ResourceArbiter(interval_s=interval, time_fn=lambda: clock[0])
+    server = tiny_server()
+    lut = make_lut(chips=(1,))
+    w = arb.register("a", lut, target_latency_ms=1e6, server=server)
+    g = GlobalConstraints(total_chips=1)
+    x = np.zeros((16, 16, 3), "float32")
+    rate = 100.0
+    futs = []
+    expected = 0.0
+    try:
+        for k in range(6):
+            for _ in range(int(rate * interval)):   # 10 arrivals/epoch
+                futs.append(server.submit(x))
+            # a driver also reporting the SAME arrivals via set_active
+            # must not smooth them a second time (server is authoritative)
+            arb.set_active("a", True, arrival_rate_rps=rate)
+            clock[0] += interval
+            arb.arbitrate(g)
+            expected = _EWMA_BETA * expected + (1 - _EWMA_BETA) * rate
+            assert w.arrival_ewma == pytest.approx(expected, rel=1e-6), (
+                f"epoch {k}: EWMA {w.arrival_ewma} != single-smoothing "
+                f"trajectory {expected}")
+    finally:
+        server.stop()
+    for f in futs:
+        f.get(timeout=5)
+
+
+def test_mid_cycle_preempt_does_not_resmooth_partial_window():
+    """preempt() re-arbitrates mid-cycle; the few arrivals since the last
+    tick must fold into the NEXT window, not be divided by a full
+    interval and EWMA'd again (double smoothing + rate inflation)."""
+    from repro.runtime.arbiter import _EWMA_BETA
+    clock = [0.0]
+    interval = 0.1
+    arb = ResourceArbiter(interval_s=interval, time_fn=lambda: clock[0])
+    server = tiny_server()
+    lut = make_lut(chips=(1,))
+    w = arb.register("a", lut, target_latency_ms=1e6, server=server)
+    g = GlobalConstraints(total_chips=1)
+    x = np.zeros((16, 16, 3), "float32")
+    futs = [server.submit(x) for _ in range(10)]
+    clock[0] += interval
+    arb.arbitrate(g)
+    after_tick = w.arrival_ewma
+    assert after_tick == pytest.approx((1 - _EWMA_BETA) * 100.0, rel=1e-6)
+    # 2 arrivals land, then a preempt fires 10 ms into the cycle
+    futs += [server.submit(x) for _ in range(2)]
+    clock[0] += 0.01
+    arb.preempt("a", g)
+    assert w.arrival_ewma == after_tick          # no partial-window smooth
+    assert w.rate_pending == 2                   # folded into the next one
+    # the full tick later, those 2 arrivals count exactly once, over the
+    # ACTUAL elapsed window (0.01 + 0.09 = one interval)
+    clock[0] += 0.09
+    arb.arbitrate(g)
+    expected = _EWMA_BETA * after_tick + (1 - _EWMA_BETA) * (2 / interval)
+    assert w.arrival_ewma == pytest.approx(expected, rel=1e-6)
+    server.stop()
+    for f in futs:
+        f.get(timeout=5)
+
+
+def test_set_active_still_smooths_simulated_tenants():
+    """Tenants WITHOUT a server keep the set_active smoothing path (the
+    discrete-event drivers report per-epoch rates there)."""
+    from repro.runtime.arbiter import _EWMA_BETA
+    arb = ResourceArbiter()
+    w = arb.register("a", make_lut(), target_latency_ms=40.0)
+    arb.set_active("a", True, arrival_rate_rps=100.0)
+    assert w.arrival_ewma == pytest.approx((1 - _EWMA_BETA) * 100.0)
+
+
+# --- calibrated planning (arbiter) -------------------------------------------
+
+def test_measured_watts_let_second_tenant_under_power_budget():
+    """Open-loop, the power budget fits ONE modelled slice; with measured
+    duty cycles attached, priced watts halve and both tenants fit — the
+    energy-aware water-filling headline behaviour."""
+    lut = make_lut(chips=(1,))
+    one_slice_w = hm.slice_power_w(hm.HwState(chips=1, freq=0.4))
+    g = GlobalConstraints(total_chips=2, power_budget_w=1.5 * one_slice_w)
+    target = max(p.latency_ms for p in lut.points) + 1.0   # any point meets
+
+    open_loop = ResourceArbiter()
+    open_loop.register("a", lut, target_latency_ms=target)
+    open_loop.register("b", lut, target_latency_ms=target)
+    allocs = open_loop.arbitrate(g)
+    assert allocs["a"].feasible and not allocs["b"].feasible
+
+    store = CalibrationStore()
+    for _ in range(100):
+        store.note_power("a", 0.5 * one_slice_w, one_slice_w)
+        store.note_power("b", 0.5 * one_slice_w, one_slice_w)
+    closed = ResourceArbiter(calibration=store)
+    closed.register("a", lut, target_latency_ms=target)
+    closed.register("b", lut, target_latency_ms=target)
+    allocs = closed.arbitrate(g)
+    assert allocs["a"].feasible and allocs["b"].feasible
+    # priced watts (not raw modelled watts) respect the budget
+    assert sum(a.priced_power_w for a in allocs.values()) \
+        <= g.power_budget_w + 1e-9
+
+
+# --- satellite: simulate-vs-drive_live parity --------------------------------
+
+def test_calibrated_simulate_closer_to_live_p95_than_analytic():
+    """After a calibration warm-up on a seeded trace, replaying it
+    through simulate(calibration=store) must predict the live per-class
+    p95 better than the analytic model does — the whole point of feeding
+    measurement back into the planner."""
+    from repro.traffic import DEGRADE, SLOClass, drive_live, poisson, simulate
+    probe = tiny_server()
+    x = np.zeros((8, 16, 16, 3), "float32")
+    real_ms = probe.measure(FULL, x)     # true full-batch wall clock
+    # open-loop failure mode: the analytic profile is ~96x pessimistic —
+    # wildly enough that host-contention noise in the live p95 can never
+    # bring it closer to the truth than the calibrated replay
+    terms = hm.RooflineTerms(96.0 * real_ms / 1e3, 0.0, 0.0)
+    lut = model_lut([FULL], full_terms=terms, full_chips=1,
+                    hw_states=[hm.HwState(chips=1, freq=1.0)])
+    # max_batch=1 mirrors the engine below: one request = one dispatch,
+    # so the calibrated service model prices exactly what was measured
+    cls = SLOClass("api", deadline_ms=300.0 * real_ms, priority=1,
+                   drop_policy=DEGRADE, max_batch=1)
+    streams = {"api": list(poisson(10.0, 2.0, seed=5))}
+
+    store = CalibrationStore()
+    server = tiny_server(calibration=store, tenant="api", timeout_ms=1.0,
+                         max_batch=1)
+    server.warm([FULL], example_input=x[0])
+    arb = ResourceArbiter(interval_s=0.05)
+    arb.register("api", lut, target_latency_ms=cls.service_target_ms,
+                 priority=1, server=server)
+    live = drive_live([cls], {"api": server}, arb, streams,
+                      lambda n: x[0],
+                      g_fn=lambda: GlobalConstraints(total_chips=1))
+    p95_live = live.classes["api"].p(95)
+    assert live.classes["api"].completed > 0
+    assert store.latency_samples(FULL, 1) > 0    # warm-up really recorded
+
+    g_fn = lambda t: GlobalConstraints(total_chips=1)
+    analytic = simulate([cls], {"api": lut}, streams, g_fn,
+                        interval_s=0.05)
+    calibrated = simulate([cls], {"api": lut}, streams, g_fn,
+                          interval_s=0.05, calibration=store)
+    err_analytic = abs(analytic.classes["api"].p(95) - p95_live)
+    err_cal = abs(calibrated.classes["api"].p(95) - p95_live)
+    assert err_cal < err_analytic, (
+        f"calibrated p95 {calibrated.classes['api'].p(95):.2f}ms vs "
+        f"analytic {analytic.classes['api'].p(95):.2f}ms, live "
+        f"{p95_live:.2f}ms")
+
+
+def test_calibrated_latency_flips_feasibility():
+    """Analytic says the target is impossible; measurement says it is
+    met — the calibrated arbiter must plan off the measurement."""
+    lut = make_lut(chips=(1,))
+    fastest = min(p.latency_ms for p in lut.points)
+    target = 0.5 * fastest          # analytically infeasible everywhere
+    g = GlobalConstraints(total_chips=2)
+
+    open_loop = ResourceArbiter()
+    open_loop.register("a", lut, target_latency_ms=target)
+    assert not open_loop.arbitrate(g)["a"].feasible
+
+    store = CalibrationStore()
+    for _ in range(200):            # measured: ~0.1 * target, well under
+        store.note_latency(FULL, 8, 0.1 * target, max_batch=8)
+        store.note_latency(HALF, 8, 0.1 * target, max_batch=8)
+    closed = ResourceArbiter(calibration=store)
+    closed.register("a", lut, target_latency_ms=target)
+    alloc = closed.arbitrate(g)["a"]
+    assert alloc.feasible
+    assert alloc.point.latency_ms <= target   # the calibrated latency
+
+
+# --- satellite: benchmark trajectory gate ------------------------------------
+
+def test_bench_compare_flags_headline_regressions():
+    """run.py --compare: deterministic headlines are gated >10% relative
+    to the previous file; noisy live ratios are gated on their absolute
+    ceiling (the bench's own invariant), not prev-relative."""
+    import pathlib
+    import sys
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    sys.path.insert(0, root)
+    try:
+        from benchmarks.run import compare_headlines
+    finally:
+        sys.path.remove(root)
+    prev = {"s": [
+        {"name": "calibration/energy_ratio", "value": 0.5, "derived": ""},
+        {"name": "traffic/serving_bucketed_speedup", "value": 1.5,
+         "derived": ""},
+    ]}
+    assert compare_headlines(prev, prev) == []
+    worse = {"s": [
+        {"name": "calibration/energy_ratio", "value": 1.07,
+         "derived": ""},                        # above the 1.0 ceiling
+        {"name": "traffic/serving_bucketed_speedup", "value": 1.3,
+         "derived": ""},                        # -13% (higher is better)
+    ]}
+    flagged = {r[0] for r in compare_headlines(prev, worse)}
+    assert flagged == {"calibration/energy_ratio",
+                       "traffic/serving_bucketed_speedup"}
+    # run-to-run live noise (several-fold, still under the ceiling) and
+    # within-tolerance deterministic drift are NOT flagged
+    near = {"s": [
+        {"name": "calibration/energy_ratio", "value": 0.9, "derived": ""},
+        {"name": "traffic/serving_bucketed_speedup", "value": 1.4,
+         "derived": ""},
+    ]}
+    assert compare_headlines(prev, near) == []
