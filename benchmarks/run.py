@@ -9,7 +9,12 @@ perf trajectory accumulates across PRs (BENCH_<n>.json files at the repo
 root; BENCH_3.json records the bucketed-vs-padded serving comparison,
 BENCH_4.json the cluster scale-out and p2c-vs-round-robin routing,
 BENCH_5.json the calibration loop: closed-loop energy ratio and replay
-p95-error ratio).
+p95-error ratio, BENCH_6.json the placement engine: rebalanced-vs-static
+goodput under skew and the zero-migration steady-load guard).
+
+``--suite SUBSTR`` runs only the suites whose title contains SUBSTR —
+the tier-1 smoke test uses it to gate the placement headline in seconds
+instead of re-running every paper experiment.
 
 ``--compare PREV.json`` guards the trajectory: after the run, every
 HEADLINE metric present in both the previous file and this run is
@@ -36,6 +41,10 @@ HEADLINES = {
     "cluster/scale/2_node_speedup": {"direction": "higher", "tol": 0.10},
     "calibration/energy_ratio": {"max": 1.0},
     "calibration/p95_err_ratio": {"max": 1.0},
+    "placement/rebalance_goodput_ratio": {"direction": "higher",
+                                          "tol": 0.10},
+    # absolute: steady load must NEVER migrate, in any mode
+    "placement/steady_migrations": {"max": 0.0},
 }
 REGRESSION_TOL = 0.10
 
@@ -84,6 +93,7 @@ def main() -> None:
     import benchmarks.bench_governor as bg
     import benchmarks.bench_kernels as bk
     import benchmarks.bench_pareto as bp
+    import benchmarks.bench_placement as bpl
     import benchmarks.bench_switching as bs
     import benchmarks.bench_traffic as bt
     import benchmarks.roofline_table as rt
@@ -96,6 +106,8 @@ def main() -> None:
     ap.add_argument("--compare", metavar="PREV_JSON", default=None,
                     help="exit non-zero on >10%% regression of any "
                          "headline metric vs a previous --json file")
+    ap.add_argument("--suite", metavar="SUBSTR", default=None,
+                    help="run only suites whose title contains SUBSTR")
     args = ap.parse_args()
 
     suites = [
@@ -106,12 +118,20 @@ def main() -> None:
          lambda: bt.run(smoke=args.smoke)),
         ("cluster (multi-node scale-out, p2c vs round-robin, admission)",
          lambda: bc.run(smoke=args.smoke)),
+        ("placement (rebalance vs static first-fit; no-flapping; "
+         "autoscale)",
+         lambda: bpl.run(smoke=args.smoke)),
         ("calibration (closed-loop measured planning vs open-loop)",
          lambda: bcal.run(smoke=args.smoke)),
         ("switching (paper: runtime architecture switching)", bs.run),
         ("kernels (elastic matmul / flash attention)", bk.run),
         ("roofline (dry-run derived)", rt.rows),
     ]
+    if args.suite:
+        suites = [(title, fn) for title, fn in suites
+                  if args.suite in title]
+        if not suites:
+            sys.exit(f"--suite {args.suite!r} matched no suite")
     failures = 0
     results = {}
     print("name,us_per_call,derived")

@@ -1,6 +1,6 @@
 """Multi-node cluster serving walkthrough.
 
-Four acts:
+Five acts:
 
 1. **Scale-out (virtual time)** — one overloaded SLO class replayed
    against 1-node and 2-node clusters through the deterministic
@@ -21,6 +21,13 @@ Four acts:
    a cluster started with ``health_interval_s`` watches every node's
    completion counters, and a wedged replica's stuck futures all resolve
    with failed payloads instead of hanging their callers.
+5. **Placement engine (virtual time)** — the PR-6 rebalancer end to
+   end: an overloaded class first-fit-parked on ONE hot node scales
+   out through priced migrations (warmup charged, hysteresis-gated); a
+   backlogged high-priority class cross-node-preempts a co-located
+   low-priority replica that keeps serving from its other home; a
+   burst wakes a STANDBY node; and once the burst passes, expensive
+   energy parks the idle spare again.
 
     PYTHONPATH=src python examples/cluster_serving.py
 """
@@ -29,7 +36,8 @@ import time
 import jax
 import numpy as np
 
-from repro.cluster import (DEAD, P2C, ROUND_ROBIN, Cluster, ClusterNode,
+from repro.cluster import (DEAD, FIRST_FIT, LEAST_LOADED, P2C, ROUND_ROBIN,
+                           STANDBY, UP, Cluster, ClusterNode,
                            simulate_cluster)
 from repro.core.types import ElasticSpace, SubnetSpec
 from repro.models.vit import ViTConfig, vit_apply, vit_init
@@ -165,8 +173,71 @@ def act_4_wedged_node_auto_failover():
     cluster.stop()
 
 
+def act_5_placement_engine():
+    print("== act 5: global placement engine ==")
+    lut = model_lut(SPACE.enumerate(), full_terms=TERMS, full_chips=256)
+
+    # 5a: hot node -> priced migrations.  First-fit parks the whole
+    # class on n0; the rebalancer pays warmup to scale it out.
+    cls = [SLOClass("api", deadline_ms=200.0, priority=2,
+                    drop_policy=DEGRADE)]
+    kw = dict(luts={"api": lut},
+              streams={"api": poisson(2500.0, 6.0, seed=5)},
+              router=LEAST_LOADED, placement_mode=FIRST_FIT)
+    def nodes3():
+        return make_nodes([256, 256, 256])
+    static = simulate_cluster(cls, nodes=nodes3(), **kw)
+    rebal = simulate_cluster(cls, nodes=nodes3(),
+                             rebalance_at=[0.5, 1.5, 2.5], **kw)
+    print(f"  5a hot node: static goodput={static.total_goodput}, "
+          f"rebalanced={rebal.total_goodput} after "
+          f"{len(rebal.migrations)} priced migrations "
+          f"(warmup {rebal.migration_energy_mj / 1e3:.0f}J charged)")
+
+    # 5b: cross-node preemption.  A backlogged priority-3 class evicts
+    # the priority-0 replica sharing its node; the victim keeps serving
+    # from its other home.
+    rep = simulate_cluster(
+        [SLOClass("hot", deadline_ms=200.0, priority=3,
+                  drop_policy=DEGRADE),
+         SLOClass("bulk", deadline_ms=200.0, priority=0,
+                  drop_policy=DEGRADE)],
+        {"hot": lut, "bulk": lut},
+        {"hot": poisson(2500.0, 3.0, seed=17),
+         "bulk": poisson(50.0, 3.0, seed=18)},
+        make_nodes([256, 256]), router=LEAST_LOADED, rebalance_at=[0.5])
+    ev = rep.preempted[0]
+    print(f"  5b preemption: {ev[1]!r} evicted from {ev[2]} for "
+          f"{ev[3]!r} at t={ev[0]:.1f}s; bulk still completed "
+          f"{rep.classes['bulk'].completed}")
+
+    # 5c: autoscale up.  A burst against UP + STANDBY: sustained
+    # backlog wakes the spare, which serves after its priced warmup.
+    up_nodes = make_nodes([256, 256])
+    up_nodes[1].state = STANDBY
+    rep = simulate_cluster(cls, {"api": lut},
+                           {"api": poisson(3000.0, 4.0, seed=13)},
+                           up_nodes, router=LEAST_LOADED,
+                           scale_at=[1.0, 2.0, 3.0])
+    print(f"  5c spin-up: {rep.scale_events} "
+          f"(n1 then served {rep.routed['api'].get('n1', 0)} requests)")
+
+    # 5d: autoscale down.  A trickle one node absorbs + expensive
+    # energy parks the idle spare back to STANDBY.
+    down_nodes = make_nodes([256, 64])
+    rep = simulate_cluster(
+        [SLOClass("api", deadline_ms=200.0, priority=2,
+                  drop_policy=SHED)],
+        {"api": lut}, {"api": [i * 0.25 for i in range(40)]},
+        down_nodes, router=LEAST_LOADED, scale_at=[8.0],
+        energy_price_fn=lambda t: 2.0)
+    print(f"  5d spin-down: {rep.scale_events} -> n1 state "
+          f"{down_nodes[1].state!r} (idle + price 2.0)")
+
+
 if __name__ == "__main__":
     act_1_scale_out()
     act_2_skewed_routing()
     act_3_live_lifecycle()
     act_4_wedged_node_auto_failover()
+    act_5_placement_engine()

@@ -25,9 +25,16 @@ under a cluster front-end that adds
   (``benchmarks/bench_cluster.py``).
 """
 from repro.cluster.node import (DEAD, DRAINED, DRAINING, HEALTH_EPOCHS,
-                                NODE_STATES, UP, ClusterNode, StallDetector)
+                                NODE_STATES, STANDBY, UP, ClusterNode,
+                                StallDetector)
 from repro.cluster.router import (LEAST_LOADED, P2C, ROUND_ROBIN, ROUTERS,
                                   ClusterRouter)
 from repro.cluster.admission import cluster_admission, cluster_headroom
+from repro.cluster.placement import (ClassSpec, Eviction, MigrationCost,
+                                     Move, PlacementPlan, RebalancePlan,
+                                     ScalePlan, migration_cost,
+                                     plan_preemptions, plan_rebalance,
+                                     plan_scaling, solve_placement)
 from repro.cluster.frontend import Cluster
-from repro.cluster.sim import ClusterReport, simulate_cluster
+from repro.cluster.sim import (FIRST_FIT, REPLICATE, ClusterReport,
+                               simulate_cluster)

@@ -17,6 +17,13 @@ a single serving surface:
   with an error payload (:meth:`DynamicServer.kill`) and orphaned
   classes are re-admitted elsewhere, so the class's share is
   re-arbitrated instead of lost;
+* a **placement engine** (``rebalance_interval_s``) periodically re-runs
+  the cluster-wide water-filling solve (:mod:`repro.cluster.placement`)
+  against the live placements: approved, migration-cost-priced changes
+  move replicas through the arbiter's ``export_tenant`` hook, and
+  cross-node preemptions evict lower-priority replicas co-located with
+  a backlogged higher-priority class (``preempt`` lands the freed share
+  mid-cycle);
 * a **health checker** (``health_interval_s``) closes the liveness loop:
   each health epoch every UP node's cumulative completion counter is
   compared against its outstanding futures
@@ -38,6 +45,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
+from repro.cluster import placement as pl
 from repro.cluster.admission import cluster_admission
 from repro.cluster.node import (DEAD, DRAINED, DRAINING, HEALTH_EPOCHS, UP,
                                 ClusterNode)
@@ -69,7 +77,10 @@ class Cluster:
     def __init__(self, nodes: Sequence[ClusterNode], *,
                  router: str = P2C, router_seed: int = 0,
                  health_interval_s: Optional[float] = None,
-                 health_epochs: int = HEALTH_EPOCHS):
+                 health_epochs: int = HEALTH_EPOCHS,
+                 rebalance_interval_s: Optional[float] = None,
+                 rebalance_hysteresis: float = pl.DEFAULT_HYSTERESIS,
+                 replicas: Optional[int] = None):
         if not nodes:
             raise ValueError("a cluster needs at least one node")
         names = [n.name for n in nodes]
@@ -83,6 +94,19 @@ class Cluster:
         self.health_log: List[str] = []   # nodes auto-failed by health
         self._health_stop = threading.Event()
         self._health_thread: Optional[threading.Thread] = None
+        # periodic cluster-wide rebalancing (the PR-6 placement engine):
+        # None disables the thread; rebalance() stays callable by hand
+        self.rebalance_interval_s = rebalance_interval_s
+        self.rebalance_hysteresis = rebalance_hysteresis
+        self.replicas = replicas
+        self.migration_log: List[tuple] = []   # (t, cls, src, dst)
+        self.preempt_log: List[tuple] = []     # (t, victim, node, for_cls)
+        self._rebalance_stop = threading.Event()
+        self._rebalance_thread: Optional[threading.Thread] = None
+        # classes whose re-admission attempt found no feasible node —
+        # reported in summary() and answered with explicit `no placement`
+        # futures instead of a generic dead-future reason
+        self.unplaceable: set = set()
         for n in nodes:
             n.health.epochs = health_epochs
         # _lock guards the routing state (placements, router picks) and is
@@ -147,7 +171,10 @@ class Cluster:
         """Re-place classes whose every replica died/drained away — the
         failed node's share is re-arbitrated on the survivors.  Caller
         holds _admin_lock; server construction runs outside the routing
-        lock so healthy-node submits keep flowing."""
+        lock so healthy-node submits keep flowing.  A class NO survivor
+        can host is recorded as unplaceable (``summary()`` reports it,
+        submits resolve with an explicit `no placement` payload) instead
+        of being silently retried."""
         with self._lock:
             orphans = [(name, info) for name, info in self._classes.items()
                        if not self.placements.get(name)]
@@ -160,11 +187,89 @@ class Cluster:
                     priority=info["priority"],
                     min_accuracy=info["min_accuracy"], t=self._now())
             except AdmissionError:
-                continue   # nowhere to go; submits resolve with errors
+                with self._lock:
+                    self.unplaceable.add(name)
+                continue
             for nn in placed:
                 self._place_on(name, info, self.nodes[nn])
             with self._lock:
                 self.placements[name] = list(placed)
+                self.unplaceable.discard(name)
+
+    # --- placement engine (periodic rebalancing + preemption) ---------------
+
+    def _spec_of(self, name: str, info: dict) -> pl.ClassSpec:
+        backlog = 0.0
+        for nn in self.placements.get(name, ()):
+            node = self.nodes[nn]
+            if node.alive and name in node.arbiter.tenants():
+                backlog += node.arbiter.backlog(name)
+        return pl.ClassSpec(name=name, lut=info["lut"],
+                            target_latency_ms=info["target_latency_ms"],
+                            priority=info["priority"],
+                            min_accuracy=info["min_accuracy"],
+                            backlog=backlog)
+
+    def rebalance(self) -> "pl.RebalancePlan":
+        """One cluster-wide rebalance: fresh global solve over the same
+        water-filling objective the node arbiters run, diffed against
+        the live placements, every change priced with its real
+        migration cost (hysteresis — steady load applies nothing).
+        Approved moves register the replica on the destination and
+        export it from the source through the arbiter's migration hook;
+        cross-node preemptions evict lower-priority replicas wherever a
+        backlogged higher-priority class shares its node."""
+        with self._admin_lock:
+            t = self._now()
+            specs = [self._spec_of(n, i) for n, i in self._classes.items()]
+            up_nodes = [n for n in self.nodes.values() if n.routable]
+            with self._lock:
+                current = {n: list(p) for n, p in self.placements.items()}
+            horizon = (self.rebalance_interval_s
+                       if self.rebalance_interval_s else 5.0)
+            plan = pl.plan_rebalance(specs, up_nodes, current, t=t,
+                                     horizon_s=horizon,
+                                     hysteresis=self.rebalance_hysteresis,
+                                     replicas=self.replicas)
+            for mv in plan.moves:
+                info = self._classes[mv.cls]
+                if mv.dst is not None:
+                    self._place_on(mv.cls, info, self.nodes[mv.dst])
+                    with self._lock:
+                        if mv.dst not in self.placements[mv.cls]:
+                            self.placements[mv.cls].append(mv.dst)
+                if mv.src is not None:
+                    self._retire_replica(mv.cls, mv.src)
+                self.migration_log.append((t, mv.cls, mv.src, mv.dst))
+            evs = pl.plan_preemptions(specs, up_nodes, current)
+            for ev in evs:
+                self._retire_replica(ev.victim, ev.node)
+                # the freed share lands NOW, not at the next clock tick
+                node = self.nodes[ev.node]
+                if ev.for_cls in node.arbiter.tenants():
+                    node.arbiter.preempt(ev.for_cls, node.g(t))
+                self.preempt_log.append((t, ev.victim, ev.node, ev.for_cls))
+            return plan
+
+    def _retire_replica(self, name: str, node_name: str):
+        """Take one replica out: stop routing to it, drain its queue,
+        export the registration (server stays up until drained)."""
+        node = self.nodes[node_name]
+        with self._lock:
+            if node_name in self.placements.get(name, ()):
+                self.placements[name].remove(node_name)
+        server = node.servers.pop(name, None)
+        if server is not None:
+            server.drain(timeout_s=5.0)
+        if name in node.arbiter.tenants():
+            node.arbiter.export_tenant(name)
+
+    def _rebalance_loop(self):
+        while not self._rebalance_stop.is_set():
+            self._rebalance_stop.wait(self.rebalance_interval_s)
+            if self._rebalance_stop.is_set():
+                break
+            self.rebalance()
 
     # --- request path -------------------------------------------------------
 
@@ -173,6 +278,12 @@ class Cluster:
             cands = self._routable(name)
             node = self.router.pick(name, cands, t=self._now()) \
                 if cands else None
+            if node is None and name in self.unplaceable:
+                # every replica died AND re-admission found no feasible
+                # node: say so, not just "no routable node"
+                return _dead_future(
+                    f"class {name!r}: no placement — re-admission found "
+                    f"no node able to host its minimal share")
         if node is None:
             return _dead_future(f"class {name!r}: no routable node")
         server = node.servers.get(name)
@@ -204,6 +315,11 @@ class Cluster:
             self._health_thread = threading.Thread(target=self._health_loop,
                                                    daemon=True)
             self._health_thread.start()
+        if self.rebalance_interval_s is not None:
+            self._rebalance_stop.clear()
+            self._rebalance_thread = threading.Thread(
+                target=self._rebalance_loop, daemon=True)
+            self._rebalance_thread.start()
 
     def _health_loop(self):
         # Operator contract: health_epochs x health_interval_s must
@@ -228,9 +344,13 @@ class Cluster:
 
     def stop(self):
         self._health_stop.set()
+        self._rebalance_stop.set()
         if self._health_thread is not None:
             self._health_thread.join(timeout=5)
             self._health_thread = None
+        if self._rebalance_thread is not None:
+            self._rebalance_thread.join(timeout=5)
+            self._rebalance_thread = None
         for node in self.nodes.values():
             if node.alive:
                 node.arbiter.stop()
@@ -290,6 +410,9 @@ class Cluster:
             "placements": {n: list(p) for n, p in self.placements.items()},
             "routed": self.router.routed_counts(),
             "health_failed": list(self.health_log),
+            "unplaceable": sorted(self.unplaceable),
+            "migrations": list(self.migration_log),
+            "preempted": list(self.preempt_log),
             "nodes": {nn: {"state": node.state,
                            "arbiter": node.arbiter.summary()}
                       for nn, node in self.nodes.items()},

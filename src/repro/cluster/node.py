@@ -7,7 +7,8 @@ engines), wrapped with what the cluster front-end needs:
 * a **load signal** — the arbiter's summed queue-depth + arrival-rate
   EWMA backlog, normalised by the node's chip count, so the router can
   compare a busy small node against an idle big one;
-* a **lifecycle state** — UP (routable), DRAINING (stop routing, keep
+* a **lifecycle state** — UP (routable), STANDBY (powered-off pool
+  member the autoscaler can spin up), DRAINING (stop routing, keep
   serving until the queues empty), DRAINED (tenants migrated away), and
   DEAD (fail-stop: queued work resolves with error payloads);
 * a **liveness signal** — :class:`StallDetector` turns the node's
@@ -67,10 +68,11 @@ class StallDetector:
 
 # lifecycle states
 UP = "up"
+STANDBY = "standby"     # powered-off pool member; the autoscaler's spare
 DRAINING = "draining"   # no new routes; queues serve to empty
 DRAINED = "drained"     # graceful exit complete, tenants migrated
 DEAD = "dead"           # fail-stop: queued requests resolve with errors
-NODE_STATES = (UP, DRAINING, DRAINED, DEAD)
+NODE_STATES = (UP, STANDBY, DRAINING, DRAINED, DEAD)
 
 
 @dataclasses.dataclass

@@ -12,10 +12,20 @@ class is placed.  Three policies, all deterministic under a fixed seed:
 * ``p2c``           — power-of-two-choices (Mitzenmacher 2001): sample
   two distinct candidates with a seeded rng, send to the less loaded.
   Near-least-loaded tail behaviour without the herding, and the default.
+
+The placement engine steers traffic with **weight hints**
+(:meth:`ClusterRouter.set_weight`): a per-(class, node) multiplier on
+the load signal's attractiveness.  Weight 0 takes a replica out of
+rotation entirely — how a WARMING replica (mid-migration or a freshly
+spun-up node) avoids traffic until its weights have transferred and its
+buckets are compiled — and weights scale the compared load otherwise
+(weight 2 looks half as loaded).  Round-robin honours only the
+in/out-of-rotation part.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence, Tuple
+import collections
+from typing import Callable, Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -32,7 +42,10 @@ class ClusterRouter:
 
     ``decisions`` logs every pick as ``(t, class, node)`` — the cluster
     determinism tests compare it across runs, and :meth:`routed_counts`
-    aggregates it for reports.
+    aggregates it for reports.  Like the engine's ``switch_log`` (PR 3),
+    the log is a bounded deque: a long live run keeps the NEWEST
+    ``decision_log_cap`` picks and counts the rest in
+    ``decisions_dropped`` instead of growing without limit.
     """
 
     def __init__(self, policy: str = P2C, *, seed: int = 0,
@@ -43,21 +56,40 @@ class ClusterRouter:
         self.seed = seed
         self._rng = np.random.default_rng(seed)
         self._rr: dict = {}            # per-class round-robin cursor
-        self.decisions: List[Tuple[float, str, str]] = []
         self.decision_log_cap = decision_log_cap
+        self.decisions: Deque[Tuple[float, str, str]] = collections.deque(
+            maxlen=decision_log_cap)
         self.decisions_dropped = 0
         self.routed: dict = {}         # class -> node -> count
+        self.weights: dict = {}        # (class, node) -> load multiplier
+
+    def set_weight(self, cls_name: str, node_name: str,
+                   weight: Optional[float]):
+        """Placement hint: 0 removes the replica from rotation (warming),
+        >1 attracts traffic, <1 repels it; ``None`` clears the hint."""
+        if weight is None:
+            self.weights.pop((cls_name, node_name), None)
+        else:
+            self.weights[(cls_name, node_name)] = float(weight)
+
+    def _weight(self, cls_name: str, node: ClusterNode) -> float:
+        return self.weights.get((cls_name, node.name), 1.0)
 
     def pick(self, cls_name: str, candidates: Sequence[ClusterNode], *,
              t: float = 0.0,
              load_fn: Optional[Callable[[ClusterNode], float]] = None
              ) -> Optional[ClusterNode]:
         """Choose a node for one request of ``cls_name`` (None: nowhere
-        to go — every placement is draining or dead)."""
-        cands = [n for n in candidates if n.routable]
+        to go — every placement is draining, dead, or weighted out)."""
+        cands = [n for n in candidates
+                 if n.routable and self._weight(cls_name, n) > 0]
         if not cands:
             return None
-        load = load_fn if load_fn is not None else (lambda n: n.load(t))
+        base = load_fn if load_fn is not None else (lambda n: n.load(t))
+
+        def load(n: ClusterNode) -> float:
+            return base(n) / self._weight(cls_name, n)
+
         if len(cands) == 1:
             node = cands[0]
         elif self.policy == ROUND_ROBIN:
@@ -71,10 +103,9 @@ class ClusterRouter:
             i, j = self._rng.choice(len(cands), size=2, replace=False)
             a, b = cands[int(i)], cands[int(j)]
             node = a if load(a) <= load(b) else b
-        if len(self.decisions) < self.decision_log_cap:
-            self.decisions.append((t, cls_name, node.name))
-        else:
-            self.decisions_dropped += 1
+        if len(self.decisions) == self.decision_log_cap:
+            self.decisions_dropped += 1   # deque evicts the oldest pick
+        self.decisions.append((t, cls_name, node.name))
         per_cls = self.routed.setdefault(cls_name, {})
         per_cls[node.name] = per_cls.get(node.name, 0) + 1
         return node

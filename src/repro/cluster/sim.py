@@ -24,6 +24,13 @@ accounting — but over N :class:`ClusterNode`s with a
   failover path as ``fail_at`` — queued requests resolve as ``failed``,
   orphaned classes re-admit on survivors — replacing operator-only
   lifecycle scripting with measurement-driven liveness;
+* the **placement engine** is scriptable the same way: ``rebalance_at``
+  runs the cluster-wide rebalancer (fresh global water-filling solve,
+  every change priced with its real migration cost, cross-node
+  preemption), ``scale_at`` runs the autoscaler over a STANDBY node
+  pool (``energy_price_fn`` prices spin-downs), and
+  ``placement_mode="first_fit"`` scripts the static baseline
+  ``benchmarks/bench_placement.py`` measures against;
 * a warmed :class:`repro.runtime.telemetry.CalibrationStore`
   (``calibration=``) makes the replay predict with MEASURED numbers:
   every node's arbiter water-fills on calibrated latencies/watts and
@@ -42,8 +49,9 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.cluster.node import (DEAD, DRAINED, DRAINING, UP, ClusterNode,
-                                StallDetector)
+from repro.cluster import placement as pl
+from repro.cluster.node import (DEAD, DRAINED, DRAINING, STANDBY, UP,
+                                ClusterNode, StallDetector)
 from repro.cluster.router import P2C, ClusterRouter
 from repro.runtime.lut import LUT
 from repro.traffic import arrivals as arr
@@ -51,6 +59,15 @@ from repro.traffic.driver import (BUCKETED_SERVICE, POLICIES, SERVICE_MODELS,
                                   SLO_POLICY, FIFO_POLICY, ClassStats,
                                   _service_ms)
 from repro.traffic.slo import DEGRADE, SHED, SLOClass
+
+
+# initial placement modes
+REPLICATE = "replicate"   # a replica on every node that admits the class
+FIRST_FIT = "first_fit"   # one replica, on the first node that admits it
+PLACEMENT_MODES = (REPLICATE, FIRST_FIT)
+
+# smoothing for the autoscaler's sustained-backlog signal
+_SCALE_BETA = 0.5
 
 
 @dataclasses.dataclass
@@ -65,10 +82,30 @@ class ClusterReport:
     # (virtual second, node) pairs auto-failed by the stall health check
     health_failed: List[Tuple[float, str]] = dataclasses.field(
         default_factory=list)
+    # placement-engine activity (rebalance_at / scale_at scripting)
+    migrations: List[Tuple[float, str, Optional[str], Optional[str]]] = \
+        dataclasses.field(default_factory=list)   # (t, cls, src, dst)
+    preempted: List[Tuple[float, str, str, str]] = \
+        dataclasses.field(default_factory=list)   # (t, victim, node, for)
+    scale_events: List[Tuple[float, str, str]] = \
+        dataclasses.field(default_factory=list)   # (t, "up"/"down", node)
+    # classes whose re-admission attempt found NO feasible node (they had
+    # been admitted, then lost every replica) — satellite: no silent retry
+    unplaceable: List[str] = dataclasses.field(default_factory=list)
+    decisions_dropped: int = 0
+    # modelled serving energy per class (sum of dispatched batches'
+    # OpPoint.energy_mj) + warmup energy paid for migrations/spin-ups —
+    # the bench's "no higher energy" axis prices migrations honestly
+    energy_mj: Dict[str, float] = dataclasses.field(default_factory=dict)
+    migration_energy_mj: float = 0.0
 
     @property
     def total_goodput(self) -> int:
         return sum(s.good for s in self.classes.values())
+
+    @property
+    def total_energy_mj(self) -> float:
+        return sum(self.energy_mj.values()) + self.migration_energy_mj
 
     @property
     def total_dropped(self) -> int:
@@ -87,6 +124,13 @@ class ClusterReport:
                             for n, s in self.classes.items()},
                 "routed": self.routed,
                 "health_failed": list(self.health_failed),
+                "migrations": list(self.migrations),
+                "preempted": list(self.preempted),
+                "scale_events": list(self.scale_events),
+                "unplaceable": list(self.unplaceable),
+                "energy_mj": {n: round(e, 2)
+                              for n, e in self.energy_mj.items()},
+                "migration_energy_mj": round(self.migration_energy_mj, 2),
                 "nodes": self.nodes}
 
 
@@ -101,7 +145,15 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                      drain_at: Optional[Dict[str, float]] = None,
                      wedge_at: Optional[Dict[str, float]] = None,
                      health_epochs: Optional[int] = None,
-                     calibration=None) -> ClusterReport:
+                     calibration=None,
+                     placement_mode: str = REPLICATE,
+                     rebalance_at: Sequence[float] = (),
+                     scale_at: Sequence[float] = (),
+                     rebalance_horizon_s: Optional[float] = None,
+                     hysteresis: float = pl.DEFAULT_HYSTERESIS,
+                     replicas: Optional[int] = None,
+                     energy_price_fn=None,
+                     min_nodes: int = 1) -> ClusterReport:
     """Run one seeded trace through the cluster in virtual time.
 
     ``nodes`` must be freshly-built (their arbiters get the class
@@ -121,9 +173,27 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
 
     ``calibration`` threads a warmed measurement store through every
     node's arbiter and the batch service model.
+
+    The **placement engine** (PR 6) is scripted the same way lifecycle
+    is: ``rebalance_at`` lists the virtual seconds the cluster-wide
+    rebalancer runs — a fresh :func:`repro.cluster.placement
+    .solve_placement` diffed against the live placements, every change
+    priced with its real migration cost and applied only when its
+    amortised benefit over ``rebalance_horizon_s`` beats
+    ``hysteresis`` x cost (steady load ⇒ empty diff ⇒ zero migrations).
+    A migrated/added replica WARMS first: its router weight is 0 and it
+    cannot serve until ``t + cost_s``.  Cross-node preemptions run at
+    the same instants.  ``scale_at`` lists when the autoscaler looks at
+    its sustained-backlog EWMA: spin-up wakes a STANDBY node (replicas
+    admitted + warmed onto it), spin-down parks an idle UP node back to
+    STANDBY when ``energy_price_fn(t)`` is high — never below
+    ``min_nodes``.  ``placement_mode="first_fit"`` scripts the static
+    baseline the placement benchmark beats: one replica per class on
+    the first admitting node.
     """
     assert policy in POLICIES, policy
     assert service_model in SERVICE_MODELS, service_model
+    assert placement_mode in PLACEMENT_MODES, placement_mode
     by_class = {c.name: c for c in classes}
     stats = {c.name: ClassStats() for c in classes}
     nodes = list(nodes)
@@ -144,14 +214,24 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
 
     # --- cluster admission + placement (mirrors _register_classes) ---------
     placements: Dict[str, List[str]] = {}
+    # how each class registers on a node — the rebalancer/autoscaler
+    # re-place classes mid-trace with the SAME registration
+    reg_info: Dict[str, dict] = {}
     for c in classes:
         placed: List[str] = []
+        reg_info[c.name] = dict(target=c.service_target_ms,
+                                priority=c.priority,
+                                min_accuracy=c.min_accuracy)
         for node in nodes:
+            if not node.routable:
+                continue   # STANDBY pool members join via scale_at only
             if policy == FIFO_POLICY:
                 node.arbiter.register(c.name, luts[c.name],
                                       c.service_target_ms, priority=0)
                 placed.append(node.name)
                 continue
+            if placed and placement_mode == FIRST_FIT:
+                break
             ok = node.arbiter.admission_check(
                 luts[c.name], c.service_target_ms, node.g(0.0),
                 priority=c.priority, min_accuracy=c.min_accuracy)
@@ -163,7 +243,11 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 placed.append(node.name)
         if not placed and policy == SLO_POLICY and c.drop_policy == DEGRADE:
             # never drop: serve best-effort everywhere at the relaxed target
+            reg_info[c.name] = dict(target=c.degraded_target_ms,
+                                    priority=c.priority, min_accuracy=None)
             for node in nodes:
+                if not node.routable:
+                    continue
                 node.arbiter.register(c.name, luts[c.name],
                                       c.degraded_target_ms,
                                       priority=c.priority)
@@ -172,14 +256,19 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     # distinguishes "admission never placed it" (rejected) from "its
     # placements died mid-trace and nobody re-admitted it" (dropped)
     admitted0 = {cn: bool(p) for cn, p in placements.items()}
+    # orphaned classes whose re-admission attempt found no feasible node
+    # (reported, not silently retried — PR-6 satellite)
+    unplaceable: set = set()
 
     def readmit_orphans():
         """A class whose every placement died/drained re-arbitrates its
-        share on whichever survivors can host its minimal share."""
+        share on whichever survivors can host its minimal share; one
+        that fits NOWHERE is reported as unplaceable."""
         if policy != SLO_POLICY:
             return
         for c in classes:
             if placements[c.name]:
+                unplaceable.discard(c.name)
                 continue
             for node in nodes:
                 if not node.routable or c.name in node.arbiter.tenants():
@@ -193,6 +282,10 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                                           priority=c.priority,
                                           min_accuracy=c.min_accuracy)
                     placements[c.name].append(node.name)
+            if placements[c.name]:
+                unplaceable.discard(c.name)
+            elif admitted0[c.name]:
+                unplaceable.add(c.name)
 
     events = arr.merge({n: ts for n, ts in streams.items()})
     queues = {n.name: {c.name: collections.deque() for c in classes}
@@ -219,6 +312,126 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
             if nn in placements[cn]:
                 placements[cn].remove(nn)
         readmit_orphans()
+
+    # --- placement engine (rebalance_at / scale_at scripting) ---------------
+    rebalance_due = sorted(rebalance_at)
+    scale_due = sorted(scale_at)
+    horizon_s = (rebalance_horizon_s if rebalance_horizon_s is not None
+                 else (rebalance_due[1] - rebalance_due[0]
+                       if len(rebalance_due) > 1 else 5.0))
+    migrations: List[Tuple[float, str, Optional[str], Optional[str]]] = []
+    preempted: List[Tuple[float, str, str, str]] = []
+    scale_events: List[Tuple[float, str, str]] = []
+    warming: List[Tuple[float, str, str]] = []   # (warm_t, cls, node)
+    scale_ewma = 0.0   # sustained cluster backlog per chip
+    energy = {c.name: 0.0 for c in classes}
+    mig_energy_mj = 0.0
+
+    def spec_of(c) -> pl.ClassSpec:
+        return pl.ClassSpec(
+            name=c.name, lut=luts[c.name],
+            target_latency_ms=reg_info[c.name]["target"],
+            priority=reg_info[c.name]["priority"],
+            min_accuracy=reg_info[c.name]["min_accuracy"],
+            backlog=float(sum(len(queues[n.name][c.name])
+                              for n in nodes if n.alive)),
+            max_batch=c.max_batch,
+            fallback_target_ms=(c.degraded_target_ms
+                                if c.drop_policy == DEGRADE else None))
+
+    def start_replica(cn: str, nn: str, t0: float, warm_s: float):
+        """Register + WARM a replica: weight 0 and no serving until the
+        weights have transferred and its buckets are compiled."""
+        node = by_node[nn]
+        if cn not in node.arbiter.tenants():
+            node.arbiter.register(cn, luts[cn], reg_info[cn]["target"],
+                                  priority=reg_info[cn]["priority"],
+                                  min_accuracy=reg_info[cn]["min_accuracy"])
+        if nn not in placements[cn]:
+            placements[cn].append(nn)
+        warm_t = t0 + warm_s
+        busy_until[nn][cn] = max(busy_until[nn][cn], warm_t)
+        rtr.set_weight(cn, nn, 0.0)
+        warming.append((warm_t, cn, nn))
+        unplaceable.discard(cn)
+
+    def retire_replica(cn: str, nn: str, dst: Optional[str]):
+        """Export one replica's registration and re-route its queue to
+        ``dst`` (or the first surviving placement), arrival order kept."""
+        node = by_node[nn]
+        if cn in node.arbiter.tenants():
+            node.arbiter.export_tenant(cn)
+        if nn in placements[cn]:
+            placements[cn].remove(nn)
+        q = queues[nn][cn]
+        if q:
+            home = dst or (placements[cn][0] if placements[cn] else None)
+            if home is None:
+                stats[cn].dropped += len(q)
+            else:
+                queues[home][cn] = collections.deque(
+                    sorted(list(queues[home][cn]) + list(q)))
+            q.clear()
+        busy_until[nn][cn] = 0.0
+
+    def run_rebalance(tr: float):
+        """One cluster-wide rebalance: fresh solve, priced diff, apply."""
+        specs = [spec_of(c) for c in classes]
+        up_nodes = [n for n in nodes if n.routable]
+        plan = pl.plan_rebalance(specs, up_nodes, placements, t=tr,
+                                 horizon_s=horizon_s,
+                                 hysteresis=hysteresis, replicas=replicas,
+                                 calibration=calibration)
+        nonlocal mig_energy_mj
+        for mv in plan.moves:
+            if mv.dst is not None:
+                start_replica(mv.cls, mv.dst, tr, mv.cost_s)
+                mig_energy_mj += mv.cost_j * 1e3
+            if mv.src is not None:
+                retire_replica(mv.cls, mv.src, mv.dst)
+            migrations.append((tr, mv.cls, mv.src, mv.dst))
+        # cross-node preemption: a backlogged high-priority class evicts
+        # the lowest-priority co-located replica that has another home
+        evs = pl.plan_preemptions(
+            specs, up_nodes, placements,
+            node_backlog=lambda c, n2: float(len(queues[n2][c])))
+        for ev in evs:
+            retire_replica(ev.victim, ev.node, None)
+            preempted.append((tr, ev.victim, ev.node, ev.for_cls))
+
+    def run_scaling(ts: float):
+        """One autoscaler step over the node pool."""
+        nonlocal mig_energy_mj
+        price = energy_price_fn(ts) if energy_price_fn is not None else 0.0
+        plan = pl.plan_scaling(nodes, backlog_per_chip=scale_ewma,
+                               energy_price=price, t=ts,
+                               min_nodes=min_nodes)
+        for nn in plan.spin_up:
+            node = by_node[nn]
+            node.state = UP
+            scale_events.append((ts, "up", nn))
+            for c in classes:
+                ok = node.arbiter.admission_check(
+                    luts[c.name], reg_info[c.name]["target"], node.g(ts),
+                    priority=reg_info[c.name]["priority"],
+                    min_accuracy=reg_info[c.name]["min_accuracy"])
+                if ok is not None:
+                    cost = pl.migration_cost(spec_of(c),
+                                             calibration=calibration)
+                    start_replica(c.name, nn, ts, cost.seconds)
+                    mig_energy_mj += cost.joules * 1e3
+        for nn in plan.spin_down:
+            node = by_node[nn]
+            # only an actually-idle node parks: queued or in-flight work
+            # defers the spin-down to the next scale_at instant
+            if any(queues[nn].values()) or any(
+                    b > ts for b in busy_until[nn].values()):
+                continue
+            for cn in list(node.arbiter.tenants()):
+                retire_replica(cn, nn, None)
+            node.state = STANDBY
+            scale_events.append((ts, "down", nn))
+            readmit_orphans()
 
     ei = 0
     t = 0.0
@@ -257,6 +470,25 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                     if nn in placements.get(cn, ()):
                         placements[cn].remove(nn)
                 readmit_orphans()
+
+        # --- placement engine (epoch boundary) ------------------------------
+        while warming and min(w[0] for w in warming) <= t:
+            # warmed replicas rejoin the rotation
+            done_w = [w for w in warming if w[0] <= t]
+            for _, cn, nn in done_w:
+                rtr.set_weight(cn, nn, None)
+            warming = [w for w in warming if w[0] > t]
+        up_chips = sum(n.g(t).total_chips for n in nodes if n.state == UP)
+        backlog_now = sum(len(q) for n in nodes if n.alive
+                          for q in queues[n.name].values())
+        scale_ewma = (_SCALE_BETA * scale_ewma + (1.0 - _SCALE_BETA)
+                      * (backlog_now / max(1, up_chips)))
+        while scale_due and scale_due[0] <= t:
+            scale_due.pop(0)
+            run_scaling(t)
+        while rebalance_due and rebalance_due[0] <= t:
+            rebalance_due.pop(0)
+            run_rebalance(t)
 
         # --- per-node arbitration with backlog signals ----------------------
         allocs: Dict[str, dict] = {}
@@ -352,6 +584,7 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                     busy_until[nn][cn] = done
                     st.batches += 1
                     st.batch_occupancy += k
+                    energy[cn] += pt.energy_mj
                     completions[nn] += k
                     for _ in range(k):
                         ta = q.popleft()
@@ -389,4 +622,10 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     return ClusterReport(policy=policy, router=router, classes=stats,
                          nodes=node_view, decisions=list(rtr.decisions),
                          routed=rtr.routed_counts(),
-                         health_failed=health_failed)
+                         health_failed=health_failed,
+                         migrations=migrations, preempted=preempted,
+                         scale_events=scale_events,
+                         unplaceable=sorted(unplaceable),
+                         decisions_dropped=rtr.decisions_dropped,
+                         energy_mj=energy,
+                         migration_energy_mj=mig_energy_mj)

@@ -125,7 +125,8 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
                              g_fn=lambda t: GlobalConstraints(total_chips=2))
                  for i in range(args.nodes)]
         cluster = Cluster(nodes, router=args.router,
-                          health_interval_s=args.health_interval)
+                          health_interval_s=args.health_interval,
+                          rebalance_interval_s=args.rebalance_interval)
         if store is not None:
             for node in nodes:
                 node.arbiter.calibration = store
@@ -157,6 +158,9 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
         if args.health_interval is not None:
             print(f"  health-failed nodes: "
                   f"{report.arbiter.get('health_failed', [])}")
+        if args.rebalance_interval is not None:
+            print(f"  migrations:   {report.arbiter.get('migrations', [])}")
+            print(f"  preempted:    {report.arbiter.get('preempted', [])}")
         _report_calibration(store, args)
         return
 
@@ -233,6 +237,11 @@ def main(argv=None):
                     metavar="S",
                     help="cluster mode: stall-based health check every "
                          "S seconds (auto-failover of wedged nodes)")
+    ap.add_argument("--rebalance-interval", type=float, default=None,
+                    metavar="S",
+                    help="cluster mode: run the global placement engine "
+                         "every S seconds (migration-cost-priced replica "
+                         "rebalancing + cross-node preemption)")
     ap.add_argument("--max-batch", type=int, default=8,
                     help="batching ceiling (bucket ladder = powers of two)")
     ap.add_argument("--no-buckets", action="store_true",

@@ -5,7 +5,10 @@ lut      — (subnet x hw-state) profile tables (modelled + measured)
 governor — joint algorithm+hardware governor and Linux-governor baselines
 monitor  — latency/energy accounting and the paper's workload traces
 engine   — dynamic serving engine with a sub-network executable cache
+waterfill— level-agnostic water-filling solver (chip slices OR cluster
+           replicas): min-share + backlog-first surplus over priced points
 arbiter  — multi-workload water-filling arbiter over shared chips/power
+           (delegates its objective to waterfill)
 telemetry— measured-performance CalibrationStore closing the loop:
            engine-recorded (subnet, bucket) latency EWMAs and measured
            tenant watts feed the LUT columns and the arbiter's energy
@@ -21,6 +24,11 @@ from repro.runtime.governor import (Constraints, JointGovernor,
 from repro.runtime.monitor import Monitor, paper_trace, run_governor, quantile
 from repro.runtime.engine import DynamicServer
 from repro.runtime.telemetry import CalibrationStore
+# NOTE: the solver function itself stays namespaced
+# (``waterfill.waterfill``) — re-exporting the bare name here would
+# shadow the submodule attribute and break ``from repro.runtime import
+# waterfill`` module imports
+from repro.runtime.waterfill import Demand, Grant, PricedPoint
 from repro.runtime.arbiter import (AdmissionError, Allocation,
                                    GlobalConstraints, Headroom,
                                    ResourceArbiter, Workload)

@@ -62,11 +62,15 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.pareto import OpPoint
 from repro.runtime import hwmodel as hm
+from repro.runtime import waterfill as wf
 from repro.runtime.engine import DynamicServer
 from repro.runtime.governor import Constraints, JointGovernor
 from repro.runtime.lut import LUT
 
-_MAX_FILL_PASSES = 8
+# the water-filling core lives in repro.runtime.waterfill since PR 6 (the
+# cluster placement engine runs the SAME solver over nodes); the aliases
+# keep the arbiter's historical knobs pointing at the one definition
+_MAX_FILL_PASSES = wf.MAX_FILL_PASSES
 # new latency observations before a tenant's calibrated LUT is rebuilt
 _LUT_REFRESH_SAMPLES = 16
 # smoothing for the arrival-rate EWMA reported through set_active()
@@ -74,7 +78,7 @@ _EWMA_BETA = 0.6
 # below this many pending requests a tenant counts as backlog-free (the
 # EWMA decays geometrically and never exactly reaches zero — without a
 # threshold one reported burst would keep a tenant "backlogged" forever)
-_BACKLOG_MIN = 0.5
+_BACKLOG_MIN = wf.BACKLOG_MIN
 
 
 class AdmissionError(RuntimeError):
@@ -388,7 +392,7 @@ class ResourceArbiter:
             self._lut_cache[w.name] = (w.lut, version, eff)
         return eff
 
-    # --- water-filling ------------------------------------------------------
+    # --- water-filling (delegates to repro.runtime.waterfill) ---------------
 
     @staticmethod
     def _throttled(pts, throttle: float):
@@ -396,39 +400,65 @@ class ResourceArbiter:
             pts = [p for p in pts if p.hw_state.freq <= throttle]
         return pts
 
+    def _priced(self, p: OpPoint, scale: float) -> wf.PricedPoint:
+        """One LUT point, phrased for the level-agnostic solver."""
+        base = hm.slice_power_w(p.hw_state)
+        return wf.PricedPoint(units=p.hw_state.chips, cost=base * scale,
+                              base_cost=base, latency_ms=p.latency_ms,
+                              accuracy=p.accuracy, energy_mj=p.energy_mj,
+                              payload=p)
+
+    def _demand_for(self, w: Workload, throttle: float) -> wf.Demand:
+        """Phrase one workload as a solver demand.
+
+        The candidate enumerators close over the tenant's calibrated LUT
+        and duty-cycle price: the solver budgets in PRICED watts, so the
+        callbacks un-price the cost cap back to modelled watts for the
+        LUT's power filter — exactly the arithmetic the pre-extraction
+        arbiter ran inline.
+        """
+        scale = self._power_scale(w.name)
+
+        def feasible(chips_cap: int, power_cap: float):
+            pts = self._lut_for(w).feasible(
+                max_latency_ms=w.target_latency_ms,
+                chips_available=chips_cap,
+                power_budget_w=(None if math.isinf(power_cap)
+                                else power_cap / scale),
+                min_accuracy=w.min_accuracy, max_freq=throttle)
+            return [self._priced(p, scale) for p in pts]
+
+        def candidates(chips_cap: int, power_cap: float):
+            cands = [p for p in self._lut_for(w).points
+                     if p.hw_state.chips <= chips_cap
+                     and hm.slice_power_w(p.hw_state) * scale <= power_cap]
+            cands = self._throttled(cands, throttle) or cands
+            return [self._priced(p, scale) for p in cands]
+
+        return wf.Demand(name=w.name, feasible=feasible,
+                         candidates=candidates, priority=w.priority,
+                         backlog=self._backlog(w))
+
     def _min_share_point(self, w: Workload, chips_cap: int,
                          power_cap: float, throttle: float
                          ) -> Optional[OpPoint]:
         """Feasible point with the smallest (chips, power), max accuracy.
 
         ``power_cap`` is in PRICED watts (measured-duty-cycle scaled);
-        it is converted back to modelled watts for the LUT filter.
+        the demand callback converts it back to modelled watts for the
+        LUT filter.
         """
-        scale = self._power_scale(w.name)
-        pts = self._lut_for(w).feasible(
-            max_latency_ms=w.target_latency_ms,
-            chips_available=chips_cap,
-            power_budget_w=(None if math.isinf(power_cap)
-                            else power_cap / scale),
-            min_accuracy=w.min_accuracy, max_freq=throttle)
-        if not pts:
-            return None
-        return min(pts, key=lambda p: (p.hw_state.chips,
-                                       hm.slice_power_w(p.hw_state),
-                                       -p.accuracy))
+        got = wf.min_share_point(self._demand_for(w, throttle),
+                                 chips_cap, power_cap)
+        return got.payload if got is not None else None
 
     def _best_effort_point(self, w: Workload, chips_cap: int,
                            power_cap: float, throttle: float
                            ) -> Optional[OpPoint]:
         """Fastest point that fits the leftover budget (target missed)."""
-        scale = self._power_scale(w.name)
-        cands = [p for p in self._lut_for(w).points
-                 if p.hw_state.chips <= chips_cap
-                 and hm.slice_power_w(p.hw_state) * scale <= power_cap]
-        cands = self._throttled(cands, throttle) or cands
-        if not cands:
-            return None
-        return min(cands, key=lambda p: p.latency_ms)
+        got = wf.best_effort_point(self._demand_for(w, throttle),
+                                   chips_cap, power_cap)
+        return got.payload if got is not None else None
 
     def _refresh_live_tenant(self, w: Workload, now: float):
         """Pull a live tenant's measured signals (backlog, arrival rate,
@@ -467,7 +497,15 @@ class ResourceArbiter:
                     hm.slice_power_w(last.point.hw_state))
 
     def arbitrate(self, g: GlobalConstraints) -> Dict[str, Allocation]:
-        """Divide (chips, power) among all registered workloads."""
+        """Divide (chips, power) among all registered workloads.
+
+        The min-share + backlog-first-surplus objective itself lives in
+        :func:`repro.runtime.waterfill.waterfill` (shared with the
+        cluster placement engine); this method phrases the active
+        tenants as demands, runs the solver, and converts grants back
+        into :class:`Allocation`s — bit-identical to the pre-extraction
+        inline algorithm (see ``tests/test_waterfill.py``).
+        """
         with self._lock:
             now = self._time_fn()
             for w in self._workloads.values():
@@ -475,84 +513,24 @@ class ResourceArbiter:
                     # live tenants report backlog/rate/energy automatically
                     self._refresh_live_tenant(w, now)
             order = [w for w in self._priority_order() if w.active]
-            chips_left = g.total_chips
-            power_left = (g.power_budget_w if g.power_budget_w is not None
-                          else math.inf)
+            power = (g.power_budget_w if g.power_budget_w is not None
+                     else math.inf)
+            grants = wf.waterfill(
+                [self._demand_for(w, g.temperature_throttle) for w in order],
+                g.total_chips, power)
             allocs: Dict[str, Allocation] = {}
-
-            # pass 1: minimal feasible share, highest priority first.
-            # power_left is tracked in PRICED watts: modelled slice power
-            # times the tenant's measured duty cycle (1.0 uncalibrated)
             for w in order:
-                point = self._min_share_point(w, chips_left, power_left,
-                                              g.temperature_throttle)
-                feasible = point is not None
-                if point is None:
-                    point = self._best_effort_point(
-                        w, chips_left, power_left, g.temperature_throttle)
-                chips = point.hw_state.chips if point else 0
-                power = hm.slice_power_w(point.hw_state) if point else 0.0
-                priced = power * self._power_scale(w.name)
-                chips_left -= chips
-                power_left -= priced
-                allocs[w.name] = Allocation(workload=w.name, point=point,
-                                            chips=chips, power_w=power,
-                                            feasible=feasible,
-                                            priced_power_w=priced)
-
-            # pass 2+: water-fill the surplus to a fixpoint.  Backlogged
-            # tenants come FIRST (deepest queue wins, then priority) and
-            # trade up to their fastest feasible point — surplus chips
-            # drain backlog before they buy anyone accuracy.  Tenants with
-            # no backlog keep the original behaviour: priority order,
-            # surplus spent on strictly more accuracy.
-            fill_order = sorted(order, key=lambda w: (-self._backlog(w),
-                                                      -w.priority))
-            for _ in range(_MAX_FILL_PASSES):
-                changed = False
-                for w in fill_order:
-                    cur = allocs[w.name]
-                    scale = self._power_scale(w.name)
-                    cap_chips = cur.chips + chips_left
-                    cap_power = cur.priced_power_w + power_left
-                    pts = self._lut_for(w).feasible(
-                        max_latency_ms=w.target_latency_ms,
-                        chips_available=cap_chips,
-                        power_budget_w=(None if math.isinf(cap_power)
-                                        else cap_power / scale),
-                        min_accuracy=w.min_accuracy,
-                        max_freq=g.temperature_throttle)
-                    if not pts:
-                        continue
-                    if self._backlog(w) >= _BACKLOG_MIN:
-                        # drain the queue: fastest feasible point, accuracy
-                        # as the tie-break
-                        best = min(pts, key=lambda p: (p.latency_ms,
-                                                       -p.accuracy))
-                        upgraded = (not cur.feasible
-                                    or cur.point is None
-                                    or best.latency_ms
-                                    < cur.point.latency_ms - 1e-12)
-                    else:
-                        best = max(pts, key=lambda p: (p.accuracy,
-                                                       -p.energy_mj))
-                        upgraded = (not cur.feasible
-                                    or cur.point is None
-                                    or best.accuracy
-                                    > cur.point.accuracy + 1e-12)
-                    if not upgraded:
-                        continue
-                    priced = hm.slice_power_w(best.hw_state) * scale
-                    chips_left = cap_chips - best.hw_state.chips
-                    power_left = cap_power - priced
-                    allocs[w.name] = Allocation(
-                        workload=w.name, point=best,
-                        chips=best.hw_state.chips,
-                        power_w=hm.slice_power_w(best.hw_state),
-                        feasible=True, priced_power_w=priced)
-                    changed = True
-                if not changed:
-                    break
+                grant = grants[w.name]
+                point: Optional[OpPoint] = (grant.point.payload
+                                            if grant.point is not None
+                                            else None)
+                allocs[w.name] = Allocation(
+                    workload=w.name, point=point,
+                    chips=point.hw_state.chips if point else 0,
+                    power_w=(hm.slice_power_w(point.hw_state)
+                             if point else 0.0),
+                    feasible=grant.feasible,
+                    priced_power_w=grant.cost)
 
             # inactive tenants hold nothing this cycle (slice released)
             for w in self._workloads.values():

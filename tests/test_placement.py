@@ -1,0 +1,587 @@
+"""PR 6: the global placement engine and the waterfill extraction.
+
+* **parity oracle** — the PRE-extraction ``ResourceArbiter.arbitrate``
+  water-filling, replayed verbatim against the refactored arbiter on
+  seeded multi-tenant scenarios: allocations must be bit-identical
+  (the tentpole's strict-refactor guarantee);
+* **solver** — fresh global K-replica solves over node headroom;
+* **rebalancer** — priced migrations, the no-flapping guarantee
+  (steady load ⇒ zero migrations), skew recovery, determinism of
+  ``simulate_cluster(rebalance_at=, scale_at=)``;
+* **cross-node preemption and autoscaling**;
+* **router satellites** — bounded decision log, weight hints.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster import (LEAST_LOADED, STANDBY, UP, ClusterNode,
+                           ClusterRouter, FIRST_FIT, REPLICATE,
+                           migration_cost, plan_preemptions, plan_rebalance,
+                           plan_scaling, solve_placement, simulate_cluster)
+from repro.cluster import placement as pl
+from repro.core.types import ElasticSpace
+from repro.runtime import (CalibrationStore, GlobalConstraints,
+                           ResourceArbiter, model_lut)
+from repro.runtime import hwmodel as hm
+from repro.runtime import waterfill as wf
+from repro.runtime.arbiter import _BACKLOG_MIN, _MAX_FILL_PASSES, Allocation
+from repro.traffic import DEGRADE, SHED, SLOClass, poisson
+
+TERMS = hm.RooflineTerms(t_compute=0.02, t_memory=0.008, t_collective=0.004)
+SPACE = ElasticSpace(width_mults=(0.5, 0.75, 1.0), ffn_mults=(0.5, 1.0),
+                     depth_mults=(0.5, 1.0))
+
+
+def make_lut(scale=1.0, full_chips=256):
+    terms = hm.RooflineTerms(TERMS.t_compute * scale, TERMS.t_memory * scale,
+                             TERMS.t_collective * scale)
+    return model_lut(SPACE.enumerate(), full_terms=terms,
+                     full_chips=full_chips)
+
+
+def make_nodes(capacities, states=None):
+    nodes = [ClusterNode(name=f"n{i}",
+                         g_fn=lambda t, c=cap: GlobalConstraints(
+                             total_chips=c))
+             for i, cap in enumerate(capacities)]
+    for n, st in zip(nodes, states or []):
+        n.state = st
+    return nodes
+
+
+# --- the parity oracle: PRE-extraction arbitrate, verbatim -------------------
+
+def reference_arbitrate(arb, g):
+    """The inline water-filling exactly as ``ResourceArbiter.arbitrate``
+    ran it before the PR-6 extraction (PR-5 tree, commit ad12075) —
+    same arithmetic, iteration order, comparison keys and epsilons."""
+
+    def min_share_point(w, chips_cap, power_cap, throttle):
+        scale = arb._power_scale(w.name)
+        pts = arb._lut_for(w).feasible(
+            max_latency_ms=w.target_latency_ms, chips_available=chips_cap,
+            power_budget_w=(None if math.isinf(power_cap)
+                            else power_cap / scale),
+            min_accuracy=w.min_accuracy, max_freq=throttle)
+        if not pts:
+            return None
+        return min(pts, key=lambda p: (p.hw_state.chips,
+                                       hm.slice_power_w(p.hw_state),
+                                       -p.accuracy))
+
+    def best_effort_point(w, chips_cap, power_cap, throttle):
+        scale = arb._power_scale(w.name)
+        cands = [p for p in arb._lut_for(w).points
+                 if p.hw_state.chips <= chips_cap
+                 and hm.slice_power_w(p.hw_state) * scale <= power_cap]
+        cands = arb._throttled(cands, throttle) or cands
+        if not cands:
+            return None
+        return min(cands, key=lambda p: p.latency_ms)
+
+    order = [w for w in arb._priority_order() if w.active]
+    chips_left = g.total_chips
+    power_left = (g.power_budget_w if g.power_budget_w is not None
+                  else math.inf)
+    allocs = {}
+    for w in order:
+        point = min_share_point(w, chips_left, power_left,
+                                g.temperature_throttle)
+        feasible = point is not None
+        if point is None:
+            point = best_effort_point(w, chips_left, power_left,
+                                      g.temperature_throttle)
+        chips = point.hw_state.chips if point else 0
+        power = hm.slice_power_w(point.hw_state) if point else 0.0
+        priced = power * arb._power_scale(w.name)
+        chips_left -= chips
+        power_left -= priced
+        allocs[w.name] = Allocation(workload=w.name, point=point,
+                                    chips=chips, power_w=power,
+                                    feasible=feasible,
+                                    priced_power_w=priced)
+    fill_order = sorted(order, key=lambda w: (-arb._backlog(w), -w.priority))
+    for _ in range(_MAX_FILL_PASSES):
+        changed = False
+        for w in fill_order:
+            cur = allocs[w.name]
+            scale = arb._power_scale(w.name)
+            cap_chips = cur.chips + chips_left
+            cap_power = cur.priced_power_w + power_left
+            pts = arb._lut_for(w).feasible(
+                max_latency_ms=w.target_latency_ms,
+                chips_available=cap_chips,
+                power_budget_w=(None if math.isinf(cap_power)
+                                else cap_power / scale),
+                min_accuracy=w.min_accuracy,
+                max_freq=g.temperature_throttle)
+            if not pts:
+                continue
+            if arb._backlog(w) >= _BACKLOG_MIN:
+                best = min(pts, key=lambda p: (p.latency_ms, -p.accuracy))
+                upgraded = (not cur.feasible or cur.point is None
+                            or best.latency_ms
+                            < cur.point.latency_ms - 1e-12)
+            else:
+                best = max(pts, key=lambda p: (p.accuracy, -p.energy_mj))
+                upgraded = (not cur.feasible or cur.point is None
+                            or best.accuracy > cur.point.accuracy + 1e-12)
+            if not upgraded:
+                continue
+            priced = hm.slice_power_w(best.hw_state) * scale
+            chips_left = cap_chips - best.hw_state.chips
+            power_left = cap_power - priced
+            allocs[w.name] = Allocation(
+                workload=w.name, point=best, chips=best.hw_state.chips,
+                power_w=hm.slice_power_w(best.hw_state),
+                feasible=True, priced_power_w=priced)
+            changed = True
+        if not changed:
+            break
+    for w in arb._workloads.values():
+        if w.name not in allocs:
+            allocs[w.name] = Allocation(workload=w.name, point=None,
+                                        chips=0, power_w=0.0,
+                                        feasible=False)
+    for a in allocs.values():
+        a.share = a.chips / g.total_chips if g.total_chips else 0.0
+    return allocs
+
+
+def assert_allocs_identical(want, got):
+    assert set(want) == set(got)
+    for name, a in want.items():
+        b = got[name]
+        assert a.point is b.point, name        # the SAME LUT object
+        assert a.chips == b.chips, name
+        assert a.power_w == b.power_w, name    # bitwise, no tolerance
+        assert a.priced_power_w == b.priced_power_w, name
+        assert a.feasible == b.feasible, name
+        assert a.share == b.share, name
+
+
+def _random_arbiter(rng, calibration=None):
+    arb = ResourceArbiter(calibration=calibration)
+    n = int(rng.integers(2, 6))
+    for i in range(n):
+        lut = make_lut(scale=float(rng.choice([0.5, 1.0, 2.0])))
+        arb.register(f"t{i}", lut,
+                     target_latency_ms=float(rng.choice(
+                         [8.0, 15.0, 40.0, 120.0])),
+                     priority=int(rng.integers(0, 4)),
+                     min_accuracy=(0.72 if rng.random() < 0.3 else None))
+        arb.set_active(
+            f"t{i}", rng.random() > 0.15,
+            queue_depth=int(rng.integers(0, 12)),
+            arrival_rate_rps=float(rng.choice([0.0, 5.0, 40.0])))
+    return arb
+
+
+def test_arbitrate_parity_seeded_scenarios():
+    """Property-style strict-refactor check: on 24 seeded multi-tenant
+    scenarios the solver-backed arbitrate equals the pre-extraction
+    algorithm bit-for-bit."""
+    rng = np.random.default_rng(1234)
+    for _ in range(24):
+        arb = _random_arbiter(rng)
+        g = GlobalConstraints(
+            total_chips=int(rng.choice([64, 128, 256, 384])),
+            power_budget_w=(None if rng.random() < 0.4
+                            else float(rng.choice([20e3, 60e3, 150e3]))),
+            temperature_throttle=float(rng.choice([1.0, 0.7, 0.55])))
+        want = reference_arbitrate(arb, g)
+        got = arb.arbitrate(g)
+        assert_allocs_identical(want, got)
+
+
+def test_arbitrate_parity_with_calibration():
+    """Parity must survive measured pricing: calibrated LUT latencies
+    and per-tenant duty-cycle power scales feed both paths."""
+    rng = np.random.default_rng(7)
+    for _ in range(6):
+        store = CalibrationStore()
+        arb = _random_arbiter(rng, calibration=store)
+        for name in arb.tenants():
+            w = arb._workloads[name]
+            pt = w.lut.points[int(rng.integers(0, len(w.lut.points)))]
+            for _ in range(4):
+                store.note_latency(pt.subnet, 8,
+                                   pt.latency_ms * float(rng.uniform(
+                                       0.6, 1.6)), max_batch=8)
+            store.note_power(name, float(rng.uniform(1e3, 30e3)), 40e3)
+        g = GlobalConstraints(total_chips=256, power_budget_w=80e3)
+        want = reference_arbitrate(arb, g)
+        got = arb.arbitrate(g)
+        assert_allocs_identical(want, got)
+
+
+def test_waterfill_solver_is_pure():
+    """Equal inputs, equal grants — repeated calls share no state."""
+    lut = make_lut()
+
+    def demand(name, priority, backlog):
+        def feasible(chips_cap, power_cap):
+            pts = lut.feasible(max_latency_ms=40.0,
+                               chips_available=chips_cap,
+                               power_budget_w=(None if math.isinf(power_cap)
+                                               else power_cap))
+            return [wf.PricedPoint(units=p.hw_state.chips,
+                                   cost=hm.slice_power_w(p.hw_state),
+                                   base_cost=hm.slice_power_w(p.hw_state),
+                                   latency_ms=p.latency_ms,
+                                   accuracy=p.accuracy,
+                                   energy_mj=p.energy_mj, payload=p)
+                    for p in pts]
+        return wf.Demand(name=name, feasible=feasible, candidates=feasible,
+                         priority=priority, backlog=backlog)
+
+    demands = [demand("a", 2, 0.0), demand("b", 1, 6.0)]
+    g1 = wf.waterfill(demands, 256, 100e3)
+    g2 = wf.waterfill(demands, 256, 100e3)
+    assert set(g1) == {"a", "b"}
+    for n in g1:
+        assert g1[n].point == g2[n].point
+        assert g1[n].feasible == g2[n].feasible
+    # the backlogged demand trades up from its minimal share toward the
+    # fastest point the leftover capacity allows
+    min_share = wf.min_share_point(demands[1], 256, math.inf)
+    assert g1["b"].point.latency_ms < min_share.latency_ms
+    cap = 256 - g1["a"].units
+    fast = min(demands[1].feasible(cap, math.inf),
+               key=lambda p: (p.latency_ms, -p.accuracy))
+    assert g1["b"].point.latency_ms <= fast.latency_ms + 1e-9
+
+
+# --- the fresh global solve --------------------------------------------------
+
+def test_solve_placement_replicates_when_everything_fits():
+    specs = [pl.ClassSpec("a", make_lut(), 40.0, priority=2),
+             pl.ClassSpec("b", make_lut(), 120.0, priority=1)]
+    plan = solve_placement(specs, make_nodes([256, 256]))
+    assert sorted(plan.placements["a"]) == ["n0", "n1"]
+    assert sorted(plan.placements["b"]) == ["n0", "n1"]
+
+
+def test_solve_placement_respects_replica_cap_and_headroom():
+    specs = [pl.ClassSpec("a", make_lut(), 40.0, priority=2)]
+    plan = solve_placement(specs, make_nodes([256, 256, 256]), replicas=2)
+    assert len(plan.placements["a"]) == 2
+    # a tight class only fits where capacity allows
+    tight = [pl.ClassSpec("t", make_lut(), 10.0, priority=2)]
+    plan = solve_placement(tight, make_nodes([64, 256]))
+    assert plan.placements["t"] == ["n1"]
+
+
+def test_solve_placement_backlogged_class_fills_first():
+    """Surplus replicas go to the deepest-backlog class first — the
+    fill order of the one shared objective."""
+    lut = make_lut()
+    # equal priority so neither treats the other's share as preemptable
+    specs = [pl.ClassSpec("calm", lut, 10.0, priority=2, backlog=0.0),
+             pl.ClassSpec("hot", lut, 10.0, priority=2, backlog=50.0)]
+    # each 256-chip node hosts exactly one 10ms minimal share (192 chips)
+    plan = solve_placement(specs, make_nodes([256, 256, 256]))
+    # min-share pass: one replica each; the single leftover node goes
+    # to the BACKLOGGED class (backlog-first fill order)
+    assert len(plan.placements["hot"]) == 2
+    assert len(plan.placements["calm"]) == 1
+
+
+def test_solve_placement_skips_standby_nodes():
+    specs = [pl.ClassSpec("a", make_lut(), 40.0)]
+    nodes = make_nodes([256, 256], states=[UP, STANDBY])
+    plan = solve_placement(specs, nodes)
+    assert plan.placements["a"] == ["n0"]
+
+
+def test_solve_placement_fallback_places_everywhere():
+    specs = [pl.ClassSpec("never", make_lut(), 0.001,
+                          fallback_target_ms=500.0)]
+    plan = solve_placement(specs, make_nodes([64, 64]))
+    assert sorted(plan.placements["never"]) == ["n0", "n1"]
+    assert plan.best_effort == ["never"]
+
+
+# --- priced rebalancing ------------------------------------------------------
+
+def test_migration_cost_is_positive_and_calibration_aware():
+    spec = pl.ClassSpec("a", make_lut(), 40.0)
+    cost = migration_cost(spec)
+    assert cost.seconds > pl.DEFAULT_TRANSFER_S
+    assert cost.joules > 0
+    store = CalibrationStore()
+    pt = min(spec.lut.points, key=lambda p: (p.latency_ms, -p.accuracy))
+    for _ in range(8):
+        store.note_latency(pt.subnet, 8, pt.latency_ms * 3.0, max_batch=8)
+    slow = migration_cost(spec, calibration=store)
+    assert slow.seconds > cost.seconds     # measured-slow warmup costs more
+
+
+def test_plan_rebalance_steady_state_is_empty():
+    """Current placements == fresh solve ⇒ no moves, nothing rejected."""
+    specs = [pl.ClassSpec("a", make_lut(), 40.0, priority=2, backlog=3.0),
+             pl.ClassSpec("b", make_lut(), 120.0, priority=1, backlog=2.0)]
+    nodes = make_nodes([256, 256])
+    current = {"a": ["n0", "n1"], "b": ["n0", "n1"]}
+    plan = plan_rebalance(specs, nodes, current)
+    assert plan.moves == [] and plan.rejected == []
+
+
+def test_plan_rebalance_prices_out_unamortized_adds():
+    """A backlog-free class never pays a migration; a deeply backlogged
+    one does — hysteresis is the dividing line."""
+    nodes = make_nodes([256, 256])
+    calm = [pl.ClassSpec("a", make_lut(), 40.0, backlog=0.0)]
+    plan = plan_rebalance(calm, nodes, {"a": ["n0"]})
+    assert plan.moves == []
+    assert [m.kind for m in plan.rejected] == ["add"]
+    hot = [pl.ClassSpec("a", make_lut(), 40.0, backlog=2000.0)]
+    plan = plan_rebalance(hot, nodes, {"a": ["n0"]}, horizon_s=30.0)
+    assert [m.kind for m in plan.moves] == ["add"]
+    mv = plan.moves[0]
+    assert mv.dst == "n1" and mv.benefit_s > 2.0 * mv.cost_s > 0
+
+
+def test_plan_rebalance_never_orphans_a_class():
+    """Unpaired removes stop at the last replica."""
+    specs = [pl.ClassSpec("t", make_lut(), 10.0)]
+    # fresh solve fits "t" only on n1; current holds it only on n0 (a
+    # 64-chip node a capacity change made infeasible)
+    nodes = make_nodes([64, 256])
+    plan = plan_rebalance(specs, nodes, {"t": ["n0"]}, horizon_s=30.0)
+    kinds = sorted(m.kind for m in plan.moves + plan.rejected)
+    assert "move" in kinds or "add" in kinds
+    final = set(["n0"])
+    for m in plan.moves:
+        if m.dst:
+            final.add(m.dst)
+        if m.src:
+            final.discard(m.src)
+    assert final                      # never empty
+
+
+# --- cross-node preemption ---------------------------------------------------
+
+def test_plan_preemptions_evicts_lowest_priority_with_other_home():
+    lut = make_lut()
+    specs = [pl.ClassSpec("hi", lut, 40.0, priority=3, backlog=20.0),
+             pl.ClassSpec("mid", lut, 40.0, priority=2),
+             pl.ClassSpec("lo", lut, 40.0, priority=1)]
+    nodes = make_nodes([256, 256])
+    placements = {"hi": ["n0"], "mid": ["n0", "n1"], "lo": ["n0", "n1"]}
+    evs = plan_preemptions(specs, nodes, placements)
+    assert evs and evs[0].victim == "lo" and evs[0].node == "n0"
+    assert evs[0].for_cls == "hi"
+
+
+def test_plan_preemptions_never_evicts_a_last_replica():
+    lut = make_lut()
+    specs = [pl.ClassSpec("hi", lut, 40.0, priority=3, backlog=20.0),
+             pl.ClassSpec("lo", lut, 40.0, priority=1)]
+    nodes = make_nodes([256])
+    placements = {"hi": ["n0"], "lo": ["n0"]}   # lo has nowhere else
+    assert plan_preemptions(specs, nodes, placements) == []
+
+
+def test_plan_preemptions_quiet_class_preempts_nothing():
+    lut = make_lut()
+    specs = [pl.ClassSpec("hi", lut, 40.0, priority=3, backlog=0.0),
+             pl.ClassSpec("lo", lut, 40.0, priority=1)]
+    nodes = make_nodes([256, 256])
+    placements = {"hi": ["n0"], "lo": ["n0", "n1"]}
+    assert plan_preemptions(specs, nodes, placements) == []
+
+
+# --- autoscaling -------------------------------------------------------------
+
+def test_plan_scaling_spins_up_standby_on_backlog():
+    nodes = make_nodes([256, 256], states=[UP, STANDBY])
+    plan = plan_scaling(nodes, backlog_per_chip=5.0)
+    assert plan.spin_up == ["n1"] and plan.spin_down == []
+    # no standby pool: nothing to wake
+    assert plan_scaling(make_nodes([256]),
+                        backlog_per_chip=5.0).spin_up == []
+
+
+def test_plan_scaling_spins_down_idle_under_high_price():
+    nodes = make_nodes([256, 64])
+    plan = plan_scaling(nodes, backlog_per_chip=0.0, energy_price=2.0)
+    assert plan.spin_down == ["n1"]          # the smallest UP node parks
+    # cheap energy, or the min_nodes floor, keeps everything up
+    assert plan_scaling(nodes, backlog_per_chip=0.0,
+                        energy_price=0.1).spin_down == []
+    assert plan_scaling(nodes, backlog_per_chip=0.0, energy_price=2.0,
+                        min_nodes=2).spin_down == []
+
+
+# --- simulate_cluster scripting ---------------------------------------------
+
+def _cls(name="api", priority=2, drop_policy=SHED, deadline_ms=200.0):
+    return SLOClass(name, deadline_ms=deadline_ms, priority=priority,
+                    drop_policy=drop_policy)
+
+
+def test_sim_no_flapping_under_steady_load():
+    """The migration-storm guard: steady balanced load across N
+    rebalance periods moves NOTHING."""
+    rep = simulate_cluster(
+        [_cls()], {"api": make_lut()}, {"api": poisson(300.0, 6.0, seed=3)},
+        make_nodes([256, 256]), router=LEAST_LOADED,
+        rebalance_at=[1.0, 2.0, 3.0, 4.0, 5.0])
+    assert rep.migrations == []
+    assert rep.preempted == []
+    assert rep.total_goodput > 0
+
+
+def test_sim_rebalance_recovers_skewed_first_fit():
+    """First-fit parks the class on one node; the rebalancer pays a
+    priced migration to scale it out and goodput improves."""
+    kw = dict(classes=[_cls(drop_policy=DEGRADE)],
+              luts={"api": make_lut()},
+              streams={"api": poisson(2500.0, 4.0, seed=5)},
+              router=LEAST_LOADED, placement_mode=FIRST_FIT)
+    static = simulate_cluster(nodes=make_nodes([256, 256, 256]), **kw)
+    rebal = simulate_cluster(nodes=make_nodes([256, 256, 256]),
+                             rebalance_at=[0.5, 1.5, 2.5, 3.5], **kw)
+    assert static.migrations == []
+    assert len(rebal.migrations) >= 1
+    assert all(mv[3] is not None for mv in rebal.migrations)  # adds/moves
+    assert rebal.total_goodput > static.total_goodput
+
+
+def test_sim_rebalance_and_scale_are_deterministic():
+    """Same seeded trace + same scripting ⇒ identical routing decisions
+    and identical reports — the placement engine adds no nondeterminism."""
+    def run():
+        return simulate_cluster(
+            [_cls(drop_policy=DEGRADE)], {"api": make_lut()},
+            {"api": poisson(2500.0, 4.0, seed=11)},
+            make_nodes([256, 256, 256], states=[UP, UP, STANDBY]),
+            router=LEAST_LOADED, placement_mode=FIRST_FIT,
+            rebalance_at=[0.5, 1.5, 2.5], scale_at=[0.4, 1.4, 2.4],
+            energy_price_fn=lambda t: 0.2 if t < 2.0 else 2.0)
+    a, b = run(), run()
+    assert a.decisions == b.decisions
+    assert a.migrations == b.migrations
+    assert a.scale_events == b.scale_events
+    assert a.summary() == b.summary()
+
+
+def test_sim_autoscaler_spins_up_standby_on_sustained_backlog():
+    rep = simulate_cluster(
+        [_cls(drop_policy=DEGRADE)], {"api": make_lut()},
+        {"api": poisson(3000.0, 4.0, seed=13)},
+        make_nodes([256, 256], states=[UP, STANDBY]),
+        router=LEAST_LOADED, scale_at=[1.0, 2.0, 3.0])
+    ups = [e for e in rep.scale_events if e[1] == "up"]
+    assert ups and ups[0][2] == "n1"
+    # the woken node really serves: its replica appears in the routing log
+    assert any(d[2] == "n1" for d in rep.decisions)
+
+
+def test_sim_autoscaler_spins_down_idle_node_under_high_price():
+    """A trickle the big node absorbs + an expensive grid at the late
+    scale instant parks the small idle node back to STANDBY."""
+    times = [i * 0.25 for i in range(40)]          # 10s trickle, 4 rps
+    rep = simulate_cluster(
+        [_cls()], {"api": make_lut()}, {"api": times},
+        make_nodes([256, 64]), router=LEAST_LOADED,
+        scale_at=[8.0], energy_price_fn=lambda t: 2.0)
+    downs = [e for e in rep.scale_events if e[1] == "down"]
+    assert len(downs) == 1 and downs[0][2] == "n1"
+    assert 8.0 <= downs[0][0] <= 8.5     # the epoch that services t=8.0
+    assert rep.nodes["n1"]["state"] == STANDBY
+
+
+def test_sim_cross_node_preemption_evicts_colocated_replica():
+    """A backlogged high-priority class evicts the low-priority replica
+    sharing its node; the victim keeps serving from its other home."""
+    lut = make_lut()
+    rep = simulate_cluster(
+        [_cls("hot", priority=3, drop_policy=DEGRADE),
+         _cls("bulk", priority=0, drop_policy=DEGRADE)],
+        {"hot": lut, "bulk": lut},
+        {"hot": poisson(2500.0, 3.0, seed=17),
+         "bulk": poisson(50.0, 3.0, seed=18)},
+        make_nodes([256, 256]), router=LEAST_LOADED,
+        rebalance_at=[0.5])
+    assert any(p[1] == "bulk" and p[3] == "hot" for p in rep.preempted)
+    assert rep.classes["bulk"].completed > 0      # survived elsewhere
+
+
+# --- router satellites -------------------------------------------------------
+
+def test_router_decision_log_is_bounded():
+    nodes = make_nodes([64, 64])
+    r = ClusterRouter(LEAST_LOADED, decision_log_cap=8)
+    for i in range(20):
+        r.pick("a", nodes, t=float(i))
+    assert len(r.decisions) == 8
+    assert r.decisions_dropped == 12
+    # the NEWEST picks are kept (like the engine's switch_log)
+    assert [d[0] for d in r.decisions] == [float(i) for i in range(12, 20)]
+    # aggregate counts still see everything
+    assert sum(r.routed_counts()["a"].values()) == 20
+
+
+def test_router_weight_zero_takes_replica_out_of_rotation():
+    nodes = make_nodes([64, 64])
+    r = ClusterRouter(LEAST_LOADED)
+    r.set_weight("a", "n0", 0.0)
+    assert all(r.pick("a", nodes).name == "n1" for _ in range(4))
+    r.set_weight("a", "n0", None)               # cleared: back in rotation
+    assert r.pick("a", nodes, load_fn=lambda n: 0.0).name == "n0"
+    # weights scale the compared load: a weight-4 node looks 4x lighter
+    r.set_weight("a", "n1", 4.0)
+    assert r.pick("a", nodes,
+                  load_fn=lambda n: 1.0 if n.name == "n1" else 0.5
+                  ).name == "n1"
+
+
+# --- the perf-gate smoke test ------------------------------------------------
+
+def test_run_py_compare_gates_placement_headline(tmp_path):
+    """End-to-end ``run.py --suite placement --smoke --json --compare``:
+    the placement suite runs (its own acceptance asserts fire), the gate
+    passes against an honest previous file and exits non-zero against a
+    fabricated better past."""
+    import json
+    import pathlib
+    import subprocess
+    import sys
+    root = pathlib.Path(__file__).resolve().parents[1]
+    out = tmp_path / "now.json"
+
+    def gate(prev_path):
+        return subprocess.run(
+            [sys.executable, "benchmarks/run.py", "--suite", "placement",
+             "--smoke", "--json", str(out), "--compare", str(prev_path)],
+            cwd=root, env={"PYTHONPATH": "src:.", "PATH": "/usr/bin:/bin"},
+            capture_output=True, text=True)
+
+    # seed the previous file from a first smoke run (no --compare)
+    first = subprocess.run(
+        [sys.executable, "benchmarks/run.py", "--suite", "placement",
+         "--smoke", "--json", str(out)],
+        cwd=root, env={"PYTHONPATH": "src:.", "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True)
+    assert first.returncode == 0, first.stderr
+    prev = tmp_path / "prev.json"
+    prev.write_text(out.read_text())
+
+    ok = gate(prev)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    assert "no headline regression" in ok.stdout
+
+    # a past that claims a far higher goodput ratio must trip the gate
+    doc = json.loads(prev.read_text())
+    for rows in doc["suites"].values():
+        for row in rows:
+            if row["name"] == "placement/rebalance_goodput_ratio":
+                row["value"] = row["value"] * 100.0
+    prev.write_text(json.dumps(doc))
+    bad = gate(prev)
+    assert bad.returncode == 2
+    assert "REGRESSION placement/rebalance_goodput_ratio" in bad.stdout
