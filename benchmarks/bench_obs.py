@@ -1,0 +1,96 @@
+"""Observability overhead: the tracing-on stack must not change what it
+measures.
+
+Replays bench_traffic's seeded contention trace twice through
+:func:`repro.traffic.simulate` — once bare, once with a :class:`Tracer`
+and a :class:`MetricsRegistry` attached — and gates on:
+
+* ``obs/trace_overhead_ratio`` — traced goodput / untraced goodput.
+  The simulator is virtual-time, so tracing CANNOT change the measured
+  schedule; the ratio must be >= 0.97 (headline, gated as an absolute
+  floor by ``run.py --compare``) and the full report summaries must be
+  IDENTICAL (asserted — the stronger form of "observability does not
+  perturb the experiment");
+* the retained span trees must decompose: per-class p50/p95 split into
+  queue/collect/stack/dispatch/device sums back to the measured latency
+  (``decompose_latency`` asserts the 5 % tolerance internally);
+* wall-clock cost of carrying the tracer + registry through the run is
+  reported (informational — host-dependent, not gated).
+
+    PYTHONPATH=src python benchmarks/bench_obs.py [--smoke]
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.bench_traffic import CLASSES, INTERVAL_S, g_fn, make_luts, \
+    make_streams
+from repro.obs import (MetricsRegistry, Tracer, decompose_latency,
+                       to_chrome_trace, validate_schema)
+from repro.traffic import SLO_POLICY, simulate
+
+GOODPUT_FLOOR = 0.97
+
+
+def run(smoke: bool = False):
+    horizon_s = 12.0 if smoke else 60.0
+    luts = make_luts()
+    classes = [cls for cls, _ in CLASSES]
+
+    t0 = time.perf_counter()
+    bare = simulate(classes, luts, make_streams(horizon_s), g_fn,
+                    interval_s=INTERVAL_S, policy=SLO_POLICY)
+    t_bare = time.perf_counter() - t0
+
+    tracer = Tracer(clock=lambda: 0.0)   # virtual time: spans are explicit
+    metrics = MetricsRegistry()
+    t0 = time.perf_counter()
+    traced = simulate(classes, luts, make_streams(horizon_s), g_fn,
+                      interval_s=INTERVAL_S, policy=SLO_POLICY,
+                      tracer=tracer, metrics=metrics)
+    t_traced = time.perf_counter() - t0
+
+    ratio = traced.total_goodput / max(bare.total_goodput, 1)
+    assert ratio >= GOODPUT_FLOOR, (
+        f"tracing-on goodput {traced.total_goodput} < "
+        f"{GOODPUT_FLOOR}x tracing-off {bare.total_goodput}")
+    # virtual time makes the stronger claim checkable: byte-identical runs
+    assert traced.summary() == bare.summary(), (
+        "tracing changed the measured report")
+
+    problems = validate_schema(tracer.spans())
+    assert not problems, f"schema violations: {problems[:3]}"
+    decomp = decompose_latency(tracer)   # asserts sums-to-total per trace
+    events = len(to_chrome_trace(tracer)["traceEvents"])
+    retained = len(tracer.requests())
+
+    wall_ratio = t_traced / max(t_bare, 1e-9)
+    rows = [
+        ("obs/trace_overhead_ratio", ratio,
+         f"goodput {traced.total_goodput} traced vs {bare.total_goodput} "
+         f"untraced (floor {GOODPUT_FLOOR})"),
+        ("obs/retained_traces", retained,
+         f"dropped={tracer.dropped} decisions={len(tracer.decisions)} "
+         f"perfetto_events={events}"),
+        ("obs/wallclock_overhead_ratio", wall_ratio,
+         f"{t_traced * 1e3:.1f}ms traced vs {t_bare * 1e3:.1f}ms bare "
+         f"(informational, host-dependent)"),
+    ]
+    for cname, d in sorted(decomp.items()):
+        p95 = d["p95"]
+        parts = ", ".join(f"{k[:-3]}={v:.1f}" for k, v in sorted(p95.items())
+                          if k.endswith("_ms") and k != "total_ms" and v > 0)
+        rows.append((f"obs/decomp/{cname}/p95_ms", p95["total_ms"],
+                     parts or "all-zero"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short horizon (fast CI path)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, val, derived in run(smoke=args.smoke):
+        print(f"{name},{val:.3f},{derived}")

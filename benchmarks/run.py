@@ -45,6 +45,8 @@ HEADLINES = {
                                           "tol": 0.10},
     # absolute: steady load must NEVER migrate, in any mode
     "placement/steady_migrations": {"max": 0.0},
+    # absolute floor: tracing-on goodput / tracing-off goodput
+    "obs/trace_overhead_ratio": {"min": 0.97},
 }
 REGRESSION_TOL = 0.10
 
@@ -72,6 +74,12 @@ def compare_headlines(prev_suites: dict, new_suites: dict) -> list:
                                     f"above absolute ceiling "
                                     f"{spec['max']:g}"))
             continue
+        if "min" in spec:
+            if n < spec["min"]:
+                regressions.append((name, prev.get(name), n,
+                                    f"below absolute floor "
+                                    f"{spec['min']:g}"))
+            continue
         if name not in prev:
             continue
         p = prev[name]
@@ -92,6 +100,7 @@ def main() -> None:
     import benchmarks.bench_cluster as bc
     import benchmarks.bench_governor as bg
     import benchmarks.bench_kernels as bk
+    import benchmarks.bench_obs as bo
     import benchmarks.bench_pareto as bp
     import benchmarks.bench_placement as bpl
     import benchmarks.bench_switching as bs
@@ -123,6 +132,8 @@ def main() -> None:
          lambda: bpl.run(smoke=args.smoke)),
         ("calibration (closed-loop measured planning vs open-loop)",
          lambda: bcal.run(smoke=args.smoke)),
+        ("obs (tracing on vs off: goodput unchanged, decomposition)",
+         lambda: bo.run(smoke=args.smoke)),
         ("switching (paper: runtime architecture switching)", bs.run),
         ("kernels (elastic matmul / flash attention)", bk.run),
         ("roofline (dry-run derived)", rt.rows),

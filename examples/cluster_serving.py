@@ -1,6 +1,6 @@
 """Multi-node cluster serving walkthrough.
 
-Five acts:
+Six acts:
 
 1. **Scale-out (virtual time)** — one overloaded SLO class replayed
    against 1-node and 2-node clusters through the deterministic
@@ -28,6 +28,16 @@ Five acts:
    low-priority replica that keeps serving from its other home; a
    burst wakes a STANDBY node; and once the burst passes, expensive
    energy parks the idle spare again.
+6. **Tracing a tail request (observability)** — a node loses its
+   accelerators mid-run while the whole class is first-fit-parked on
+   it; the rebalancer prices a paired move onto the healthy spare and
+   requeues the stranded backlog behind that replica's warmup.  With a
+   :class:`repro.obs.Tracer` attached, the ``migrate`` decision span
+   shows the priced warmup window, the tail-biased trace buffer fills
+   with exactly those migration victims, and one victim's span tree
+   decomposes its latency into warming + queue + device — the warming
+   span ends at the instant the placement engine charged for
+   (``t_rebalance + cost_s``), now visible per request.
 
     PYTHONPATH=src python examples/cluster_serving.py
 """
@@ -235,9 +245,59 @@ def act_5_placement_engine():
           f"{down_nodes[1].state!r} (idle + price 2.0)")
 
 
+def act_6_trace_a_tail_request():
+    print("== act 6: trace a tail request through a priced migration ==")
+    from repro.obs import (MIGRATE, WARMING, Tracer, decompose_latency,
+                           format_decomposition)
+    lut = model_lut(SPACE.enumerate(), full_terms=TERMS, full_chips=256)
+    cls = [SLOClass("api", deadline_ms=200.0, priority=2,
+                    drop_policy=DEGRADE)]
+    # n0 loses its accelerators at t=0.6s while first-fit holds the whole
+    # class there; backlog piles up until the 1.3s rebalance prices a
+    # paired move onto n1 and requeues the stranded queue behind its
+    # warmup — those requests are the tail this act goes looking for.
+    def dipped(t):
+        return GlobalConstraints(total_chips=256 if t < 0.6 else 1)
+    nodes = [ClusterNode(name="n0", g_fn=dipped),
+             ClusterNode(name="n1",
+                         g_fn=lambda t: GlobalConstraints(total_chips=256))]
+    tracer = Tracer(clock=lambda: 0.0)   # sims stamp virtual times
+    rep = simulate_cluster(cls, {"api": lut},
+                           {"api": poisson(1500.0, 4.0, seed=5)},
+                           nodes, router=LEAST_LOADED,
+                           placement_mode=FIRST_FIT,
+                           rebalance_at=[1.3], replicas=1, tracer=tracer)
+    mig = next(s for s in tracer.decisions if s.name == MIGRATE)
+    print(f"  migration: 'api' {mig.attrs['src']} -> {mig.node} at "
+          f"t={mig.t0:.2f}s, warmup {mig.attrs['cost_s']:.2f}s priced "
+          f"into the placement")
+    # the tail reservoir keeps the slowest requests; pick one that stalled
+    # behind that warmup (its span tree carries a `warming` component)
+    warmed = [t for t in tracer.tail_requests()
+              if any(s.name == WARMING for s in t.spans)]
+    print(f"  tail reservoir: {len(warmed)}/{len(tracer.tail_requests())} "
+          f"slowest traces stalled behind the warming replica")
+    victim = max(warmed, key=lambda t: t.total_ms)
+    comp = victim.component_ms()
+    parts = " + ".join(f"{n} {ms:.1f}ms" for n, ms in sorted(
+        comp.items(), key=lambda kv: -kv[1]) if ms > 0)
+    print(f"  tail request {victim.trace_id} ({victim.total_ms:.1f}ms on "
+          f"{victim.node}): {parts}")
+    print(f"  (sums to the measured latency: "
+          f"{sum(comp.values()):.1f}ms == {victim.total_ms:.1f}ms)")
+    warm_span = next(s for s in victim.spans if s.name == WARMING)
+    print(f"  its warming span ends at t={warm_span.t1:.3f}s — exactly "
+          f"the instant the rebalancer priced "
+          f"(t={mig.t0:.1f}s + cost {mig.attrs['cost_s']:.3f}s)")
+    print("  per-class decomposition over the retained traces:")
+    for line in format_decomposition(decompose_latency(rep)).splitlines():
+        print(f"    {line}")
+
+
 if __name__ == "__main__":
     act_1_scale_out()
     act_2_skewed_routing()
     act_3_live_lifecycle()
     act_4_wedged_node_auto_failover()
     act_5_placement_engine()
+    act_6_trace_a_tail_request()

@@ -40,16 +40,19 @@ cluster unchanged.
 """
 from __future__ import annotations
 
+import collections
 import queue
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 from repro.cluster import placement as pl
 from repro.cluster.admission import cluster_admission
 from repro.cluster.node import (DEAD, DRAINED, DRAINING, HEALTH_EPOCHS, UP,
                                 ClusterNode)
 from repro.cluster.router import P2C, ClusterRouter
+from repro.obs import trace as obs
+from repro.obs.metrics import MetricsRegistry
 from repro.runtime.arbiter import AdmissionError
 from repro.runtime.engine import DynamicServer
 from repro.runtime.lut import LUT
@@ -80,18 +83,34 @@ class Cluster:
                  health_epochs: int = HEALTH_EPOCHS,
                  rebalance_interval_s: Optional[float] = None,
                  rebalance_hysteresis: float = pl.DEFAULT_HYSTERESIS,
-                 replicas: Optional[int] = None):
+                 replicas: Optional[int] = None,
+                 tracer=None, metrics: Optional[MetricsRegistry] = None,
+                 log_cap: int = 4096):
         if not nodes:
             raise ValueError("a cluster needs at least one node")
         names = [n.name for n in nodes]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate node names: {names}")
         self.nodes: Dict[str, ClusterNode] = {n.name: n for n in nodes}
-        self.router = ClusterRouter(router, seed=router_seed)
+        # observability: ONE tracer spans the whole request path (route
+        # at the front-end, queue→device inside each node's engine) and
+        # ONE cluster registry holds router/migration/health counters
+        # (node arbiters keep their own registries — tenant labels would
+        # collide across nodes)
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.router = ClusterRouter(router, seed=router_seed,
+                                    metrics=self.metrics)
+        for n in nodes:
+            n.attach_obs(tracer, self.metrics)
         # stall-based health checking: None disables the checker thread
         self.health_interval_s = health_interval_s
         self.health_epochs = health_epochs
-        self.health_log: List[str] = []   # nodes auto-failed by health
+        # event logs are bounded (PR 3 switch_log idiom): a long live run
+        # keeps the newest log_cap entries and counts the rest
+        self.log_cap = log_cap
+        self.health_log: Deque[str] = collections.deque(maxlen=log_cap)
+        self.health_log_dropped = 0
         self._health_stop = threading.Event()
         self._health_thread: Optional[threading.Thread] = None
         # periodic cluster-wide rebalancing (the PR-6 placement engine):
@@ -99,8 +118,12 @@ class Cluster:
         self.rebalance_interval_s = rebalance_interval_s
         self.rebalance_hysteresis = rebalance_hysteresis
         self.replicas = replicas
-        self.migration_log: List[tuple] = []   # (t, cls, src, dst)
-        self.preempt_log: List[tuple] = []     # (t, victim, node, for_cls)
+        # (t, cls, src, dst)
+        self.migration_log: Deque[tuple] = collections.deque(maxlen=log_cap)
+        self.migration_log_dropped = 0
+        # (t, victim, node, for_cls)
+        self.preempt_log: Deque[tuple] = collections.deque(maxlen=log_cap)
+        self.preempt_log_dropped = 0
         self._rebalance_stop = threading.Event()
         self._rebalance_thread: Optional[threading.Thread] = None
         # classes whose re-admission attempt found no feasible node —
@@ -166,6 +189,7 @@ class Cluster:
                               server=server)
         if server is not None:
             node.servers[name] = server
+            node.attach_obs(self.tracer, self.metrics)
 
     def _readmit_orphans(self):
         """Re-place classes whose every replica died/drained away — the
@@ -231,8 +255,12 @@ class Cluster:
                                      horizon_s=horizon,
                                      hysteresis=self.rebalance_hysteresis,
                                      replicas=self.replicas)
+            t_plan = (time.perf_counter()
+                      if self.tracer is not None else 0.0)
             for mv in plan.moves:
                 info = self._classes[mv.cls]
+                t_mv = (time.perf_counter()
+                        if self.tracer is not None else 0.0)
                 if mv.dst is not None:
                     self._place_on(mv.cls, info, self.nodes[mv.dst])
                     with self._lock:
@@ -240,15 +268,40 @@ class Cluster:
                             self.placements[mv.cls].append(mv.dst)
                 if mv.src is not None:
                     self._retire_replica(mv.cls, mv.src)
+                if len(self.migration_log) == self.log_cap:
+                    self.migration_log_dropped += 1  # deque evicts oldest
                 self.migration_log.append((t, mv.cls, mv.src, mv.dst))
+                self.metrics.counter("cluster_migrations_total",
+                                     cls=mv.cls).inc()
+                if self.tracer is not None:
+                    # the span covers the real move: destination server
+                    # build/warmup through source drain + export
+                    self.tracer.decision(
+                        obs.MIGRATE, t_mv, time.perf_counter(),
+                        cls=mv.cls, node=mv.dst, src=mv.src,
+                        cost_s=mv.cost_s)
             evs = pl.plan_preemptions(specs, up_nodes, current)
             for ev in evs:
+                t_ev = (time.perf_counter()
+                        if self.tracer is not None else 0.0)
                 self._retire_replica(ev.victim, ev.node)
                 # the freed share lands NOW, not at the next clock tick
                 node = self.nodes[ev.node]
                 if ev.for_cls in node.arbiter.tenants():
                     node.arbiter.preempt(ev.for_cls, node.g(t))
+                if len(self.preempt_log) == self.log_cap:
+                    self.preempt_log_dropped += 1    # deque evicts oldest
                 self.preempt_log.append((t, ev.victim, ev.node, ev.for_cls))
+                self.metrics.counter("cluster_preemptions_total",
+                                     cls=ev.victim).inc()
+                if self.tracer is not None:
+                    self.tracer.decision(
+                        obs.PREEMPT, t_ev, time.perf_counter(),
+                        cls=ev.victim, node=ev.node, for_cls=ev.for_cls)
+            if self.tracer is not None:
+                self.tracer.decision(
+                    obs.REBALANCE, t_plan, time.perf_counter(),
+                    moves=len(plan.moves), preemptions=len(evs))
             return plan
 
     def _retire_replica(self, name: str, node_name: str):
@@ -274,6 +327,7 @@ class Cluster:
     # --- request path -------------------------------------------------------
 
     def submit(self, name: str, x) -> "queue.Queue":
+        t_sub = time.perf_counter() if self.tracer is not None else 0.0
         with self._lock:
             cands = self._routable(name)
             node = self.router.pick(name, cands, t=self._now()) \
@@ -290,6 +344,14 @@ class Cluster:
         if server is None:
             return _dead_future(f"class {name!r}: node {node.name} "
                                 f"has no server replica")
+        if self.tracer is not None:
+            # begin the span tree HERE, under the SLO class, with the
+            # router's pick as the route span; the engine appends the
+            # queue→device children and finalizes at outputs-ready
+            tid = self.tracer.begin_request(name, t=t_sub, node=node.name)
+            self.tracer.add_span(tid, obs.ROUTE, t_sub,
+                                 time.perf_counter(), node=node.name)
+            return server.submit(x, trace_id=tid)
         return server.submit(x)
 
     def port(self, name: str) -> _ClassPort:
@@ -334,12 +396,22 @@ class Cluster:
                     # outstanding — run the SAME failover path an
                     # operator's fail() would (queued futures resolve
                     # with error payloads, classes re-admit elsewhere)
+                    if len(self.health_log) == self.log_cap:
+                        self.health_log_dropped += 1  # deque evicts oldest
                     self.health_log.append(node.name)
+                    self.metrics.counter("cluster_health_failed_total",
+                                         node=node.name).inc()
+                    t_fail = (time.perf_counter()
+                              if self.tracer is not None else 0.0)
                     self.fail(node.name,
                               reason=f"health: node {node.name} wedged "
                                      f"(completions stalled "
                                      f"{node.health.stalled_epochs} epochs "
                                      f"with backlog)")
+                    if self.tracer is not None:
+                        self.tracer.decision(
+                            obs.HEALTH_FAIL, t_fail, time.perf_counter(),
+                            node=node.name)
             self._health_stop.wait(self.health_interval_s)
 
     def stop(self):
@@ -413,6 +485,9 @@ class Cluster:
             "unplaceable": sorted(self.unplaceable),
             "migrations": list(self.migration_log),
             "preempted": list(self.preempt_log),
+            "log_dropped": {"health": self.health_log_dropped,
+                            "migrations": self.migration_log_dropped,
+                            "preempted": self.preempt_log_dropped},
             "nodes": {nn: {"state": node.state,
                            "arbiter": node.arbiter.summary()}
                       for nn, node in self.nodes.items()},

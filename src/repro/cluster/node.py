@@ -97,6 +97,22 @@ class ClusterNode:
         """Does the node still serve (routable or draining)?"""
         return self.state in (UP, DRAINING)
 
+    def attach_obs(self, tracer=None, metrics=None):
+        """Wire observability down the node's stack: the arbiter gets the
+        tracer (ARBITRATE/PREEMPT decision spans labelled with this
+        node's name) and every server records request span trees and
+        engine counters.  The cluster front-end calls this on attach and
+        again for servers placed later (:meth:`_place_on`)."""
+        if tracer is not None:
+            self.arbiter.tracer = tracer
+            self.arbiter.trace_label = self.name
+        for server in self.servers.values():
+            if tracer is not None:
+                server.tracer = tracer
+                server.trace_node = self.name
+            if metrics is not None:
+                server.metrics = metrics
+
     def g(self, t: float = 0.0) -> GlobalConstraints:
         return self.g_fn(t)
 

@@ -25,11 +25,12 @@ in/out-of-rotation part.
 from __future__ import annotations
 
 import collections
-from typing import Callable, Deque, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.cluster.node import ClusterNode
+from repro.obs.metrics import MetricsRegistry
 
 P2C = "p2c"
 LEAST_LOADED = "least_loaded"
@@ -49,7 +50,8 @@ class ClusterRouter:
     """
 
     def __init__(self, policy: str = P2C, *, seed: int = 0,
-                 decision_log_cap: int = 1 << 20):
+                 decision_log_cap: int = 1 << 20,
+                 metrics: Optional[MetricsRegistry] = None):
         if policy not in ROUTERS:
             raise ValueError(f"router {policy!r} not in {ROUTERS}")
         self.policy = policy
@@ -60,7 +62,10 @@ class ClusterRouter:
         self.decisions: Deque[Tuple[float, str, str]] = collections.deque(
             maxlen=decision_log_cap)
         self.decisions_dropped = 0
-        self.routed: dict = {}         # class -> node -> count
+        # per-(class, node) pick counts live in the metrics registry
+        # (series ``router_routed_total``); the cluster injects its shared
+        # registry so one scrape sees routing next to placement counters
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.weights: dict = {}        # (class, node) -> load multiplier
 
     def set_weight(self, cls_name: str, node_name: str,
@@ -106,10 +111,15 @@ class ClusterRouter:
         if len(self.decisions) == self.decision_log_cap:
             self.decisions_dropped += 1   # deque evicts the oldest pick
         self.decisions.append((t, cls_name, node.name))
-        per_cls = self.routed.setdefault(cls_name, {})
-        per_cls[node.name] = per_cls.get(node.name, 0) + 1
+        self.metrics.counter("router_routed_total", cls=cls_name,
+                             node=node.name).inc()
         return node
 
     def routed_counts(self) -> dict:
-        """``{class: {node: requests_routed}}`` for reports."""
-        return {c: dict(m) for c, m in self.routed.items()}
+        """``{class: {node: requests_routed}}`` for reports —
+        reconstructed from the registry's ``router_routed_total`` series."""
+        out: dict = {}
+        for lbl in self.metrics.labels_of("router_routed_total"):
+            n = self.metrics.value("router_routed_total", **lbl)
+            out.setdefault(lbl["cls"], {})[lbl["node"]] = int(n)
+        return out

@@ -47,12 +47,14 @@ from __future__ import annotations
 import collections
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.cluster import placement as pl
 from repro.cluster.node import (DEAD, DRAINED, DRAINING, STANDBY, UP,
                                 ClusterNode, StallDetector)
 from repro.cluster.router import P2C, ClusterRouter
+from repro.obs import trace as obs
+from repro.obs.metrics import MetricsRegistry
 from repro.runtime.lut import LUT
 from repro.traffic import arrivals as arr
 from repro.traffic.driver import (BUCKETED_SERVICE, POLICIES, SERVICE_MODELS,
@@ -93,11 +95,17 @@ class ClusterReport:
     # been admitted, then lost every replica) — satellite: no silent retry
     unplaceable: List[str] = dataclasses.field(default_factory=list)
     decisions_dropped: int = 0
+    # events evicted from the capped logs above (switch_log idiom)
+    log_dropped: Dict[str, int] = dataclasses.field(default_factory=dict)
     # modelled serving energy per class (sum of dispatched batches'
     # OpPoint.energy_mj) + warmup energy paid for migrations/spin-ups —
     # the bench's "no higher energy" axis prices migrations honestly
     energy_mj: Dict[str, float] = dataclasses.field(default_factory=dict)
     migration_energy_mj: float = 0.0
+    # the run's observability handles (``decompose_latency(report)``
+    # reads .tracer); excluded from summary() — not plain data
+    tracer: Optional[object] = None
+    metrics: Optional[MetricsRegistry] = None
 
     @property
     def total_goodput(self) -> int:
@@ -128,6 +136,7 @@ class ClusterReport:
                 "preempted": list(self.preempted),
                 "scale_events": list(self.scale_events),
                 "unplaceable": list(self.unplaceable),
+                "log_dropped": dict(self.log_dropped),
                 "energy_mj": {n: round(e, 2)
                               for n, e in self.energy_mj.items()},
                 "migration_energy_mj": round(self.migration_energy_mj, 2),
@@ -153,7 +162,11 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                      hysteresis: float = pl.DEFAULT_HYSTERESIS,
                      replicas: Optional[int] = None,
                      energy_price_fn=None,
-                     min_nodes: int = 1) -> ClusterReport:
+                     min_nodes: int = 1,
+                     tracer=None,
+                     metrics: Optional[MetricsRegistry] = None,
+                     log_cap: int = 4096
+                     ) -> ClusterReport:
     """Run one seeded trace through the cluster in virtual time.
 
     ``nodes`` must be freshly-built (their arbiters get the class
@@ -190,6 +203,17 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     ``min_nodes``.  ``placement_mode="first_fit"`` scripts the static
     baseline the placement benchmark beats: one replica per class on
     the first admitting node.
+
+    ``tracer`` (a :class:`repro.obs.Tracer`) records the SAME span
+    schema the live stack emits, in VIRTUAL time: per-request trees
+    (route → queue [→ warming] → collect → stack → dispatch → device →
+    complete; host-side stages are zero-width points — the analytic
+    service model folds them into the batch) plus per-epoch ARBITRATE
+    and scripted REBALANCE / MIGRATE / PREEMPT / SCALE / HEALTH_FAIL
+    decision spans.  ``metrics`` feeds the report's energy/completions
+    accounting through a :class:`repro.obs.MetricsRegistry` (one is
+    created per run when None); the report keeps its public shape, read
+    back from the registry, and carries both handles.
     """
     assert policy in POLICIES, policy
     assert service_model in SERVICE_MODELS, service_model
@@ -203,10 +227,25 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     drain_at = dict(drain_at or {})
     wedge_at = dict(wedge_at or {})
     wedged = {n.name: False for n in nodes}
-    completions = {n.name: 0 for n in nodes}   # liveness counters
+    # per-run accounting lives in a metrics registry (the report reads
+    # it back into its public dict shapes); counter handles are held in
+    # dicts so the hot loop pays one attribute bump, no lookups
+    m = metrics if metrics is not None else MetricsRegistry()
+    completions = {n.name: m.counter("sim_completions_total", node=n.name)
+                   for n in nodes}   # liveness counters
     health = {n.name: StallDetector(epochs=health_epochs or 0)
               for n in nodes} if health_epochs else {}
-    health_failed: List[Tuple[float, str]] = []
+    # event logs are bounded like the front-end's (switch_log idiom:
+    # capped deque + dropped counter); report shapes stay plain lists
+    health_failed: Deque[Tuple[float, str]] = collections.deque(
+        maxlen=log_cap)
+    log_dropped = {"health": 0, "migrations": 0, "preempted": 0,
+                   "scale_events": 0}
+
+    def log_event(log: Deque, key: str, item) -> None:
+        if len(log) == log.maxlen:
+            log_dropped[key] += 1   # deque evicts the oldest
+        log.append(item)
     if calibration is not None:
         for node in nodes:
             if node.arbiter.calibration is None:
@@ -319,13 +358,20 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     horizon_s = (rebalance_horizon_s if rebalance_horizon_s is not None
                  else (rebalance_due[1] - rebalance_due[0]
                        if len(rebalance_due) > 1 else 5.0))
-    migrations: List[Tuple[float, str, Optional[str], Optional[str]]] = []
-    preempted: List[Tuple[float, str, str, str]] = []
-    scale_events: List[Tuple[float, str, str]] = []
+    migrations: Deque[Tuple[float, str, Optional[str], Optional[str]]] = \
+        collections.deque(maxlen=log_cap)
+    preempted: Deque[Tuple[float, str, str, str]] = \
+        collections.deque(maxlen=log_cap)
+    scale_events: Deque[Tuple[float, str, str]] = \
+        collections.deque(maxlen=log_cap)
     warming: List[Tuple[float, str, str]] = []   # (warm_t, cls, node)
+    # (node, cls) -> latest warmup end: attributes a routed request's
+    # wait behind a migrating replica to a WARMING span, not queueing
+    warm_until: Dict[Tuple[str, str], float] = {}
     scale_ewma = 0.0   # sustained cluster backlog per chip
-    energy = {c.name: 0.0 for c in classes}
-    mig_energy_mj = 0.0
+    energy = {c.name: m.counter("sim_energy_mj_total", cls=c.name)
+              for c in classes}
+    mig_energy = m.counter("sim_migration_energy_mj_total")
 
     def spec_of(c) -> pl.ClassSpec:
         return pl.ClassSpec(
@@ -351,6 +397,7 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
             placements[cn].append(nn)
         warm_t = t0 + warm_s
         busy_until[nn][cn] = max(busy_until[nn][cn], warm_t)
+        warm_until[(nn, cn)] = max(warm_until.get((nn, cn), 0.0), warm_t)
         rtr.set_weight(cn, nn, 0.0)
         warming.append((warm_t, cn, nn))
         unplaceable.discard(cn)
@@ -373,6 +420,7 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                     sorted(list(queues[home][cn]) + list(q)))
             q.clear()
         busy_until[nn][cn] = 0.0
+        warm_until.pop((nn, cn), None)
 
     def run_rebalance(tr: float):
         """One cluster-wide rebalance: fresh solve, priced diff, apply."""
@@ -382,14 +430,20 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                                  horizon_s=horizon_s,
                                  hysteresis=hysteresis, replicas=replicas,
                                  calibration=calibration)
-        nonlocal mig_energy_mj
         for mv in plan.moves:
             if mv.dst is not None:
                 start_replica(mv.cls, mv.dst, tr, mv.cost_s)
-                mig_energy_mj += mv.cost_j * 1e3
+                mig_energy.inc(mv.cost_j * 1e3)
             if mv.src is not None:
                 retire_replica(mv.cls, mv.src, mv.dst)
-            migrations.append((tr, mv.cls, mv.src, mv.dst))
+            log_event(migrations, "migrations", (tr, mv.cls, mv.src, mv.dst))
+            m.counter("cluster_migrations_total", cls=mv.cls).inc()
+            if tracer is not None:
+                # the span covers the priced warmup: dst serves at
+                # tr + cost_s, exactly when the router weight clears
+                tracer.decision(obs.MIGRATE, tr, tr + mv.cost_s,
+                                cls=mv.cls, node=mv.dst, src=mv.src,
+                                cost_s=mv.cost_s)
         # cross-node preemption: a backlogged high-priority class evicts
         # the lowest-priority co-located replica that has another home
         evs = pl.plan_preemptions(
@@ -397,11 +451,18 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
             node_backlog=lambda c, n2: float(len(queues[n2][c])))
         for ev in evs:
             retire_replica(ev.victim, ev.node, None)
-            preempted.append((tr, ev.victim, ev.node, ev.for_cls))
+            log_event(preempted, "preempted",
+                      (tr, ev.victim, ev.node, ev.for_cls))
+            m.counter("cluster_preemptions_total", cls=ev.victim).inc()
+            if tracer is not None:
+                tracer.decision(obs.PREEMPT, tr, tr, cls=ev.victim,
+                                node=ev.node, for_cls=ev.for_cls)
+        if tracer is not None:
+            tracer.decision(obs.REBALANCE, tr, tr, moves=len(plan.moves),
+                            preemptions=len(evs))
 
     def run_scaling(ts: float):
         """One autoscaler step over the node pool."""
-        nonlocal mig_energy_mj
         price = energy_price_fn(ts) if energy_price_fn is not None else 0.0
         plan = pl.plan_scaling(nodes, backlog_per_chip=scale_ewma,
                                energy_price=price, t=ts,
@@ -409,7 +470,10 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
         for nn in plan.spin_up:
             node = by_node[nn]
             node.state = UP
-            scale_events.append((ts, "up", nn))
+            log_event(scale_events, "scale_events", (ts, "up", nn))
+            if tracer is not None:
+                tracer.decision(obs.SCALE, ts, ts, node=nn,
+                                direction="up")
             for c in classes:
                 ok = node.arbiter.admission_check(
                     luts[c.name], reg_info[c.name]["target"], node.g(ts),
@@ -419,7 +483,7 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                     cost = pl.migration_cost(spec_of(c),
                                              calibration=calibration)
                     start_replica(c.name, nn, ts, cost.seconds)
-                    mig_energy_mj += cost.joules * 1e3
+                    mig_energy.inc(cost.joules * 1e3)
         for nn in plan.spin_down:
             node = by_node[nn]
             # only an actually-idle node parks: queued or in-flight work
@@ -430,7 +494,10 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
             for cn in list(node.arbiter.tenants()):
                 retire_replica(cn, nn, None)
             node.state = STANDBY
-            scale_events.append((ts, "down", nn))
+            log_event(scale_events, "scale_events", (ts, "down", nn))
+            if tracer is not None:
+                tracer.decision(obs.SCALE, ts, ts, node=nn,
+                                direction="down")
             readmit_orphans()
 
     ei = 0
@@ -506,6 +573,11 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 arrived_epoch[nn][cn] = 0
             allocs[nn] = node.arbiter.tick(node.g(t))
             svc[nn] = svc_of(allocs[nn])
+            if tracer is not None:
+                tracer.decision(
+                    obs.ARBITRATE, t, t, node=nn,
+                    tenants=len(allocs[nn]),
+                    granted=sum(a.chips for a in allocs[nn].values()))
         t_next = t + interval_s
 
         # --- route + admit/shed this epoch's arrivals -----------------------
@@ -584,8 +656,15 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                     busy_until[nn][cn] = done
                     st.batches += 1
                     st.batch_occupancy += k
-                    energy[cn] += pt.energy_mj
-                    completions[nn] += k
+                    energy[cn].inc(pt.energy_mj)
+                    completions[nn].inc(k)
+                    if tracer is not None:
+                        dev_attrs = {
+                            "bucket": k, "n": k,
+                            "subnet": (pt.subnet.name()
+                                       if hasattr(pt.subnet, "name")
+                                       else str(pt.subnet))}
+                        warm_t = warm_until.get((nn, cn), 0.0)
                     for _ in range(k):
                         ta = q.popleft()
                         lat_ms = (done - ta) * 1e3
@@ -593,6 +672,28 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                         st.latencies_ms.append(lat_ms)
                         if lat_ms <= c.deadline_ms:
                             st.good += 1
+                        if tracer is None:
+                            continue
+                        # virtual-time span tree, same schema as live:
+                        # host-side stages are zero-width points at batch
+                        # start (the analytic service model folds them
+                        # into `device`); a wait behind a migrating
+                        # replica's warmup is WARMING, the rest QUEUE —
+                        # the components still partition [ta, done]
+                        w1 = min(start, warm_t)
+                        spans = [(obs.ROUTE, ta, ta, None)]
+                        if w1 > ta:
+                            spans.append((obs.WARMING, ta, w1, None))
+                            spans.append((obs.QUEUE, w1, start, None))
+                        else:
+                            spans.append((obs.QUEUE, ta, start, None))
+                        spans.extend([
+                            (obs.COLLECT, start, start, None),
+                            (obs.STACK, start, start, None),
+                            (obs.DISPATCH, start, start, None),
+                            (obs.DEVICE, start, done, dev_attrs),
+                            (obs.COMPLETE, done, done, None)])
+                        tracer.request(cn, ta, done, node=nn, spans=spans)
 
         # --- stall-based health check (end of epoch) ------------------------
         for node in nodes:
@@ -600,11 +701,14 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
             if nn not in health or node.state != UP:
                 continue
             backlog_n = sum(len(q) for q in queues[nn].values())
-            if health[nn].observe(completions[nn], backlog_n):
+            if health[nn].observe(int(completions[nn].value), backlog_n):
                 # completions flat for K epochs with queued work: the
                 # node is wedged — auto-fail it over, exactly the path
                 # an operator-scripted fail_at would take
-                health_failed.append((t_next, nn))
+                log_event(health_failed, "health", (t_next, nn))
+                if tracer is not None:
+                    tracer.decision(obs.HEALTH_FAIL, t_next, t_next,
+                                    node=nn)
                 fail_node(nn)
         t = t_next
 
@@ -622,10 +726,14 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     return ClusterReport(policy=policy, router=router, classes=stats,
                          nodes=node_view, decisions=list(rtr.decisions),
                          routed=rtr.routed_counts(),
-                         health_failed=health_failed,
-                         migrations=migrations, preempted=preempted,
-                         scale_events=scale_events,
+                         health_failed=list(health_failed),
+                         migrations=list(migrations),
+                         preempted=list(preempted),
+                         scale_events=list(scale_events),
                          unplaceable=sorted(unplaceable),
                          decisions_dropped=rtr.decisions_dropped,
-                         energy_mj=energy,
-                         migration_energy_mj=mig_energy_mj)
+                         log_dropped=dict(log_dropped),
+                         energy_mj={c.name: energy[c.name].value
+                                    for c in classes},
+                         migration_energy_mj=mig_energy.value,
+                         tracer=tracer, metrics=m)

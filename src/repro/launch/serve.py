@@ -33,6 +33,16 @@ Cluster / trace knobs (``--trace`` mode):
   checker every S seconds (a node whose completions stay flat with
   futures outstanding is auto-failed over).
 
+Observability (any mode):
+
+* ``--trace-out PATH``   — record request span trees + decision spans
+  through a :class:`repro.obs.Tracer` and write them as Chrome
+  trace-event JSON (load in Perfetto / chrome://tracing); also prints
+  the per-class p50/p95 latency decomposition;
+* ``--metrics-out PATH`` — write the metrics registry snapshot
+  (counters / gauges / histograms) as JSON, or Prometheus text format
+  when PATH ends in ``.prom``.
+
 The governed server warms its bucket ladder for the profiled subnets
 before taking traffic, so steady-state serving performs zero cold
 compiles (``server.cold_compiles`` stays 0).
@@ -47,6 +57,8 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core.types import SubnetSpec
+from repro.obs import (MetricsRegistry, Tracer, decompose_latency,
+                       format_decomposition, quantile, write_chrome_trace)
 from repro.runtime import (CalibrationStore, Constraints, DynamicServer,
                            GlobalConstraints, JointGovernor, Monitor,
                            PerformanceGovernor, ResourceArbiter,
@@ -88,6 +100,8 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
     from repro.traffic import (DEGRADE, SLOClass, drive_live, load_schedule,
                                onoff, poisson)
 
+    tracer = Tracer() if args.trace_out else None
+    metrics = MetricsRegistry() if args.metrics_out else None
     dur = args.trace_duration
     rate = args.requests / dur
     a_batch = poisson(max(rate / 2, 0.5), dur, seed=1)
@@ -126,7 +140,8 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
                  for i in range(args.nodes)]
         cluster = Cluster(nodes, router=args.router,
                           health_interval_s=args.health_interval,
-                          rebalance_interval_s=args.rebalance_interval)
+                          rebalance_interval_s=args.rebalance_interval,
+                          tracer=tracer, metrics=metrics)
         if store is not None:
             for node in nodes:
                 node.arbiter.calibration = store
@@ -162,6 +177,7 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
             print(f"  migrations:   {report.arbiter.get('migrations', [])}")
             print(f"  preempted:    {report.arbiter.get('preempted', [])}")
         _report_calibration(store, args)
+        _emit_obs(args, tracer, cluster.metrics)
         return
 
     batch_server = build_server(arch, cfg, max_batch=server.max_batch,
@@ -175,7 +191,8 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
     servers = {"interactive": server, "batch": batch_server}
     for s in servers.values():
         s.warm(warm, example_input=x[0])
-    arbiter = ResourceArbiter(interval_s=0.05, calibration=store)
+    arbiter = ResourceArbiter(interval_s=0.05, calibration=store,
+                              tracer=tracer, metrics=metrics)
     for c in classes:
         # two modelled 1-chip slices: the measured LUT profiles chips=1,
         # so a 2-chip pool lets both tenants hold a slice at once
@@ -184,7 +201,7 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
     report = drive_live(
         classes, servers, arbiter, streams, lambda name: x[0],
         g_fn=lambda: GlobalConstraints(total_chips=2),
-        record_path=args.record)
+        record_path=args.record, tracer=tracer, metrics=metrics)
     print(f"\ntrace mode [{args.trace}] {len(a_int)} interactive + "
           f"{len(a_batch)} batch arrivals over {dur:.1f}s")
     for name, cs in report.classes.items():
@@ -193,6 +210,26 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
     if args.record:
         print(f"  recorded actual arrivals -> {args.record}")
     _report_calibration(store, args)
+    _emit_obs(args, tracer, arbiter.metrics)
+
+
+def _emit_obs(args, tracer, metrics):
+    """Write --trace-out / --metrics-out artifacts and print the
+    per-class latency decomposition for the retained traces."""
+    if tracer is not None and args.trace_out:
+        n = write_chrome_trace(tracer, args.trace_out)
+        print(f"  trace: {len(tracer.requests())} request trees retained "
+              f"({tracer.dropped} evicted), {n} events -> {args.trace_out}")
+        decomp = decompose_latency(tracer)
+        if decomp:
+            print(format_decomposition(decomp))
+    if metrics is not None and args.metrics_out:
+        text = (metrics.to_prometheus()
+                if args.metrics_out.endswith(".prom")
+                else metrics.to_json())
+        with open(args.metrics_out, "w") as f:
+            f.write(text)
+        print(f"  metrics snapshot -> {args.metrics_out}")
 
 
 def _report_calibration(store, args):
@@ -242,6 +279,14 @@ def main(argv=None):
                     help="cluster mode: run the global placement engine "
                          "every S seconds (migration-cost-priced replica "
                          "rebalancing + cross-node preemption)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record request span trees + decision spans and "
+                         "write Chrome trace-event JSON (open in Perfetto "
+                         "or chrome://tracing); prints the p50/p95 "
+                         "latency decomposition")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics snapshot as JSON (Prometheus "
+                         "text format when PATH ends in .prom)")
     ap.add_argument("--max-batch", type=int, default=8,
                     help="batching ceiling (bucket ladder = powers of two)")
     ap.add_argument("--no-buckets", action="store_true",
@@ -301,19 +346,26 @@ def main(argv=None):
     constraints = lambda: Constraints(target_latency_ms=base_ms,
                                       chips_available=1)
     server.governor = gov
+    tracer = Tracer() if args.trace_out else None
+    metrics = MetricsRegistry() if args.metrics_out else None
+    if tracer is not None:
+        server.tracer = tracer
+    if metrics is not None:
+        server.metrics = metrics
     server.warm(specs, example_input=x[0])
     server.start(constraints_fn=constraints)
     futs = [server.submit(x[0]) for _ in range(args.requests)]
     outs = [f.get(timeout=30) for f in futs]
     server.stop()
     lats = [o["latency_ms"] for o in outs]
-    print(f"\nserved {len(outs)} requests  p50={np.percentile(lats,50):.1f}ms "
-          f"p99={np.percentile(lats,99):.1f}ms  "
+    print(f"\nserved {len(outs)} requests  p50={quantile(lats,50):.1f}ms "
+          f"p99={quantile(lats,99):.1f}ms  "
           f"subnets used: {sorted(set(o['subnet'] for o in outs))}")
     print(f"switches: {len(server.switch_log)} "
           f"(dropped {server.switch_log_dropped} log entries), "
           f"cold compiles while serving: {server.cold_compiles}, "
           f"buckets: {server.buckets}, pipeline: {server.pipeline}")
+    _emit_obs(args, tracer, metrics)
 
 
 if __name__ == "__main__":

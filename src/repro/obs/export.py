@@ -1,0 +1,94 @@
+"""Chrome trace-event / Perfetto JSON export of a span buffer.
+
+:func:`to_chrome_trace` turns a :class:`~repro.obs.trace.Tracer` (or a
+plain span list) into the Trace Event Format dict that
+https://ui.perfetto.dev and ``chrome://tracing`` load directly: every
+span becomes a complete ("ph": "X") event, request trees get one track
+(tid) per request grouped under their node's process (pid), decision
+spans share a per-node "decisions" track, and metadata events name the
+tracks.  Timestamps are rebased to the earliest span so virtual-time
+traces (which start near t=0 anyway) and wall-clock traces (which start
+at an arbitrary perf_counter origin) render identically.
+
+``json.loads(json.dumps(to_chrome_trace(tracer)))`` round-trips by
+construction — the export tests assert it, and ``launch/serve.py
+--trace-out`` writes exactly this object.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterable, List, Union
+
+from repro.obs.trace import DECISION_SPANS, Span, Tracer
+
+_DECISION_TID = 0          # per-process track for decision spans
+_REQUEST_TID_BASE = 1      # request tracks start above it
+
+
+def _spans_of(source: Union[Tracer, Iterable[Span]]) -> List[Span]:
+    if isinstance(source, Tracer):
+        return source.spans()
+    return list(source)
+
+
+def to_chrome_trace(source: Union[Tracer, Iterable[Span]]) -> dict:
+    """Trace-event dict (``{"traceEvents": [...], ...}``) for a span
+    buffer.  Pure data in, pure data out — callers json.dump it."""
+    spans = _spans_of(source)
+    t_base = min((s.t0 for s in spans), default=0.0)
+    pids: Dict[str, int] = {}
+    tids: Dict[int, int] = {}
+    events: List[dict] = []
+
+    def pid_of(node) -> int:
+        name = node or "node"
+        if name not in pids:
+            pids[name] = len(pids) + 1
+            events.append({"ph": "M", "name": "process_name",
+                           "pid": pids[name], "tid": 0,
+                           "args": {"name": name}})
+            events.append({"ph": "M", "name": "thread_name",
+                           "pid": pids[name], "tid": _DECISION_TID,
+                           "args": {"name": "decisions"}})
+        return pids[name]
+
+    def tid_of(span: Span) -> int:
+        if span.name in DECISION_SPANS or span.trace_id < 0:
+            return _DECISION_TID
+        if span.trace_id not in tids:
+            tids[span.trace_id] = _REQUEST_TID_BASE + len(tids)
+            events.append({"ph": "M", "name": "thread_name",
+                           "pid": pid_of(span.node),
+                           "tid": tids[span.trace_id],
+                           "args": {"name": f"req {span.trace_id}"
+                                            f" [{span.cls}]"}})
+        return tids[span.trace_id]
+
+    for s in spans:
+        args = {"cls": s.cls, "trace_id": s.trace_id}
+        args.update(s.attrs)
+        events.append({
+            "ph": "X",
+            "name": s.name,
+            "cat": ("decision" if s.name in DECISION_SPANS or s.trace_id < 0
+                    else "request"),
+            "pid": pid_of(s.node),
+            "tid": tid_of(s),
+            # trace-event timestamps are microseconds
+            "ts": round((s.t0 - t_base) * 1e6, 3),
+            "dur": round(max(s.t1 - s.t0, 0.0) * 1e6, 3),
+            "args": {k: v for k, v in args.items() if v is not None},
+        })
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": {"source": "repro.obs",
+                          "span_count": len(spans)}}
+
+
+def write_chrome_trace(source: Union[Tracer, Iterable[Span]],
+                       path: str) -> int:
+    """Write the Perfetto-loadable JSON to ``path``; returns the event
+    count (``serve.py --trace-out`` logs it)."""
+    doc = to_chrome_trace(source)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=None, separators=(",", ":"))
+    return len(doc["traceEvents"])

@@ -61,6 +61,8 @@ import time
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.core.pareto import OpPoint
+from repro.obs import trace as obs
+from repro.obs.metrics import MetricsRegistry
 from repro.runtime import hwmodel as hm
 from repro.runtime import waterfill as wf
 from repro.runtime.engine import DynamicServer
@@ -85,9 +87,14 @@ class AdmissionError(RuntimeError):
     """A registration whose minimal feasible share can never fit."""
 
 
-def _fresh_stats() -> Dict[str, float]:
-    return {"cycles": 0, "met": 0, "energy_mj": 0.0, "share_sum": 0.0,
-            "preemptions": 0}
+# the per-tenant accounting series (label ``tenant=``) that replaced the
+# old ad-hoc ``_stats`` dicts; :meth:`ResourceArbiter.summary` reads them
+# back into its historical row shape, and unregister/export clears them so
+# a re-registered tenant never inherits a predecessor's meet-rate
+_STAT_SERIES = ("arbiter_cycles_total", "arbiter_met_total",
+                "arbiter_energy_mj_total", "arbiter_share_sum",
+                "arbiter_preemptions_total")
+_STAT_GAUGES = ("arbiter_chips", "arbiter_backlog")
 
 
 @dataclasses.dataclass
@@ -155,7 +162,8 @@ class ResourceArbiter:
     """Water-filling allocator + shared constraint clock over N workloads."""
 
     def __init__(self, *, interval_s: float = 0.05, calibration=None,
-                 time_fn: Callable[[], float] = time.monotonic):
+                 time_fn: Callable[[], float] = time.monotonic,
+                 tracer=None, metrics: Optional[MetricsRegistry] = None):
         self.interval_s = interval_s
         # measured-performance feedback (repro.runtime.telemetry
         # .CalibrationStore): when set, water-filling plans off CALIBRATED
@@ -174,7 +182,17 @@ class ResourceArbiter:
         self.alloc_log: Deque[Dict[str, Allocation]] = collections.deque(
             maxlen=4096)
         self.last_alloc: Dict[str, Allocation] = {}
-        self._stats: Dict[str, Dict[str, float]] = {}
+        # per-tenant accounting lives in the metrics registry (see
+        # _STAT_SERIES); the arbiter owns its registry by default — two
+        # nodes can both host a tenant "api", so arbiter registries are
+        # NOT shared cluster-wide (the cluster keeps its own for
+        # router/placement counters)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # live tracing: ARBITRATE decision spans per tick.  The cluster
+        # sets trace_label to the node name; the virtual-time simulators
+        # leave arbiter tracers unset and emit their own spans at sim time
+        self.tracer = tracer
+        self.trace_label: Optional[str] = None
 
     # --- registration -------------------------------------------------------
 
@@ -205,13 +223,23 @@ class ResourceArbiter:
                 server.start()
             return w
 
+    def _touch_stats(self, name: str):
+        """Create the tenant's full accounting row at once — summary()'s
+        row-existence semantics (absent vs all-zero) match the old dicts."""
+        for s in _STAT_SERIES:
+            self.metrics.counter(s, tenant=name)
+
+    def _clear_stats(self, name: str):
+        for s in _STAT_SERIES + _STAT_GAUGES:
+            self.metrics.remove(s, tenant=name)
+
     def unregister(self, name: str):
         with self._lock:
             w = self._workloads.pop(name, None)
             self.last_alloc.pop(name, None)
             # a later tenant registering under the same name must not
             # inherit this one's accumulated cycles/meet-rate/energy
-            self._stats.pop(name, None)
+            self._clear_stats(name)
             self._lut_cache.pop(name, None)
             if w is not None and w.server is not None:
                 w.server.stop()   # the clock drove it; don't leak the worker
@@ -229,7 +257,7 @@ class ResourceArbiter:
         with self._lock:
             w = self._workloads.pop(name)   # KeyError: unknown workload
             self.last_alloc.pop(name, None)
-            self._stats.pop(name, None)
+            self._clear_stats(name)
             self._lut_cache.pop(name, None)
             return w
 
@@ -587,18 +615,32 @@ class ResourceArbiter:
     def tick(self, g: GlobalConstraints) -> Dict[str, Allocation]:
         """One arbitration cycle: allocate, govern, switch/pause servers."""
         with self._lock:
+            t0 = self.tracer.clock() if self.tracer is not None else 0.0
             allocs = self.arbitrate(g)
             self._drive_servers(allocs, g)
             self.alloc_log.append(allocs)
+            m = self.metrics
             for name, a in allocs.items():
-                if not self._workloads[name].active:
+                w = self._workloads[name]
+                if not w.active:
                     continue   # idle: no demand, don't dilute meet_rate
-                s = self._stats.setdefault(name, _fresh_stats())
-                s["cycles"] += 1
-                s["met"] += a.feasible
-                s["share_sum"] += a.share
+                self._touch_stats(name)
+                m.counter("arbiter_cycles_total", tenant=name).inc()
+                if a.feasible:
+                    m.counter("arbiter_met_total", tenant=name).inc()
+                m.counter("arbiter_share_sum", tenant=name).inc(a.share)
                 if a.point is not None:
-                    s["energy_mj"] += a.point.energy_mj
+                    m.counter("arbiter_energy_mj_total", tenant=name).inc(
+                        a.point.energy_mj)
+                m.gauge("arbiter_chips", tenant=name).set(a.chips)
+                m.gauge("arbiter_backlog", tenant=name).set(self._backlog(w))
+            if self.tracer is not None:
+                self.tracer.decision(
+                    obs.ARBITRATE, t0, self.tracer.clock(),
+                    node=self.trace_label,
+                    tenants=sum(w.active
+                                for w in self._workloads.values()),
+                    granted=sum(a.chips for a in allocs.values()))
             return allocs
 
     def preempt(self, name: str, g: GlobalConstraints) -> Allocation:
@@ -614,10 +656,15 @@ class ResourceArbiter:
         with self._lock:
             w = self._workloads[name]   # KeyError: unknown workload
             w.active = True
+            t0 = self.tracer.clock() if self.tracer is not None else 0.0
             allocs = self.arbitrate(g)
             self._drive_servers(allocs, g)
-            s = self._stats.setdefault(name, _fresh_stats())
-            s["preemptions"] += 1
+            self._touch_stats(name)
+            self.metrics.counter("arbiter_preemptions_total",
+                                 tenant=name).inc()
+            if self.tracer is not None:
+                self.tracer.decision(obs.PREEMPT, t0, self.tracer.clock(),
+                                     node=self.trace_label, for_cls=name)
             return allocs[name]
 
     # --- shared constraint clock --------------------------------------------
@@ -658,20 +705,32 @@ class ResourceArbiter:
         ``measured_energy_mj`` integrates the server's real batch
         wall-clock against the active slice's power model — the ROADMAP's
         measured per-tenant energy accounting (minimal version).
+
+        The rows keep their historical shape but are READ BACK from the
+        metrics registry (``self.metrics``) — the same numbers a
+        Prometheus scrape of the registry exports.
         """
         out = {}
+        m = self.metrics
+        tenants_seen = {lbl.get("tenant")
+                        for lbl in m.labels_of("arbiter_cycles_total")}
         for name, w in self._workloads.items():
-            s = self._stats.get(name)
-            if not s or not s["cycles"]:
+            exists = name in tenants_seen
+            n = m.value("arbiter_cycles_total", tenant=name)
+            if not exists or not n:
                 row = {"cycles": 0}
             else:
-                n = s["cycles"]
-                row = {"cycles": n,
-                       "meet_rate": round(s["met"] / n, 4),
-                       "energy_mj": round(s["energy_mj"], 2),
-                       "mean_share": round(s["share_sum"] / n, 4)}
-            if s:
-                row["preemptions"] = int(s.get("preemptions", 0))
+                row = {"cycles": int(n),
+                       "meet_rate": round(
+                           m.value("arbiter_met_total", tenant=name) / n, 4),
+                       "energy_mj": round(
+                           m.value("arbiter_energy_mj_total", tenant=name),
+                           2),
+                       "mean_share": round(
+                           m.value("arbiter_share_sum", tenant=name) / n, 4)}
+            if exists:
+                row["preemptions"] = int(
+                    m.value("arbiter_preemptions_total", tenant=name))
             if w.server is not None:
                 row["measured_energy_mj"] = round(
                     w.server.measured_energy_mj, 2)

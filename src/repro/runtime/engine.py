@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core.elastic import spec_to_static
 from repro.core.types import SubnetSpec
+from repro.obs import trace as obs
 from repro.runtime import hwmodel as hm
 from repro.runtime.lut import bucket_ladder
 
@@ -60,6 +61,8 @@ class Request:
     x: Any
     t_submit: float
     future: "queue.Queue"
+    trace_id: Optional[int] = None   # obs: span tree begun upstream
+    t_take: float = 0.0              # obs: collector pulled it off the queue
 
 
 @dataclasses.dataclass
@@ -74,6 +77,8 @@ class _InFlight:
     buf: Optional[np.ndarray]  # None once returned to the pool
     spec: SubnetSpec = SubnetSpec()   # calibration key: the dispatched
     bucket: int = 0                   # (SubnetSpec, bucket) executable
+    t_collect: float = 0.0     # obs: batch window closed (stacking starts)
+    t_disp_ret: float = 0.0    # obs: async dispatch call returned
 
 
 class DynamicServer:
@@ -86,7 +91,8 @@ class DynamicServer:
                  switch_log_cap: int = 1024,
                  adaptive_window: bool = False,
                  min_window_ms: float = 0.5,
-                 calibration=None, tenant: Optional[str] = None):
+                 calibration=None, tenant: Optional[str] = None,
+                 tracer=None, metrics=None):
         """``apply_fn(params, x, E) -> output`` (pure; jit-able).
 
         ``dims`` maps knob names to full sizes (see spec_to_static).
@@ -111,6 +117,17 @@ class DynamicServer:
         server's workload — its measured energy/busy integral, so LUT
         columns and the arbiter's energy objective run on observed
         numbers instead of the analytic model.
+
+        ``tracer`` (a :class:`repro.obs.Tracer`) records each request's
+        span tree — queue / collect / stack / dispatch / device /
+        complete — into the shared buffer; upstream layers (cluster
+        frontend, traffic driver) begin the trace with the SLO class and
+        pass ``trace_id`` to :meth:`submit`, or the engine begins its
+        own under the tenant label.  ``metrics`` (a
+        :class:`repro.obs.MetricsRegistry`) gets served/cancelled
+        counters and a request-latency histogram.  Both default to None
+        = zero work on the hot path; the cluster layer also sets them
+        post-construction (``trace_node`` labels spans with the node).
         """
         self.apply_fn = apply_fn
         self.params = params
@@ -142,6 +159,9 @@ class DynamicServer:
         self.min_window_s = min_window_ms / 1e3
         self.calibration = calibration
         self.tenant = tenant
+        self.tracer = tracer
+        self.metrics = metrics
+        self.trace_node: Optional[str] = None   # cluster sets the node label
         self._arrival_rate_rps = 0.0
         self._queue: "queue.Queue" = queue.Queue()
         # _WAKE entries in _queue (not real backlog); lock-protected because
@@ -261,15 +281,30 @@ class DynamicServer:
                       "latency_ms": (time.perf_counter() - r.t_submit) * 1e3,
                       "subnet": None})
         self.cancelled += 1
+        if self.tracer is not None and r.trace_id is not None:
+            self.tracer.abort_request(r.trace_id)
+        if self.metrics is not None:
+            # node label: engine series from different nodes must not
+            # collide in a shared cluster registry
+            self.metrics.counter("engine_cancelled_total",
+                                 tenant=self.tenant or "default",
+                                 node=self.trace_node or "").inc()
         with self._acct_lock:
             self._outstanding = max(0, self._outstanding - 1)
 
     def _stop_reason(self) -> str:
         return self._fail_reason or "server stopped"
 
-    def submit(self, x) -> "queue.Queue":
+    def submit(self, x, trace_id: Optional[int] = None) -> "queue.Queue":
         fut: "queue.Queue" = queue.Queue(maxsize=1)
-        r = Request(x=x, t_submit=time.perf_counter(), future=fut)
+        t_submit = time.perf_counter()
+        if self.tracer is not None and trace_id is None:
+            # standalone server: begin the tree here under the tenant
+            # label (the cluster frontend begins it earlier, with the
+            # SLO class and a route span, and hands us its trace_id)
+            trace_id = self.tracer.begin_request(
+                self.tenant or "default", t=t_submit, node=self.trace_node)
+        r = Request(x=x, t_submit=t_submit, future=fut, trace_id=trace_id)
         with self._acct_lock:
             self._outstanding += 1
             self._arrivals += 1
@@ -357,6 +392,8 @@ class DynamicServer:
                 break
             if not reqs:
                 deadline = time.perf_counter() + self.effective_timeout_s()
+            if self.tracer is not None:
+                r.t_take = time.perf_counter()
             reqs.append(r)
         return reqs
 
@@ -397,6 +434,7 @@ class DynamicServer:
 
     def _dispatch(self, reqs: List[Request]) -> _InFlight:
         """Stack + pad to the nearest bucket and dispatch asynchronously."""
+        t_collect = time.perf_counter() if self.tracer is not None else 0.0
         xs = [np.asarray(r.x) for r in reqs]
         n = len(xs)
         bucket = self._bucket_for(n)
@@ -415,9 +453,11 @@ class DynamicServer:
             or hm.HwState(chips=1, freq=1.0)
         t_disp = time.perf_counter()
         out = fn(self.params, buf)       # async: returns before ready
+        t_ret = time.perf_counter() if self.tracer is not None else 0.0
         return _InFlight(out=out, reqs=reqs, t_dispatch=t_disp, hw=hw,
                          subnet=spec.name(), buf_key=buf_key, buf=buf,
-                         spec=spec, bucket=bucket)
+                         spec=spec, bucket=bucket,
+                         t_collect=t_collect, t_disp_ret=t_ret)
 
     def _complete(self, item: _InFlight):
         """Resolve one in-flight batch: wait for the device, account the
@@ -454,6 +494,35 @@ class DynamicServer:
             with self._acct_lock:
                 self._outstanding = max(0, self._outstanding - 1)
         self.served += len(item.reqs)
+        if self.tracer is not None:
+            # futures are already answered — tracing never delays callers.
+            # Components partition submit→ready exactly, so the tree sums
+            # to the measured latency; `complete` (ready→futures resolved)
+            # is post-measurement and excluded from the total.
+            t_done = time.perf_counter()
+            dev_attrs = {"bucket": item.bucket, "subnet": item.subnet,
+                         "n": len(item.reqs)}
+            for r in item.reqs:
+                if r.trace_id is None:
+                    continue
+                self.tracer.finish_request(
+                    r.trace_id, t=t_ready, node=self.trace_node, spans=[
+                        (obs.QUEUE, r.t_submit, r.t_take, None),
+                        (obs.COLLECT, r.t_take, item.t_collect, None),
+                        (obs.STACK, item.t_collect, item.t_dispatch, None),
+                        (obs.DISPATCH, item.t_dispatch, item.t_disp_ret,
+                         None),
+                        (obs.DEVICE, item.t_disp_ret, t_ready, dev_attrs),
+                        (obs.COMPLETE, t_ready, t_done, None)])
+        if self.metrics is not None:
+            tn = self.tenant or "default"
+            nd = self.trace_node or ""
+            self.metrics.counter("engine_served_total", tenant=tn,
+                                 node=nd).inc(len(item.reqs))
+            hist = self.metrics.histogram("engine_request_ms", tenant=tn,
+                                          node=nd)
+            for r in item.reqs:
+                hist.observe((t_ready - r.t_submit) * 1e3)
 
     def _complete_safe(self, item: _InFlight):
         """_complete, never letting an exception kill the thread: a failed

@@ -10,24 +10,14 @@ stealing compute.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Iterator, List, Optional, Sequence
 
+# the ONE nearest-rank quantile every percentile in the repo reports
+# through (traffic reports, monitor summaries, histogram percentiles);
+# re-exported here for backward compatibility — canonical home is
+# repro.obs.metrics
+from repro.obs.metrics import quantile  # noqa: F401
 from repro.runtime.governor import Constraints
-
-
-def quantile(values: Sequence[float], q: float) -> float:
-    """Nearest-rank quantile (q in [0, 100]) on a finite sample.
-
-    No interpolation: the answer is always an observed value, so
-    hand-built traces in tests have exact expected percentiles.  The
-    traffic layer's p50/p95/p99 reporting goes through here.
-    """
-    if not values:
-        return float("nan")
-    xs = sorted(values)
-    k = max(1, math.ceil(q / 100.0 * len(xs)))
-    return float(xs[min(k, len(xs)) - 1])
 
 
 @dataclasses.dataclass

@@ -36,11 +36,12 @@ import math
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
+from repro.obs import trace as obs
+from repro.obs.metrics import MetricsRegistry, quantile
 from repro.runtime.arbiter import (AdmissionError, GlobalConstraints,
                                    ResourceArbiter)
 from repro.runtime.engine import DynamicServer
 from repro.runtime.lut import LUT, bucket_for, bucket_latency_ms
-from repro.runtime.monitor import quantile
 from repro.traffic import arrivals as arr
 from repro.traffic.slo import DEGRADE, SHED, SLOClass
 
@@ -182,7 +183,8 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
              interval_s: float = 0.1, policy: str = SLO_POLICY,
              service_model: str = BUCKETED_SERVICE,
              max_drain_s: float = 120.0,
-             calibration=None) -> TrafficReport:
+             calibration=None, tracer=None,
+             metrics: Optional[MetricsRegistry] = None) -> TrafficReport:
     """Deterministic discrete-event run of a traffic trace.
 
     Virtual time advances in constraint-clock epochs of ``interval_s``.
@@ -202,11 +204,21 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     latencies and measured tenant watts, and every batch is priced by
     the measured per-bucket EWMA instead of the analytic bucket model —
     so a recorded trace predicts the live system with measured numbers.
+
+    ``tracer`` (a :class:`repro.obs.Tracer` built on a virtual clock)
+    records the SAME span schema the live engine emits — queue /
+    collect / stack / dispatch / device / complete per request plus
+    arbitrate/preempt decision spans — in virtual time; host-side
+    stages are zero-width points (the service model folds them into
+    ``device``).  ``metrics`` receives per-class completion counters.
     """
     assert policy in POLICIES, policy
     assert service_model in SERVICE_MODELS, service_model
     by_class = {c.name: c for c in classes}
     stats = {c.name: ClassStats() for c in classes}
+    m = metrics if metrics is not None else MetricsRegistry()
+    completed = {c.name: m.counter("traffic_completed_total", cls=c.name)
+                 for c in classes}
     arbiter = ResourceArbiter(interval_s=interval_s,
                               calibration=calibration)
     admitted = _register_classes(arbiter, classes, luts, policy, g_fn(0.0))
@@ -241,6 +253,10 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
             arrived_epoch[name] = 0
         allocs = arbiter.tick(g)
         svc = svc_of(allocs)
+        if tracer is not None:
+            tracer.decision(obs.ARBITRATE, t, t,
+                            tenants=len(allocs),
+                            granted=sum(a.chips for a in allocs.values()))
         t_next = t + interval_s
 
         while ei < len(events) and events[ei][0] < t_next:
@@ -260,6 +276,8 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 arbiter.preempt(name, g_fn(ta))
                 allocs = arbiter.last_alloc
                 svc = svc_of(allocs)
+                if tracer is not None:
+                    tracer.decision(obs.PREEMPT, ta, ta, for_cls=name)
             if (policy == SLO_POLICY and c.drop_policy == SHED
                     and svc.get(name) is not None):
                 # predicted completion: in-flight remainder, then the queue
@@ -306,6 +324,13 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 busy_until[name] = done
                 st.batches += 1
                 st.batch_occupancy += k
+                completed[name].inc(k)
+                if tracer is not None:
+                    dev_attrs = {
+                        "bucket": bucket_for(k, c.max_batch), "n": k,
+                        "subnet": (pt.subnet.name()
+                                   if hasattr(pt.subnet, "name")
+                                   else str(pt.subnet))}
                 for _ in range(k):
                     ta = q.popleft()
                     lat_ms = (done - ta) * 1e3
@@ -313,6 +338,17 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                     st.latencies_ms.append(lat_ms)
                     if lat_ms <= c.deadline_ms:
                         st.good += 1
+                    if tracer is not None:
+                        # same schema as the live engine, virtual time;
+                        # host-side stages are zero-width (the service
+                        # model folds them into `device`)
+                        tracer.request(name, ta, done, spans=[
+                            (obs.QUEUE, ta, start, None),
+                            (obs.COLLECT, start, start, None),
+                            (obs.STACK, start, start, None),
+                            (obs.DISPATCH, start, start, None),
+                            (obs.DEVICE, start, done, dev_attrs),
+                            (obs.COMPLETE, done, done, None)])
         t = t_next
 
     for name, q in queues.items():
@@ -329,7 +365,8 @@ def drive_live(classes: Sequence[SLOClass],
                make_input: Callable[[str], object], *,
                g_fn: Callable[[], GlobalConstraints],
                speed: float = 1.0, timeout_s: float = 120.0,
-               record_path: Optional[str] = None) -> TrafficReport:
+               record_path: Optional[str] = None, tracer=None,
+               metrics: Optional[MetricsRegistry] = None) -> TrafficReport:
     """Wall-clock open-loop driver: real requests to real servers.
 
     Classes must already be registered on ``arbiter`` with their servers
@@ -350,6 +387,16 @@ def drive_live(classes: Sequence[SLOClass],
     """
     by_class = {c.name: c for c in classes}
     stats = {c.name: ClassStats() for c in classes}
+    if tracer is not None or metrics is not None:
+        # wire observability down the stack: the engines emit the request
+        # span trees themselves, the arbiter its arbitrate/preempt spans
+        if tracer is not None and hasattr(arbiter, "tracer"):
+            arbiter.tracer = tracer
+        for server in servers.values():
+            if tracer is not None:
+                server.tracer = tracer
+            if metrics is not None:
+                server.metrics = metrics
     events = arr.merge({n: ts for n, ts in streams.items()})
     pending: List = []
     recorded: Dict[str, List[float]] = {c.name: [] for c in classes}

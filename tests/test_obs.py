@@ -1,0 +1,320 @@
+"""PR 7: end-to-end tracing + metrics (`repro.obs`).
+
+* **schema parity** — the live engine and BOTH virtual-time simulators
+  emit the same span vocabulary with the same required attrs
+  (``validate_schema`` on each emitter, span-name sequences compared);
+* **tail bias** — the bounded trace buffer keeps exactly the slowest
+  ``tail_frac`` of an adversarial stream plus a seeded uniform sample;
+* **decomposition** — per-trace component sums equal the measured
+  latency within tolerance (asserted inside ``decompose_latency``);
+* **Perfetto export** — the Chrome trace-event JSON round-trips through
+  ``json.loads`` with well-formed complete/metadata events;
+* **shared quantile** — the one nearest-rank implementation behind
+  traffic percentiles and histogram percentiles, with edge cases;
+* **bounded logs** — the sim's migration/preempt/health/scale logs cap
+  with dropped counters (the frontend uses the same idiom).
+"""
+import json
+import math
+
+import pytest
+
+from repro.obs import (COMPONENTS, SCHEMA, Histogram, MetricsRegistry,
+                       RequestTrace, Span, Tracer, decompose_latency,
+                       mean_components, quantile, to_chrome_trace,
+                       validate_schema, weighted_quantile,
+                       write_chrome_trace)
+from repro.obs import trace as obs
+from repro.obs.analyze import DecompositionError, check_trace
+from repro.core.types import ElasticSpace
+from repro.runtime import GlobalConstraints, model_lut
+from repro.runtime import hwmodel as hm
+from repro.traffic import DEGRADE, SHED, SLOClass, poisson, simulate
+
+TERMS = hm.RooflineTerms(t_compute=0.02, t_memory=0.008, t_collective=0.004)
+SPACE = ElasticSpace(width_mults=(0.5, 0.75, 1.0), ffn_mults=(0.5, 1.0),
+                     depth_mults=(0.5, 1.0))
+
+
+def make_lut(scale=1.0, full_chips=256):
+    terms = hm.RooflineTerms(TERMS.t_compute * scale, TERMS.t_memory * scale,
+                             TERMS.t_collective * scale)
+    return model_lut(SPACE.enumerate(), full_terms=terms,
+                     full_chips=full_chips)
+
+
+def virtual_tracer(**kw):
+    return Tracer(clock=lambda: 0.0, **kw)
+
+
+def sim_traced(horizon_s=3.0, **kw):
+    classes = [SLOClass("rt", deadline_ms=80.0, priority=2,
+                        drop_policy=SHED),
+               SLOClass("batch", deadline_ms=400.0, priority=0,
+                        drop_policy=DEGRADE)]
+    streams = {"rt": poisson(40.0, horizon_s, seed=1),
+               "batch": poisson(20.0, horizon_s, seed=2)}
+    lut = make_lut()
+    tr = virtual_tracer(**kw)
+    rep = simulate(classes, {"rt": lut, "batch": lut}, streams,
+                   lambda t: GlobalConstraints(total_chips=256), tracer=tr)
+    return rep, tr
+
+
+# --- quantile: the one shared implementation ---------------------------------
+
+def test_quantile_edge_cases():
+    assert math.isnan(quantile([], 50))
+    assert quantile([7.0], 0) == 7.0
+    assert quantile([7.0], 50) == 7.0
+    assert quantile([7.0], 100) == 7.0
+    xs = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert quantile(xs, 0) == 1.0          # q=0 -> min (nearest rank >= 1)
+    assert quantile(xs, 100) == 5.0        # q=100 -> max
+    assert quantile(xs, 50) == 3.0
+    assert quantile(xs, 95) == 5.0         # always an observed value
+    # the traffic layer re-exports THIS function (consolidation check)
+    from repro.runtime.monitor import quantile as mq
+    from repro.traffic.driver import quantile as tq
+    assert mq is quantile and tq is quantile
+
+
+def test_weighted_quantile_and_histogram_percentile():
+    assert math.isnan(weighted_quantile([], [], 50))
+    h = Histogram(buckets=(1.0, 5.0, 10.0))
+    for v in (0.5, 0.7, 4.0, 4.5, 9.0):
+        h.observe(v)
+    assert h.count == 5 and h.sum == pytest.approx(18.7)
+    # p50 lands in the (1, 5] bucket -> its upper edge
+    assert h.percentile(50) == 5.0
+    # p0/p100 are tightened to the observed min/max, not bucket edges
+    assert h.percentile(0) == 0.5
+    assert h.percentile(100) == 9.0
+    assert math.isnan(Histogram(buckets=(1.0,)).percentile(50))
+
+
+# --- tracer: bounded buffer, tail bias, schema -------------------------------
+
+def test_tracer_tail_bias_property():
+    """Adversarial stream (slowest arrive first): the tail reservoir must
+    still hold EXACTLY the slowest tail_frac when the buffer overflows."""
+    cap, n = 100, 1000
+    tr = virtual_tracer(cap=cap, tail_frac=0.10, seed=3)
+    # descending latency: naive "keep newest" would evict every slow one
+    for i in range(n):
+        lat = float(n - i)
+        tr.request("c", 0.0, lat / 1e3,
+                   spans=[(obs.QUEUE, 0.0, 0.0, None),
+                          (obs.DEVICE, 0.0, lat / 1e3,
+                           {"bucket": 1, "subnet": "s", "n": 1})])
+    kept = tr.requests()
+    assert len(kept) <= cap
+    assert tr.dropped == n - len(kept)
+    tail = sorted((t.total_ms for t in tr.tail_requests()), reverse=True)
+    k = len(tail)
+    assert k == int(cap * 0.10)
+    # the k slowest of the whole stream, exactly
+    assert tail == [float(n - i) for i in range(k)]
+    # the uniform reservoir is seeded -> deterministic across runs
+    tr2 = virtual_tracer(cap=cap, tail_frac=0.10, seed=3)
+    for i in range(n):
+        lat = float(n - i)
+        tr2.request("c", 0.0, lat / 1e3)
+    assert sorted(t.total_ms for t in tr.requests()) == \
+        sorted(t.total_ms for t in tr2.requests())
+
+
+def test_tracer_decision_log_bounded():
+    tr = virtual_tracer(decision_cap=4)
+    for i in range(7):
+        tr.decision(obs.SCALE, float(i), float(i), direction="up")
+    assert len(tr.decisions) == 4
+    assert tr.decisions_dropped == 3
+    assert tr.decisions[0].t0 == 3.0      # oldest evicted
+
+
+def test_validate_schema_catches_violations():
+    good = Span(name=obs.DEVICE, t0=0.0, t1=1.0,
+                attrs={"bucket": 4, "subnet": "s", "n": 3})
+    bad_name = Span(name="warp", t0=0.0, t1=1.0)
+    bad_attrs = Span(name=obs.MIGRATE, t0=0.0, t1=1.0, attrs={"src": "n0"})
+    assert validate_schema([good]) == []
+    assert any("warp" in p for p in validate_schema([bad_name]))
+    assert any("cost_s" in str(p) for p in validate_schema([bad_attrs]))
+
+
+# --- sim vs live: one span schema --------------------------------------------
+
+SIM_NAMES = [obs.QUEUE, obs.COLLECT, obs.STACK, obs.DISPATCH, obs.DEVICE,
+             obs.COMPLETE]
+
+
+def test_sim_emits_live_schema_in_virtual_time():
+    rep, tr = sim_traced()
+    assert validate_schema(tr.spans()) == []
+    assert rep.total_goodput > 0 and len(tr.requests()) > 0
+    for t in tr.requests():
+        assert [s.name for s in t.spans] == SIM_NAMES
+    assert any(s.name == obs.ARBITRATE for s in tr.decisions)
+
+
+def test_live_engine_emits_same_schema():
+    """The live engine's per-request span tree carries the same names in
+    the same order (and the same DEVICE attrs) as the simulator's."""
+    import jax
+    import numpy as np
+    from repro.models.vit import ViTConfig, vit_apply, vit_init
+    from repro.runtime import DynamicServer
+    cfg = ViTConfig(name="t", img_res=16, patch=8, n_layers=2, d_model=32,
+                    n_heads=4, d_ff=64, n_classes=4,
+                    compute_dtype="float32")
+    params = vit_init(jax.random.PRNGKey(0), cfg)
+    dims = {"d_model": 32, "d_ff": 64, "n_heads": 4, "n_layers": 2}
+    tr = Tracer()                       # wall clock
+    metrics = MetricsRegistry()
+    server = DynamicServer(lambda p, x, E: vit_apply(p, x, cfg, E=E)[0],
+                           params, dims, max_batch=4, timeout_ms=2.0,
+                           tracer=tr, metrics=metrics)
+    server.trace_node = "local"
+    x = np.zeros((16, 16, 3), "float32")
+    server.start()
+    futs = [server.submit(x) for _ in range(10)]
+    outs = [f.get(timeout=30) for f in futs]
+    server.stop()
+    assert validate_schema(tr.spans()) == []
+    traces = tr.requests()
+    assert len(traces) == 10
+    for t in traces:
+        assert [s.name for s in t.spans] == SIM_NAMES   # parity with sim
+        assert t.node == "local"
+        dev = t.spans[SIM_NAMES.index(obs.DEVICE)]
+        assert set(dev.attrs) >= set(SCHEMA[obs.DEVICE])
+        # decomposition holds on WALL-clock spans too
+        check_trace(t)
+    lat = [o["latency_ms"] for o in outs]
+    assert metrics.value("engine_served_total", tenant="default",
+                         node="local") == 10
+    assert metrics.histogram("engine_request_ms", tenant="default",
+                             node="local").count == 10
+    # traced totals are the engine's own measured latencies
+    assert sorted(round(t.total_ms, 3) for t in traces) == \
+        sorted(round(v, 3) for v in lat)
+
+
+def test_cluster_sim_decision_spans_and_bounded_logs():
+    from repro.cluster import (ClusterNode, FIRST_FIT, LEAST_LOADED,
+                               simulate_cluster)
+    def nodes():
+        return [ClusterNode(name=f"n{i}",
+                            g_fn=lambda t: GlobalConstraints(
+                                total_chips=256))
+                for i in range(3)]
+    cls = SLOClass("api", deadline_ms=200.0, priority=2,
+                   drop_policy=DEGRADE)
+    tr = virtual_tracer()
+    rep = simulate_cluster(
+        [cls], {"api": make_lut()}, {"api": poisson(2500.0, 4.0, seed=5)},
+        nodes(), router=LEAST_LOADED, placement_mode=FIRST_FIT,
+        rebalance_at=[0.5, 1.5, 2.5, 3.5], tracer=tr, log_cap=1)
+    assert validate_schema(tr.spans()) == []
+    names = {s.name for s in tr.decisions}
+    assert obs.ARBITRATE in names and obs.REBALANCE in names
+    migs = [s for s in tr.decisions if s.name == obs.MIGRATE]
+    assert migs and all(s.attrs["cost_s"] > 0 and s.t1 > s.t0
+                        for s in migs)   # the priced warmup window
+    # request trees carry the route span and node labels
+    t0 = tr.requests()[0]
+    assert t0.spans[0].name == obs.ROUTE and t0.node is not None
+    # log_cap=1 with >=2 migrations: capped list + dropped counter
+    assert len(rep.migrations) == 1
+    assert rep.log_dropped["migrations"] >= 1
+    assert rep.summary()["log_dropped"] == rep.log_dropped
+    assert rep.tracer is tr
+
+
+# --- decomposition -----------------------------------------------------------
+
+def test_decomposition_sums_to_total_within_tolerance():
+    rep, tr = sim_traced()
+    d = decompose_latency(tr)           # asserts per-trace sums internally
+    assert set(d) == {"rt", "batch"}
+    for cname, row in d.items():
+        for q in ("p50", "p95"):
+            parts = sum(v for k, v in row[q].items()
+                        if k.endswith("_ms") and k != "total_ms")
+            tot = row[q]["total_ms"]
+            assert parts == pytest.approx(tot, rel=0.05, abs=0.05)
+            # the quantile pick is a REAL retained trace
+            assert any(t.trace_id == row[q]["trace_id"]
+                       for t in tr.requests())
+        assert row["n"] > 0
+    mc = mean_components(tr, cls="rt")
+    assert set(mc) <= set(COMPONENTS)
+
+
+def test_decomposition_rejects_gapped_trace():
+    t = RequestTrace(trace_id=1, cls="c", t0=0.0, t1=1.0)
+    t.spans = [Span(obs.QUEUE, 0.0, 0.2, trace_id=1),
+               Span(obs.DEVICE, 0.8, 1.0, trace_id=1,
+                    attrs={"bucket": 1, "subnet": "s", "n": 1})]
+    with pytest.raises(DecompositionError):
+        check_trace(t)   # 600ms unaccounted
+
+
+# --- Perfetto / Chrome trace export ------------------------------------------
+
+def test_perfetto_export_roundtrips_json(tmp_path):
+    _, tr = sim_traced()
+    path = str(tmp_path / "trace.json")
+    n = write_chrome_trace(tr, path)
+    with open(path) as f:
+        doc = json.loads(f.read())      # valid JSON is the acceptance bar
+    evs = doc["traceEvents"]
+    assert len(evs) == n and doc["displayTimeUnit"] == "ms"
+    complete = [e for e in evs if e["ph"] == "X"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert complete and meta
+    for e in complete:
+        assert e["ts"] >= 0 and e["dur"] >= 0          # rebased us
+        assert {"pid", "tid", "name", "args"} <= set(e)
+    assert to_chrome_trace(tr)["traceEvents"][0] is not None
+
+
+# --- metrics registry --------------------------------------------------------
+
+def test_metrics_registry_snapshot_and_exports():
+    m = MetricsRegistry()
+    m.counter("served_total", tenant="a").inc(3)
+    m.counter("served_total", tenant="b").inc()
+    m.gauge("chips", node="n0").set(7)
+    m.histogram("lat_ms", buckets=(1.0, 10.0), tenant="a").observe(5.0)
+    snap = m.snapshot()
+    served = [r for r in snap if r["name"] == "served_total"]
+    assert sorted(r["value"] for r in served) == [1.0, 3.0]
+    assert all(r["kind"] == "counter" for r in served)
+    assert json.loads(m.to_json())["series"]            # valid JSON
+    prom = m.to_prometheus()
+    assert 'served_total{tenant="a"} 3' in prom
+    assert 'lat_ms_bucket{le="+Inf",tenant="a"} 1' in prom
+    assert "lat_ms_sum" in prom and "lat_ms_count" in prom
+    assert m.value("served_total", tenant="a") == 3.0
+    assert m.value("missing", default=0.0) == 0.0
+    m.remove(tenant="a")
+    assert m.value("served_total", tenant="a") == 0.0
+    assert m.value("served_total", tenant="b") == 1.0
+    with pytest.raises(ValueError):
+        m.counter("served_total", tenant="b").inc(-1)
+
+
+def test_arbiter_summary_backed_by_registry():
+    from repro.runtime import ResourceArbiter
+    arb = ResourceArbiter()
+    arb.register("api", make_lut(), target_latency_ms=50.0, priority=1)
+    g = GlobalConstraints(total_chips=256)
+    arb.tick(g)
+    s = arb.summary()
+    assert s["api"]["cycles"] == 1
+    assert arb.metrics.value("arbiter_cycles_total", tenant="api") == 1.0
+    arb.unregister("api")
+    assert arb.metrics.value("arbiter_cycles_total", tenant="api") == 0.0
+    assert "api" not in arb.summary()
