@@ -1,0 +1,174 @@
+"""Chaos day: request reliability on vs off, same seeded fault scenario.
+
+One deterministic virtual-time "chaos day" against a 4-node cluster —
+a correlated rack failure takes out half the fleet at t=1s, a thermal
+DVFS ladder degrades one survivor, and recurring network partitions
+blind the router to BOTH survivors for sub-second windows — replayed
+twice on the same seeded arrival trace:
+
+* **reliability off** — the seed behaviour: queued work on the dead
+  rack resolves ``failed``, arrivals during the partition windows are
+  dropped ("placements exist but none routable");
+* **reliability on** — per-class deadline-aware retries with
+  exponential backoff re-route that work through the router once the
+  fault clears, hedged interactive requests ride out single-replica
+  stalls, and sustained pressure flips classes into brownout (serve
+  degraded instead of dropping).
+
+The post-fault cluster has SLACK — retries fill chips the off-run
+leaves idle while dropping work, which is exactly when a reliability
+layer pays.  Acceptance (asserted here, compare-gated in run.py):
+
+* reliability-on goodput >= 1.5x reliability-off on the same day;
+* zero lost requests: submitted == rejected+dropped+failed+completed
+  for every class in both runs;
+* retries stay inside the cluster budget:
+  granted <= burst + fraction x completed.
+
+    PYTHONPATH=src python benchmarks/bench_chaos.py [--smoke]
+"""
+from __future__ import annotations
+
+from repro.chaos import (PARTITION, RACK_FAIL, THERMAL, BrownoutPolicy,
+                         Injection, Reliability, RetryBudget, RetryPolicy,
+                         Scenario)
+from repro.cluster import P2C, ClusterNode, simulate_cluster
+from repro.core.types import ElasticSpace
+from repro.runtime import GlobalConstraints, model_lut
+from repro.runtime import hwmodel as hm
+from repro.traffic import DEGRADE, SHED, SLOClass, poisson
+
+GOODPUT_FLOOR = 1.5   # reliability-on / reliability-off acceptance ratio
+FULL_CHIPS = 256
+
+SPACE = ElasticSpace(width_mults=(0.5, 0.75, 1.0), ffn_mults=(0.5, 1.0),
+                     depth_mults=(0.5, 1.0))
+_REF_TERMS = hm.RooflineTerms(t_compute=0.02, t_memory=0.008,
+                              t_collective=0.004)
+
+
+def make_lut():
+    return model_lut(SPACE.enumerate(), full_terms=_REF_TERMS,
+                     full_chips=FULL_CHIPS)
+
+
+def make_nodes():
+    return [ClusterNode(name=f"n{i}",
+                        g_fn=lambda t: GlobalConstraints(total_chips=64))
+            for i in range(4)]
+
+
+def chaos_day(horizon_s: float) -> Scenario:
+    """Rack failure + thermal throttling + recurring partitions."""
+    inj = [Injection(t=1.0, kind=RACK_FAIL, nodes=("n0", "n1")),
+           Injection(t=1.1, kind=THERMAL, node="n2", duration_s=1.0)]
+    t = 1.4
+    while t + 0.9 <= horizon_s - 0.2:
+        # both survivors partitioned: no reachable replica for the
+        # window — the off-run drops these arrivals, the on-run's
+        # backoffs outlive the window and re-route them
+        inj.append(Injection(t=t, kind=PARTITION, node="n2",
+                             duration_s=0.9))
+        inj.append(Injection(t=t, kind=PARTITION, node="n3",
+                             duration_s=0.9))
+        t += 1.3
+    return Scenario(name="chaos-day", seed=0, injections=tuple(inj))
+
+
+def make_classes():
+    # interactive degrades to 450ms (< its 600ms deadline), so brownout
+    # completions still count good; batch never drops and has the
+    # deadline slack to absorb a full backoff ladder
+    return [SLOClass("interactive", deadline_ms=600.0, priority=3,
+                     drop_policy=SHED, degrade_factor=1.5),
+            SLOClass("batch", deadline_ms=2500.0, priority=1,
+                     drop_policy=DEGRADE)]
+
+
+def make_reliability() -> Reliability:
+    # backoff ladders are sized to OUTLIVE a 0.9s partition window
+    # (0.1+0.2+0.4 / 0.15+0.3+0.6), deadline-awareness prunes the rest
+    return Reliability(
+        policies={"interactive": RetryPolicy(max_attempts=5, backoff_s=0.1,
+                                             backoff_mult=2.0, hedge=True)},
+        default=RetryPolicy(max_attempts=5, backoff_s=0.15,
+                            backoff_mult=2.0),
+        budget=RetryBudget(fraction=2.0, burst=512),
+        brownout=BrownoutPolicy())
+
+
+def run_day(horizon_s: float, reliability):
+    return simulate_cluster(
+        make_classes(), {"interactive": make_lut(), "batch": make_lut()},
+        {"interactive": poisson(100.0, horizon_s, seed=7),
+         "batch": poisson(400.0, horizon_s, seed=8)},
+        make_nodes(), router=P2C, chaos=chaos_day(horizon_s),
+        reliability=reliability)
+
+
+def lost_futures(report) -> int:
+    """Requests that vanished from the accounting — must be zero."""
+    return sum(abs(s.submitted - (s.rejected + s.dropped + s.failed
+                                  + s.completed))
+               for s in report.classes.values())
+
+
+def run(smoke: bool = False):
+    horizon_s = 7.0 if smoke else 10.0
+    rows = []
+
+    rel = make_reliability()
+    off = run_day(horizon_s, None)
+    on = run_day(horizon_s, rel)
+    g_off, g_on = off.total_goodput, on.total_goodput
+    ratio = g_on / max(g_off, 1)
+    retried = sum(s.retried for s in on.classes.values())
+    hedge_wasted = sum(s.hedge_wasted for s in on.classes.values())
+    rows.append(("chaos/reliability_goodput_ratio", ratio,
+                 f"goodput {g_on} vs {g_off} off, {retried} retries "
+                 f"({on.retry_granted} granted), {len(on.injections)} "
+                 f"injections"))
+    rows.append(("chaos/off/goodput", g_off,
+                 f"failed={off.total_failed} dropped={off.total_dropped}"))
+    rows.append(("chaos/on/goodput", g_on,
+                 f"failed={on.total_failed} dropped={on.total_dropped} "
+                 f"hedge_wasted={hedge_wasted} "
+                 f"brownout_transitions={len(on.brownouts)} "
+                 f"retry_denied={on.retry_denied}"))
+    assert ratio >= GOODPUT_FLOOR, (
+        f"reliability-on goodput {g_on} < {GOODPUT_FLOOR}x off {g_off} "
+        f"(acceptance)")
+
+    # zero lost requests: every arrival terminally accounted, both runs
+    lost = lost_futures(off) + lost_futures(on)
+    rows.append(("chaos/lost_futures", float(lost),
+                 "submitted == rejected+dropped+failed+completed, "
+                 "per class, both runs"))
+    assert lost == 0, f"{lost} requests vanished from the accounting"
+
+    # retries never exceed the cluster budget allowance
+    completed = sum(s.completed for s in on.classes.values())
+    allowance = rel.budget.burst + rel.budget.fraction * completed
+    frac = on.retry_granted / max(allowance, 1.0)
+    rows.append(("chaos/retry_budget_frac", frac,
+                 f"granted={on.retry_granted} <= allowance "
+                 f"{allowance:.0f} (burst {rel.budget.burst} + "
+                 f"{rel.budget.fraction} x {completed} completed)"))
+    assert on.retry_granted <= allowance, (
+        f"retries {on.retry_granted} exceeded budget {allowance:.0f} "
+        f"(acceptance)")
+
+    # the brownout machinery actually engaged and disengaged on the day
+    directions = [d for _, _, d in on.brownouts]
+    assert "enter" in directions and "exit" in directions, on.brownouts
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short horizon (fast CI path)")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
+        print(",".join(str(c) for c in r))

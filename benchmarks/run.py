@@ -10,7 +10,9 @@ root; BENCH_3.json records the bucketed-vs-padded serving comparison,
 BENCH_4.json the cluster scale-out and p2c-vs-round-robin routing,
 BENCH_5.json the calibration loop: closed-loop energy ratio and replay
 p95-error ratio, BENCH_6.json the placement engine: rebalanced-vs-static
-goodput under skew and the zero-migration steady-load guard).
+goodput under skew and the zero-migration steady-load guard,
+BENCH_8.json the chaos day: reliability-on vs reliability-off goodput
+under a rack failure + thermal + partition scenario).
 
 ``--suite SUBSTR`` runs only the suites whose title contains SUBSTR —
 the tier-1 smoke test uses it to gate the placement headline in seconds
@@ -47,6 +49,13 @@ HEADLINES = {
     "placement/steady_migrations": {"max": 0.0},
     # absolute floor: tracing-on goodput / tracing-off goodput
     "obs/trace_overhead_ratio": {"min": 0.97},
+    # absolute floor: reliability-on goodput / reliability-off goodput
+    # on the seeded chaos day (rack failure + thermal + partitions)
+    "chaos/reliability_goodput_ratio": {"min": 1.5},
+    # absolute: no request may ever vanish from the accounting, and
+    # retries may never exceed the cluster budget allowance
+    "chaos/lost_futures": {"max": 0.0},
+    "chaos/retry_budget_frac": {"max": 1.0},
 }
 REGRESSION_TOL = 0.10
 
@@ -97,6 +106,7 @@ def compare_headlines(prev_suites: dict, new_suites: dict) -> list:
 def main() -> None:
     import benchmarks.bench_arbiter as ba
     import benchmarks.bench_calibration as bcal
+    import benchmarks.bench_chaos as bch
     import benchmarks.bench_cluster as bc
     import benchmarks.bench_governor as bg
     import benchmarks.bench_kernels as bk
@@ -134,6 +144,8 @@ def main() -> None:
          lambda: bcal.run(smoke=args.smoke)),
         ("obs (tracing on vs off: goodput unchanged, decomposition)",
          lambda: bo.run(smoke=args.smoke)),
+        ("chaos (seeded fault day: reliability on vs off)",
+         lambda: bch.run(smoke=args.smoke)),
         ("switching (paper: runtime architecture switching)", bs.run),
         ("kernels (elastic matmul / flash attention)", bk.run),
         ("roofline (dry-run derived)", rt.rows),

@@ -1,6 +1,6 @@
 """Multi-node cluster serving walkthrough.
 
-Six acts:
+Seven acts:
 
 1. **Scale-out (virtual time)** — one overloaded SLO class replayed
    against 1-node and 2-node clusters through the deterministic
@@ -38,6 +38,15 @@ Six acts:
    decomposes its latency into warming + queue + device — the warming
    span ends at the instant the placement engine charged for
    (``t_rebalance + cost_s``), now visible per request.
+7. **Chaos day with request reliability (virtual time)** — a seeded
+   :class:`repro.chaos.Scenario` rack-fails half the cluster mid-burst
+   and throttles a survivor's DVFS ladder.  Replayed bare, the dead
+   rack's queues resolve ``failed`` and the interactive class bleeds
+   goodput; replayed with a :class:`repro.chaos.Reliability` layer,
+   failed attempts re-route through the router under deadline-aware
+   backoff, interactive requests hedge onto a second replica, and
+   sustained pressure brownouts the class to its degraded target —
+   the interactive p95 stays inside the SLO across the whole day.
 
     PYTHONPATH=src python examples/cluster_serving.py
 """
@@ -271,12 +280,14 @@ def act_6_trace_a_tail_request():
     print(f"  migration: 'api' {mig.attrs['src']} -> {mig.node} at "
           f"t={mig.t0:.2f}s, warmup {mig.attrs['cost_s']:.2f}s priced "
           f"into the placement")
-    # the tail reservoir keeps the slowest requests; pick one that stalled
-    # behind that warmup (its span tree carries a `warming` component)
-    warmed = [t for t in tracer.tail_requests()
+    # the migration is make-before-break: n0 stays routable until n1's
+    # priced warmup lands, then its stranded queue re-homes behind the
+    # warm replica — those requests' wait up to the warm instant shows
+    # up as a `warming` span in their trace
+    warmed = [t for t in tracer.requests()
               if any(s.name == WARMING for s in t.spans)]
-    print(f"  tail reservoir: {len(warmed)}/{len(tracer.tail_requests())} "
-          f"slowest traces stalled behind the warming replica")
+    print(f"  retained traces: {len(warmed)}/{len(tracer.requests())} "
+          f"stalled behind the warming replica")
     victim = max(warmed, key=lambda t: t.total_ms)
     comp = victim.component_ms()
     parts = " + ".join(f"{n} {ms:.1f}ms" for n, ms in sorted(
@@ -294,6 +305,54 @@ def act_6_trace_a_tail_request():
         print(f"    {line}")
 
 
+def act_7_chaos_day_reliability():
+    print("== act 7: rack failure mid-burst, reliability on vs off ==")
+    from repro.chaos import (PARTITION, RACK_FAIL, THERMAL, BrownoutPolicy,
+                             Injection, Reliability, RetryBudget,
+                             RetryPolicy, Scenario)
+    lut = model_lut(SPACE.enumerate(), full_terms=TERMS, full_chips=256)
+    cls = [SLOClass("interactive", deadline_ms=600.0, priority=3,
+                    drop_policy=SHED, degrade_factor=1.5),
+           SLOClass("batch", deadline_ms=2500.0, priority=1,
+                    drop_policy=DEGRADE)]
+    # mid-burst, a whole rack fail-stops, a survivor's thermals bite,
+    # and the fabric blips both survivors away from the router twice
+    day = Scenario(name="rack-day", injections=(
+        Injection(t=1.5, kind=RACK_FAIL, nodes=("n0", "n1")),
+        Injection(t=1.6, kind=THERMAL, node="n2", duration_s=1.5),
+        Injection(t=2.2, kind=PARTITION, node="n2", duration_s=0.9),
+        Injection(t=2.2, kind=PARTITION, node="n3", duration_s=0.9),
+        Injection(t=3.8, kind=PARTITION, node="n2", duration_s=0.9),
+        Injection(t=3.8, kind=PARTITION, node="n3", duration_s=0.9)))
+    rel = Reliability(
+        policies={"interactive": RetryPolicy(max_attempts=5, backoff_s=0.1,
+                                             hedge=True)},
+        default=RetryPolicy(max_attempts=5, backoff_s=0.15),
+        budget=RetryBudget(fraction=2.0, burst=512),
+        brownout=BrownoutPolicy())
+    kw = dict(luts={"interactive": lut, "batch": lut},
+              streams={"interactive": poisson(100.0, 6.0, seed=7),
+                       "batch": poisson(400.0, 6.0, seed=8)},
+              router=P2C, chaos=day)
+    off = simulate_cluster(cls, nodes=make_nodes([64] * 4), **kw)
+    on = simulate_cluster(cls, nodes=make_nodes([64] * 4),
+                          reliability=rel, **kw)
+    print(f"  injections: {[(t, k, n) for t, k, n in on.injections]}")
+    so, sn = off.classes["interactive"], on.classes["interactive"]
+    print(f"  off: interactive good={so.good} failed={so.failed} "
+          f"dropped={so.dropped} p95={so.p(95):.0f}ms; "
+          f"batch failed={off.classes['batch'].failed}")
+    print(f"  on:  interactive good={sn.good} failed={sn.failed} "
+          f"dropped={sn.dropped} p95={sn.p(95):.0f}ms "
+          f"({sn.retried} retried, {sn.hedge_wasted} hedges wasted); "
+          f"batch failed={on.classes['batch'].failed} "
+          f"({on.classes['batch'].retried} retried)")
+    trans = [(f"{t:.1f}s", c, d) for t, c, d in on.brownouts]
+    print(f"  brownout transitions: {trans}")
+    print(f"  interactive p95 inside the 600ms SLO all day: "
+          f"{sn.p(95) <= 600.0} (goodput {sn.good} vs {so.good} bare)")
+
+
 if __name__ == "__main__":
     act_1_scale_out()
     act_2_skewed_routing()
@@ -301,3 +360,4 @@ if __name__ == "__main__":
     act_4_wedged_node_auto_failover()
     act_5_placement_engine()
     act_6_trace_a_tail_request()
+    act_7_chaos_day_reliability()

@@ -65,8 +65,8 @@ class _ClassPort:
         self._cluster = cluster
         self._name = name
 
-    def submit(self, x) -> "queue.Queue":
-        return self._cluster.submit(self._name, x)
+    def submit(self, x, links: Sequence[int] = ()) -> "queue.Queue":
+        return self._cluster.submit(self._name, x, links=links)
 
 
 def _dead_future(reason: str) -> "queue.Queue":
@@ -326,7 +326,11 @@ class Cluster:
 
     # --- request path -------------------------------------------------------
 
-    def submit(self, name: str, x) -> "queue.Queue":
+    def submit(self, name: str, x,
+               links: Sequence[int] = ()) -> "queue.Queue":
+        """Route one request.  ``links`` carries the trace_ids of prior
+        attempts (a retried or hedged request's second try points at its
+        first — the span-link idiom), recorded on the new span tree."""
         t_sub = time.perf_counter() if self.tracer is not None else 0.0
         with self._lock:
             cands = self._routable(name)
@@ -348,7 +352,8 @@ class Cluster:
             # begin the span tree HERE, under the SLO class, with the
             # router's pick as the route span; the engine appends the
             # queue→device children and finalizes at outputs-ready
-            tid = self.tracer.begin_request(name, t=t_sub, node=node.name)
+            tid = self.tracer.begin_request(name, t=t_sub, node=node.name,
+                                            links=links)
             self.tracer.add_span(tid, obs.ROUTE, t_sub,
                                  time.perf_counter(), node=node.name)
             return server.submit(x, trace_id=tid)

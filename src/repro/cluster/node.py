@@ -86,6 +86,13 @@ class ClusterNode:
         default_factory=dict)
     state: str = UP
     health: StallDetector = dataclasses.field(default_factory=StallDetector)
+    # chaos overlay on the hw state (repro.chaos): a thermal injection
+    # lowers the DVFS throttle (only low-frequency LUT points remain), a
+    # straggler shrinks effective capacity.  1.0/1.0 = no perturbation;
+    # g() applies them so the arbiter re-water-fills under the fault
+    # without the node's g_fn knowing chaos exists.
+    chaos_throttle: float = 1.0
+    chaos_capacity: float = 1.0
 
     @property
     def routable(self) -> bool:
@@ -114,7 +121,14 @@ class ClusterNode:
                 server.metrics = metrics
 
     def g(self, t: float = 0.0) -> GlobalConstraints:
-        return self.g_fn(t)
+        g = self.g_fn(t)
+        if self.chaos_throttle < 1.0 or self.chaos_capacity < 1.0:
+            g = dataclasses.replace(
+                g,
+                total_chips=max(1, int(g.total_chips * self.chaos_capacity)),
+                temperature_throttle=min(g.temperature_throttle,
+                                         self.chaos_throttle))
+        return g
 
     def load(self, t: float = 0.0, extra_backlog: float = 0.0) -> float:
         """Backlog per chip — the router's comparison key.

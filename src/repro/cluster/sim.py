@@ -46,9 +46,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 import math
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.chaos.engine import (DRAIN as CHAOS_DRAIN, FAIL as CHAOS_FAIL,
+                                WEDGE_ON as CHAOS_WEDGE, ChaosTimeline)
+from repro.chaos.reliability import Reliability
+from repro.chaos.scenario import Scenario
 from repro.cluster import placement as pl
 from repro.cluster.node import (DEAD, DRAINED, DRAINING, STANDBY, UP,
                                 ClusterNode, StallDetector)
@@ -70,6 +75,21 @@ PLACEMENT_MODES = (REPLICATE, FIRST_FIT)
 
 # smoothing for the autoscaler's sustained-backlog signal
 _SCALE_BETA = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class _Req:
+    """One queued attempt.  ``t`` is when THIS attempt entered the system
+    (its queue-position / batching key); ``t0`` is the original arrival —
+    latency and the retry deadline are always measured from ``t0``, so a
+    retried request can never be counted good past its real SLO.
+    ``gid`` groups hedge copies (-1 = unhedged); ``first_rid`` carries the
+    first failed attempt's trace_id so a retry's span tree links back."""
+    t: float
+    t0: float
+    attempts: int = 1
+    gid: int = -1
+    first_rid: int = -1
 
 
 @dataclasses.dataclass
@@ -102,6 +122,17 @@ class ClusterReport:
     # the bench's "no higher energy" axis prices migrations honestly
     energy_mj: Dict[str, float] = dataclasses.field(default_factory=dict)
     migration_energy_mj: float = 0.0
+    # chaos scenario activity: (t, kind, node) per applied injection,
+    # in scenario order — part of the determinism contract
+    injections: List[Tuple[float, str, str]] = dataclasses.field(
+        default_factory=list)
+    # brownout transitions: (t, cls, "enter"/"exit")
+    brownouts: List[Tuple[float, str, str]] = dataclasses.field(
+        default_factory=list)
+    # reliability accounting: retries granted by the cluster budget, and
+    # the ones turned away (past-deadline / budget-exhausted / attempt cap)
+    retry_granted: int = 0
+    retry_denied: Dict[str, int] = dataclasses.field(default_factory=dict)
     # the run's observability handles (``decompose_latency(report)``
     # reads .tracer); excluded from summary() — not plain data
     tracer: Optional[object] = None
@@ -136,6 +167,10 @@ class ClusterReport:
                 "preempted": list(self.preempted),
                 "scale_events": list(self.scale_events),
                 "unplaceable": list(self.unplaceable),
+                "injections": list(self.injections),
+                "brownouts": list(self.brownouts),
+                "retry_granted": self.retry_granted,
+                "retry_denied": dict(self.retry_denied),
                 "log_dropped": dict(self.log_dropped),
                 "energy_mj": {n: round(e, 2)
                               for n, e in self.energy_mj.items()},
@@ -153,6 +188,8 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                      fail_at: Optional[Dict[str, float]] = None,
                      drain_at: Optional[Dict[str, float]] = None,
                      wedge_at: Optional[Dict[str, float]] = None,
+                     chaos: Optional[Scenario] = None,
+                     reliability: Optional[Reliability] = None,
                      health_epochs: Optional[int] = None,
                      calibration=None,
                      placement_mode: str = REPLICATE,
@@ -186,6 +223,33 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
 
     ``calibration`` threads a warmed measurement store through every
     node's arbiter and the batch service model.
+
+    ``chaos`` (a :class:`repro.chaos.Scenario`) schedules deterministic
+    fault injections in virtual time.  Its fail-stop family (node fail,
+    silent wedge, spot preemption = drain notice then fail, correlated
+    rack failure) is MERGED into the ``fail_at``/``drain_at``/
+    ``wedge_at`` scripting above, so chaos rides the exact failover
+    machinery operators script by hand; its continuous overlays are
+    polled each epoch — a straggler multiplies the node's batch service
+    time by ``factor``, a thermal injection walks the node's DVFS
+    throttle down a ladder (the arbiter re-water-fills over the
+    low-frequency LUT points), and a partition hides the router→node
+    edge (the node keeps serving its queue; new routes avoid it).
+
+    ``reliability`` (a :class:`repro.chaos.Reliability`) turns on the
+    request-reliability layer: a FAILED attempt is re-routed through the
+    router after its class's exponential backoff — capped by the
+    policy's attempt limit, by the cluster-wide retry budget
+    (``burst + fraction × completed``), and by the request's own
+    deadline (a retry that cannot be resubmitted before the SLO deadline
+    is never scheduled).  Classes with ``hedge=True`` enqueue each
+    accepted arrival on TWO distinct replicas; the first completion
+    wins, the loser counts ``hedge_wasted``.  Sustained chaos pressure
+    (failures+retries per outcome, EWMA-smoothed) flips a class into
+    BROWNOUT: every replica's arbiter pins it to its DEGRADE target and
+    shedding is suspended — serve degraded instead of dropping — until
+    the pressure decays below the exit threshold.  Retried requests'
+    span trees link to their first failed attempt (``links=``).
 
     The **placement engine** (PR 6) is scripted the same way lifecycle
     is: ``rebalance_at`` lists the virtual seconds the cluster-wide
@@ -227,6 +291,34 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     drain_at = dict(drain_at or {})
     wedge_at = dict(wedge_at or {})
     wedged = {n.name: False for n in nodes}
+
+    # --- chaos: compile the scenario onto the scripting machinery -----------
+    timeline = (ChaosTimeline(chaos, [n.name for n in nodes])
+                if chaos is not None else None)
+    chaos_due: List[Tuple[float, str, str]] = []
+    if timeline is not None:
+        # the fail-stop family becomes fail_at/drain_at/wedge_at entries
+        # (earliest wins when an operator scripted the same node), so
+        # injected faults take the exact failover path scripted ones do
+        lifecycle_of = {CHAOS_FAIL: fail_at, CHAOS_DRAIN: drain_at,
+                        CHAOS_WEDGE: wedge_at}
+        for tc, action, nn in timeline.lifecycle():
+            target = lifecycle_of[action]
+            target[nn] = min(target.get(nn, math.inf), tc)
+        chaos_due = sorted(chaos.summary())
+
+    # --- reliability layer state --------------------------------------------
+    rel = reliability
+    budget = rel.budget.fresh() if rel is not None else None
+    retry_heap: List[Tuple[float, int, str, _Req]] = []
+    retry_seq = 0
+    retry_denied = {"deadline": 0, "budget": 0, "attempts": 0}
+    hedge_groups: Dict[int, dict] = {}
+    next_gid = 0
+    brown_on = {c.name: False for c in classes}
+    brown_p = {c.name: 0.0 for c in classes}
+    brownouts: List[Tuple[float, str, str]] = []
+    injections: List[Tuple[float, str, str]] = []
     # per-run accounting lives in a metrics registry (the report reads
     # it back into its public dict shapes); counter handles are held in
     # dicts so the hot loop pays one attribute bump, no lookups
@@ -338,13 +430,69 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
         # bucket columns by the point's subnet spec
         return {n: a.point for n, a in allocs.items()}
 
-    def fail_node(nn: str):
-        """Fail-stop one node: queued work resolves as failed (error
-        payloads live), placements shrink, orphans re-admit — shared by
-        ``fail_at`` scripting and the stall health check."""
+    def resolve_failure(cn: str, it: _Req, tf: float, nn: Optional[str]):
+        """One attempt just died at ``tf`` (fail-stop, lost route).
+
+        Outcomes, in order: absorbed by a live hedge sibling (nothing is
+        terminal while a copy is still in flight; a copy outlived by its
+        winner counts ``hedge_wasted``); RETRIED — re-enqueued through
+        the router after the class's backoff, if the attempt cap, the
+        request's own deadline, and the cluster retry budget all allow;
+        otherwise terminally ``failed``."""
+        nonlocal retry_seq
+        st = stats[cn]
+        if it.gid >= 0:
+            grp = hedge_groups[it.gid]
+            grp["live"] -= 1
+            if grp["done"]:
+                st.hedge_wasted += 1
+                return
+            if grp["live"] > 0:
+                return   # sibling still in flight: not terminal yet
+            # last copy of an unresolved group: fall through (retryable)
+        first_rid = it.first_rid
+        if rel is not None:
+            pol = rel.policy_for(cn)
+            c = by_class[cn]
+            if pol is None or it.attempts >= pol.max_attempts:
+                retry_denied["attempts"] += 1
+            else:
+                t_retry = tf + pol.backoff(it.attempts)
+                if t_retry > it.t0 + c.deadline_ms / 1e3:
+                    # deadline-aware: a retry that cannot even resubmit
+                    # before the SLO deadline is guaranteed-late work
+                    retry_denied["deadline"] += 1
+                elif not budget.allow(sum(s.completed
+                                          for s in stats.values())):
+                    retry_denied["budget"] += 1
+                else:
+                    if tracer is not None and first_rid < 0:
+                        # record the failed attempt as its own span tree
+                        # so the retry's span link points at something
+                        first_rid = tracer.request(
+                            cn, it.t, tf, node=nn, spans=[
+                                (obs.ROUTE, it.t, it.t, None),
+                                (obs.QUEUE, it.t, tf, None)])
+                    st.retried += 1
+                    retry_seq += 1
+                    heapq.heappush(
+                        retry_heap,
+                        (t_retry, retry_seq, cn,
+                         dataclasses.replace(it, t=t_retry,
+                                             attempts=it.attempts + 1,
+                                             gid=-1, first_rid=first_rid)))
+                    return
+        st.failed += 1   # error payloads, not lost
+
+    def fail_node(nn: str, tf: float):
+        """Fail-stop one node: queued work resolves as failed (or enters
+        the retry path when a reliability layer runs), placements shrink,
+        orphans re-admit — shared by ``fail_at`` scripting, chaos
+        injections and the stall health check."""
         by_node[nn].state = DEAD
         for cn, q in queues[nn].items():
-            stats[cn].failed += len(q)   # error payloads, not lost
+            for it in q:
+                resolve_failure(cn, it, tf, nn)
             q.clear()
             busy_until[nn][cn] = 0.0
         for cn in placements:
@@ -365,6 +513,9 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     scale_events: Deque[Tuple[float, str, str]] = \
         collections.deque(maxlen=log_cap)
     warming: List[Tuple[float, str, str]] = []   # (warm_t, cls, node)
+    # make-before-break: (warm_t, cls, src, dst) retires deferred until
+    # the destination replica's warmup lands
+    pending_retires: List[Tuple[float, str, str, str]] = []
     # (node, cls) -> latest warmup end: attributes a routed request's
     # wait behind a migrating replica to a WARMING span, not queueing
     warm_until: Dict[Tuple[str, str], float] = {}
@@ -393,6 +544,11 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
             node.arbiter.register(cn, luts[cn], reg_info[cn]["target"],
                                   priority=reg_info[cn]["priority"],
                                   min_accuracy=reg_info[cn]["min_accuracy"])
+            if brown_on.get(cn):
+                # class is browned out: the new replica serves the same
+                # degraded target its siblings were pinned to
+                node.arbiter.set_brownout(cn,
+                                          by_class[cn].degraded_target_ms)
         if nn not in placements[cn]:
             placements[cn].append(nn)
         warm_t = t0 + warm_s
@@ -414,10 +570,17 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
         if q:
             home = dst or (placements[cn][0] if placements[cn] else None)
             if home is None:
-                stats[cn].dropped += len(q)
+                if rel is not None:
+                    # homeless work enters the retry path (ambient epoch
+                    # time — retire only ever runs inside the main loop)
+                    for it in q:
+                        resolve_failure(cn, it, t, nn)
+                else:
+                    stats[cn].dropped += len(q)
             else:
                 queues[home][cn] = collections.deque(
-                    sorted(list(queues[home][cn]) + list(q)))
+                    sorted(list(queues[home][cn]) + list(q),
+                           key=lambda r: (r.t, r.t0)))
             q.clear()
         busy_until[nn][cn] = 0.0
         warm_until.pop((nn, cn), None)
@@ -435,7 +598,15 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 start_replica(mv.cls, mv.dst, tr, mv.cost_s)
                 mig_energy.inc(mv.cost_j * 1e3)
             if mv.src is not None:
-                retire_replica(mv.cls, mv.src, mv.dst)
+                if mv.dst is not None:
+                    # make-before-break: the source keeps serving (and
+                    # stays routable) until the destination's priced
+                    # warmup lands — retiring it now would strand its
+                    # queue behind a replica that cannot serve yet
+                    pending_retires.append((tr + mv.cost_s, mv.cls,
+                                            mv.src, mv.dst))
+                else:
+                    retire_replica(mv.cls, mv.src, None)
             log_event(migrations, "migrations", (tr, mv.cls, mv.src, mv.dst))
             m.counter("cluster_migrations_total", cls=mv.cls).inc()
             if tracer is not None:
@@ -504,7 +675,7 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     t = 0.0
     while True:
         alive = [n for n in nodes if n.alive]
-        backlog = ei < len(events) or any(
+        backlog = ei < len(events) or bool(retry_heap) or any(
             q for n in alive for q in queues[n.name].values())
         in_flight = any(b > t for n in alive
                         for b in busy_until[n.name].values())
@@ -514,6 +685,14 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
             break   # safety: leftover queues flushed as dropped below
 
         # --- lifecycle events (epoch boundary) ------------------------------
+        while chaos_due and chaos_due[0][0] <= t:
+            # injection becomes visible this boundary: log it (scenario
+            # timestamps — part of the determinism contract) + CHAOS span
+            tc, kind, nn = chaos_due.pop(0)
+            injections.append((tc, kind, nn))
+            m.counter("chaos_injections_total", kind=kind).inc()
+            if tracer is not None:
+                tracer.decision(obs.CHAOS, t, t, node=nn, kind=kind)
         for nn, td in drain_at.items():
             if by_node[nn].state == UP and t >= td:
                 by_node[nn].state = DRAINING
@@ -524,7 +703,7 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 wedged[nn] = True
         for nn, tf in fail_at.items():
             if by_node[nn].state != DEAD and t >= tf:
-                fail_node(nn)
+                fail_node(nn, t)
         for node in nodes:
             nn = node.name
             if node.state == DRAINING and not any(
@@ -545,6 +724,21 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
             for _, cn, nn in done_w:
                 rtr.set_weight(cn, nn, None)
             warming = [w for w in warming if w[0] > t]
+        if pending_retires:
+            # make-before-break back half: the destination is warm (its
+            # router weight just cleared above) — NOW retire the source,
+            # re-homing its backlog onto the serving destination.  A
+            # destination that died (or was preempted away) meanwhile
+            # falls back to any surviving placement; a source already
+            # gone needs nothing.
+            due_r = [p for p in pending_retires if p[0] <= t]
+            pending_retires = [p for p in pending_retires if p[0] > t]
+            for _, cn, src, dst in due_r:
+                if src not in placements.get(cn, ()):
+                    continue
+                dest = (dst if dst in placements.get(cn, ())
+                        and by_node[dst].alive else None)
+                retire_replica(cn, src, dest)
         up_chips = sum(n.g(t).total_chips for n in nodes if n.state == UP)
         backlog_now = sum(len(q) for n in nodes if n.alive
                           for q in queues[n.name].values())
@@ -556,6 +750,13 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
         while rebalance_due and rebalance_due[0] <= t:
             rebalance_due.pop(0)
             run_rebalance(t)
+
+        # --- chaos continuous overlays (polled each epoch) ------------------
+        if timeline is not None:
+            for node in nodes:
+                # thermal ladder → DVFS throttle: the node's arbiter
+                # re-water-fills over the low-frequency LUT points
+                node.chaos_throttle = timeline.throttle(node.name, t)
 
         # --- per-node arbitration with backlog signals ----------------------
         allocs: Dict[str, dict] = {}
@@ -579,6 +780,39 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                     tenants=len(allocs[nn]),
                     granted=sum(a.chips for a in allocs[nn].values()))
         t_next = t + interval_s
+        # epoch-start outcome snapshot: brownout pressure is computed
+        # from THIS epoch's deltas at the end of the epoch
+        if rel is not None and rel.brownout is not None:
+            brown_snap = {cn: (stats[cn].failed + stats[cn].retried,
+                               stats[cn].completed + stats[cn].failed
+                               + stats[cn].dropped + stats[cn].retried)
+                          for cn in stats}
+
+        def route_candidates(cn: str, ta: float):
+            """Routable placements minus chaos-partitioned edges."""
+            cands = [by_node[x] for x in placements[cn]]
+            if timeline is not None:
+                cands = [nd for nd in cands
+                         if not timeline.partitioned(nd.name, ta)]
+            return cands
+
+        def load_at(ta: float):
+            return lambda nd: nd.load(
+                ta, extra_backlog=sum(arrived_epoch[nd.name].values()))
+
+        # --- re-route retries that came due (reliability layer) -------------
+        while retry_heap and retry_heap[0][0] < t_next:
+            t_r, _, cn, it = heapq.heappop(retry_heap)
+            cands = route_candidates(cn, t_r)
+            node = rtr.pick(cn, cands, t=t_r, load_fn=load_at(t_r)) \
+                if cands else None
+            if node is None:
+                # nowhere to go *right now* — treat as one more failed
+                # attempt (may back off again if attempts/deadline allow)
+                resolve_failure(cn, it, t_r, None)
+                continue
+            arrived_epoch[node.name][cn] += 1
+            queues[node.name][cn].append(it)
 
         # --- route + admit/shed this epoch's arrivals -----------------------
         while ei < len(events) and events[ei][0] < t_next:
@@ -593,13 +827,16 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 else:
                     st.rejected += 1  # admission never placed the class
                 continue
-            cands = [by_node[nn] for nn in placements[cn]]
-            node = rtr.pick(
-                cn, cands, t=ta,
-                load_fn=lambda nd: nd.load(
-                    ta, extra_backlog=sum(arrived_epoch[nd.name].values())))
+            cands = route_candidates(cn, ta)
+            node = rtr.pick(cn, cands, t=ta, load_fn=load_at(ta)) \
+                if cands else None
             if node is None:
-                st.dropped += 1     # placements exist but none routable
+                if rel is not None:
+                    # no reachable replica (all partitioned/warming):
+                    # the reliability layer may retry once edges heal
+                    resolve_failure(cn, _Req(t=ta, t0=ta), ta, None)
+                else:
+                    st.dropped += 1   # placements exist but none routable
                 continue
             nn = node.name
             arrived_epoch[nn][cn] += 1
@@ -610,20 +847,39 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 allocs[nn] = node.arbiter.last_alloc
                 svc[nn] = svc_of(allocs[nn])
             if (policy == SLO_POLICY and c.drop_policy == SHED
+                    and not brown_on[cn]
                     and svc[nn].get(cn) is not None):
                 q_len = len(queues[nn][cn])
                 occ = min(q_len + 1, c.max_batch)
                 pt = svc[nn][cn]
-                batch_ms = _service_ms(pt.latency_ms, occ, c.max_batch,
-                                       service_model, spec=pt.subnet,
-                                       calibration=calibration)
+                lm = (timeline.latency_mult(nn, ta)
+                      if timeline is not None else 1.0)
+                batch_ms = lm * _service_ms(pt.latency_ms, occ, c.max_batch,
+                                            service_model, spec=pt.subnet,
+                                            calibration=calibration)
                 n_batches = math.ceil((q_len + 1) / c.max_batch)
                 eta_ms = (max(0.0, busy_until[nn][cn] - ta) * 1e3
                           + n_batches * batch_ms)
                 if eta_ms > c.deadline_ms:
                     st.dropped += 1   # predicted miss: shed on arrival
                     continue
-            queues[nn][cn].append(ta)
+            it = _Req(t=ta, t0=ta)
+            pol = rel.policy_for(cn) if rel is not None else None
+            if pol is not None and pol.hedge and len(cands) > 1:
+                # hedged request: a SECOND copy on a distinct replica
+                # that holds a slice; first completion wins, the loser
+                # counts hedge_wasted (submitted counted ONCE)
+                others = [nd for nd in cands if nd.name != nn]
+                second = rtr.pick(cn, others, t=ta, load_fn=load_at(ta))
+                if second is not None \
+                        and svc.get(second.name, {}).get(cn) is not None:
+                    gid = next_gid
+                    next_gid += 1
+                    hedge_groups[gid] = {"live": 2, "done": False}
+                    it = _Req(t=ta, t0=ta, gid=gid)
+                    queues[second.name][cn].append(it)
+                    arrived_epoch[second.name][cn] += 1
+            queues[nn][cn].append(it)
 
         # --- serve each node's queues in batches ----------------------------
         for node in nodes:
@@ -631,6 +887,8 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 continue   # wedged: accepts routes, completes nothing
             nn = node.name
             dies = fail_at.get(nn, math.inf)
+            lm = (timeline.latency_mult(nn, t)
+                  if timeline is not None else 1.0)   # straggler slowdown
             for cn, q in queues[nn].items():
                 pt = svc.get(nn, {}).get(cn)
                 if pt is None:
@@ -638,17 +896,17 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 c = by_class[cn]
                 st = stats[cn]
                 while q:
-                    start = max(q[0], busy_until[nn][cn], t)
+                    start = max(q[0].t, busy_until[nn][cn], t)
                     if start >= t_next:
                         break
                     k = 0
-                    for ta in q:
-                        if ta <= start and k < c.max_batch:
+                    for item in q:
+                        if item.t <= start and k < c.max_batch:
                             k += 1
                         else:
                             break
                     k = max(k, 1)
-                    done = start + _service_ms(
+                    done = start + lm * _service_ms(
                         pt.latency_ms, k, c.max_batch, service_model,
                         spec=pt.subnet, calibration=calibration) / 1e3
                     if done > dies:
@@ -666,8 +924,17 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                                        else str(pt.subnet))}
                         warm_t = warm_until.get((nn, cn), 0.0)
                     for _ in range(k):
-                        ta = q.popleft()
-                        lat_ms = (done - ta) * 1e3
+                        it = q.popleft()
+                        if it.gid >= 0:
+                            grp = hedge_groups[it.gid]
+                            grp["live"] -= 1
+                            if grp["done"]:
+                                # sibling answered first: this copy paid
+                                # for a batch slot and nothing else
+                                st.hedge_wasted += 1
+                                continue
+                            grp["done"] = True
+                        lat_ms = (done - it.t0) * 1e3
                         st.completed += 1
                         st.latencies_ms.append(lat_ms)
                         if lat_ms <= c.deadline_ms:
@@ -679,21 +946,27 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                         # start (the analytic service model folds them
                         # into `device`); a wait behind a migrating
                         # replica's warmup is WARMING, the rest QUEUE —
-                        # the components still partition [ta, done]
+                        # the components still partition [it.t, done].
+                        # A retry's tree starts at ITS OWN submit time
+                        # and links to the first failed attempt's tree.
                         w1 = min(start, warm_t)
-                        spans = [(obs.ROUTE, ta, ta, None)]
-                        if w1 > ta:
-                            spans.append((obs.WARMING, ta, w1, None))
+                        spans = [(obs.ROUTE, it.t, it.t, None)]
+                        if w1 > it.t:
+                            spans.append((obs.WARMING, it.t, w1, None))
                             spans.append((obs.QUEUE, w1, start, None))
                         else:
-                            spans.append((obs.QUEUE, ta, start, None))
+                            spans.append((obs.QUEUE, it.t, start, None))
                         spans.extend([
                             (obs.COLLECT, start, start, None),
                             (obs.STACK, start, start, None),
                             (obs.DISPATCH, start, start, None),
                             (obs.DEVICE, start, done, dev_attrs),
                             (obs.COMPLETE, done, done, None)])
-                        tracer.request(cn, ta, done, node=nn, spans=spans)
+                        tracer.request(cn, it.t, done, node=nn,
+                                       spans=spans,
+                                       links=([it.first_rid]
+                                              if it.first_rid >= 0
+                                              else ()))
 
         # --- stall-based health check (end of epoch) ------------------------
         for node in nodes:
@@ -709,16 +982,63 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 if tracer is not None:
                     tracer.decision(obs.HEALTH_FAIL, t_next, t_next,
                                     node=nn)
-                fail_node(nn)
+                fail_node(nn, t_next)
+
+        # --- brownout: degrade under sustained chaos pressure ---------------
+        if rel is not None and rel.brownout is not None:
+            bp = rel.brownout
+            for cn, st in stats.items():
+                bad = (st.failed + st.retried) - brown_snap[cn][0]
+                total = (st.completed + st.failed + st.dropped
+                         + st.retried) - brown_snap[cn][1]
+                frac = bad / total if total else 0.0
+                brown_p[cn] = bp.beta * brown_p[cn] + (1 - bp.beta) * frac
+                if not brown_on[cn] and brown_p[cn] >= bp.enter_pressure:
+                    # serve degraded instead of dropping: every replica's
+                    # arbiter pins the class to its DEGRADE target and
+                    # the shed check is suspended (see arrivals above)
+                    brown_on[cn] = True
+                    brownouts.append((t_next, cn, "enter"))
+                    m.counter("cluster_brownouts_total", cls=cn).inc()
+                    for nn2 in placements[cn]:
+                        if cn in by_node[nn2].arbiter.tenants():
+                            by_node[nn2].arbiter.set_brownout(
+                                cn, by_class[cn].degraded_target_ms)
+                    if tracer is not None:
+                        tracer.decision(obs.BROWNOUT, t_next, t_next,
+                                        cls=cn, direction="enter")
+                elif brown_on[cn] and brown_p[cn] <= bp.exit_pressure:
+                    brown_on[cn] = False
+                    brownouts.append((t_next, cn, "exit"))
+                    for nn2 in placements[cn]:
+                        if cn in by_node[nn2].arbiter.tenants():
+                            by_node[nn2].arbiter.set_brownout(cn, None)
+                    if tracer is not None:
+                        tracer.decision(obs.BROWNOUT, t_next, t_next,
+                                        cls=cn, direction="exit")
         t = t_next
 
     for node in nodes:
         for cn, q in queues[node.name].items():
-            if node.state == DEAD:
-                stats[cn].failed += len(q)
-            else:
-                stats[cn].dropped += len(q)   # unserved within the horizon
+            for it in q:
+                if it.gid >= 0:
+                    # horizon flush is terminal: no retries — but a copy
+                    # whose sibling already answered is just hedge waste,
+                    # and one with a live sibling defers to it
+                    grp = hedge_groups[it.gid]
+                    grp["live"] -= 1
+                    if grp["done"]:
+                        stats[cn].hedge_wasted += 1
+                        continue
+                    if grp["live"] > 0:
+                        continue
+                if node.state == DEAD:
+                    stats[cn].failed += 1
+                else:
+                    stats[cn].dropped += 1   # unserved within the horizon
             q.clear()
+    for _, _, cn, _it in retry_heap:
+        stats[cn].failed += 1   # retry scheduled past the horizon
     node_view = {n.name: {"state": n.state,
                           "capacity_chips": n.g(t).total_chips,
                           "arbiter": n.arbiter.summary()}
@@ -731,6 +1051,10 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                          preempted=list(preempted),
                          scale_events=list(scale_events),
                          unplaceable=sorted(unplaceable),
+                         injections=list(injections),
+                         brownouts=list(brownouts),
+                         retry_granted=budget.granted if budget else 0,
+                         retry_denied=dict(retry_denied),
                          decisions_dropped=rtr.decisions_dropped,
                          log_dropped=dict(log_dropped),
                          energy_mj={c.name: energy[c.name].value

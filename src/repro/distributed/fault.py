@@ -31,6 +31,12 @@ class SimulatedFailure(RuntimeError):
 
 
 class Watchdog:
+    """Re-armable heartbeat: firing ``on_stall`` does NOT kill the
+    watchdog thread — a later :meth:`beat` (the job recovered, e.g. a
+    restart supervisor got it moving again) clears ``stalled`` and arms
+    the next stall, so one watchdog covers a whole run-with-restarts
+    lifetime instead of only the first incident."""
+
     def __init__(self, timeout_s: float = 300.0,
                  on_stall: Optional[Callable[[], None]] = None):
         self.timeout_s = timeout_s
@@ -38,6 +44,7 @@ class Watchdog:
         self._last_beat = time.monotonic()
         self._stop = threading.Event()
         self.stalled = False
+        self.stall_count = 0
         self._thread = threading.Thread(target=self._loop, daemon=True)
 
     def start(self):
@@ -47,24 +54,33 @@ class Watchdog:
 
     def beat(self):
         self._last_beat = time.monotonic()
+        self.stalled = False   # recovery re-arms the next stall
 
     def stop(self):
         self._stop.set()
 
     def _loop(self):
+        fired_for: Optional[float] = None
         while not self._stop.wait(min(self.timeout_s / 4, 5.0)):
             if time.monotonic() - self._last_beat > self.timeout_s:
+                if fired_for == self._last_beat:
+                    continue   # already fired for this stall; wait for beat
+                fired_for = self._last_beat
                 self.stalled = True
+                self.stall_count += 1
                 if self.on_stall:
                     self.on_stall()
-                return
 
 
 class StragglerMonitor:
-    def __init__(self, window: int = 50, threshold: float = 2.0):
+    def __init__(self, window: int = 50, threshold: float = 2.0,
+                 log_cap: int = 1024):
         self.times = deque(maxlen=window)
         self.threshold = threshold
-        self.flags = []
+        # bounded flag log (capped deque + dropped counter): a chronic
+        # straggler over a week-long job must not grow memory unbounded
+        self.flags = deque(maxlen=log_cap)
+        self.flags_dropped = 0
 
     def record(self, step: int, seconds: float) -> bool:
         """Returns True if this step is a straggler outlier."""
@@ -74,6 +90,8 @@ class StragglerMonitor:
             med = statistics.median(self.times)
             if seconds > self.threshold * med:
                 is_straggler = True
+                if len(self.flags) == self.flags.maxlen:
+                    self.flags_dropped += 1   # deque evicts the oldest
                 self.flags.append({"step": step, "seconds": seconds,
                                    "median": med})
         self.times.append(seconds)

@@ -52,9 +52,9 @@ from repro.obs.export import to_chrome_trace, write_chrome_trace
 from repro.obs.metrics import (DEFAULT_BUCKETS_MS, Counter, Gauge,
                                Histogram, MetricsRegistry, quantile,
                                weighted_quantile)
-from repro.obs.trace import (ARBITRATE, COLLECT, COMPLETE, COMPONENTS,
-                             DECISION_SPANS, DEVICE, DISPATCH, HEALTH_FAIL,
-                             MIGRATE, PREEMPT, QUEUE, REBALANCE,
+from repro.obs.trace import (ARBITRATE, BROWNOUT, CHAOS, COLLECT, COMPLETE,
+                             COMPONENTS, DECISION_SPANS, DEVICE, DISPATCH,
+                             HEALTH_FAIL, MIGRATE, PREEMPT, QUEUE, REBALANCE,
                              REQUEST_SPANS, ROUTE, SCALE, SCHEMA, STACK,
                              WARMING, RequestTrace, Span, Tracer,
                              validate_schema)
@@ -64,7 +64,7 @@ __all__ = [
     "REQUEST_SPANS", "DECISION_SPANS", "validate_schema",
     "ROUTE", "QUEUE", "COLLECT", "STACK", "DISPATCH", "DEVICE",
     "COMPLETE", "WARMING", "ARBITRATE", "REBALANCE", "MIGRATE",
-    "PREEMPT", "SCALE", "HEALTH_FAIL",
+    "PREEMPT", "SCALE", "HEALTH_FAIL", "CHAOS", "BROWNOUT",
     "MetricsRegistry", "Counter", "Gauge", "Histogram",
     "DEFAULT_BUCKETS_MS", "quantile", "weighted_quantile",
     "decompose_latency", "format_decomposition", "mean_components",

@@ -35,6 +35,12 @@ def to_chrome_trace(source: Union[Tracer, Iterable[Span]]) -> dict:
     """Trace-event dict (``{"traceEvents": [...], ...}``) for a span
     buffer.  Pure data in, pure data out — callers json.dump it."""
     spans = _spans_of(source)
+    # span links (retry/hedge second attempts): carried on every event
+    # of the linked trace so Perfetto shows which attempt it follows
+    links: Dict[int, List[int]] = {}
+    if isinstance(source, Tracer):
+        links = {tr.trace_id: list(tr.links)
+                 for tr in source.requests() if tr.links}
     t_base = min((s.t0 for s in spans), default=0.0)
     pids: Dict[str, int] = {}
     tids: Dict[int, int] = {}
@@ -66,6 +72,8 @@ def to_chrome_trace(source: Union[Tracer, Iterable[Span]]) -> dict:
 
     for s in spans:
         args = {"cls": s.cls, "trace_id": s.trace_id}
+        if s.trace_id in links:
+            args["links"] = links[s.trace_id]
         args.update(s.attrs)
         events.append({
             "ph": "X",

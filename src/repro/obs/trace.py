@@ -65,10 +65,13 @@ MIGRATE = "migrate"
 PREEMPT = "preempt"
 SCALE = "scale"
 HEALTH_FAIL = "health_fail"
+CHAOS = "chaos"         # one injected fault landing (repro.chaos)
+BROWNOUT = "brownout"   # a class entering/exiting degraded-target mode
 
 REQUEST_SPANS = (ROUTE, QUEUE, COLLECT, STACK, DISPATCH, DEVICE, COMPLETE,
                  WARMING)
-DECISION_SPANS = (ARBITRATE, REBALANCE, MIGRATE, PREEMPT, SCALE, HEALTH_FAIL)
+DECISION_SPANS = (ARBITRATE, REBALANCE, MIGRATE, PREEMPT, SCALE, HEALTH_FAIL,
+                  CHAOS, BROWNOUT)
 
 # the latency components a request's measured latency decomposes into
 # (COMPLETE is post-measurement: latency_ms is stamped when outputs are
@@ -92,6 +95,8 @@ SCHEMA: Dict[str, Tuple[str, ...]] = {
     PREEMPT: ("for_cls",),
     SCALE: ("direction",),
     HEALTH_FAIL: (),
+    CHAOS: ("kind",),
+    BROWNOUT: ("direction",),
 }
 
 
@@ -123,6 +128,11 @@ class RequestTrace:
     t1: float = 0.0
     node: Optional[str] = None
     spans: List[Span] = dataclasses.field(default_factory=list)
+    # span links: trace_ids of CAUSALLY-PRIOR attempts of the same
+    # request (a retried/hedged/preempted request's second attempt links
+    # to its first instead of starting an unrelated trace) — carried
+    # through the Perfetto export as event args
+    links: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def total_ms(self) -> float:
@@ -179,13 +189,15 @@ class Tracer:
     # --- request span trees --------------------------------------------------
 
     def begin_request(self, cls: str, *, t: Optional[float] = None,
-                      node: Optional[str] = None) -> int:
+                      node: Optional[str] = None,
+                      links: Sequence[int] = ()) -> int:
         with self._lock:
             rid = self._next_id
             self._next_id += 1
             self._open[rid] = RequestTrace(
                 trace_id=rid, cls=cls, node=node,
-                t0=self.clock() if t is None else t)
+                t0=self.clock() if t is None else t,
+                links=list(links))
             return rid
 
     def add_span(self, trace_id: int, name: str, t0: float, t1: float, *,
@@ -241,15 +253,17 @@ class Tracer:
 
     def request(self, cls: str, t0: float, t1: float, *,
                 node: Optional[str] = None,
-                spans: Sequence[Tuple[str, float, float, Optional[dict]]] = ()
-                ) -> int:
+                spans: Sequence[Tuple[str, float, float, Optional[dict]]] = (),
+                links: Sequence[int] = ()) -> int:
         """One-shot: record a whole finished request tree under a single
         lock acquisition (the engine and the simulators batch through
-        here — per-request tracing cost is one call)."""
+        here — per-request tracing cost is one call).  ``links`` names
+        causally-prior trace_ids (the first attempt a retry follows)."""
         with self._lock:
             rid = self._next_id
             self._next_id += 1
-            tr = RequestTrace(trace_id=rid, cls=cls, t0=t0, t1=t1, node=node)
+            tr = RequestTrace(trace_id=rid, cls=cls, t0=t0, t1=t1, node=node,
+                              links=list(links))
             for name, s0, s1, attrs in spans:
                 tr.spans.append(Span(name=name, t0=s0, t1=s1, trace_id=rid,
                                      cls=cls, node=node,

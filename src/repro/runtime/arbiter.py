@@ -128,6 +128,9 @@ class Workload:
     rate_last_t: Optional[float] = None
     # last seen server.measured_energy_mj (per-tick measured-watts delta)
     energy_last_mj: float = 0.0
+    # brownout mode (chaos reliability): the ORIGINAL target while the
+    # tenant is pinned to its degraded one; None = not browned out
+    brownout_base_ms: Optional[float] = None
 
     def __post_init__(self):
         if self.governor is None:
@@ -290,6 +293,31 @@ class ResourceArbiter:
                 w.arrival_ewma = (_EWMA_BETA * w.arrival_ewma
                                   + (1.0 - _EWMA_BETA)
                                   * max(0.0, float(arrival_rate_rps)))
+
+    def set_brownout(self, name: str, degraded_target_ms: Optional[float]):
+        """Pin a tenant to a relaxed latency target (chaos brownout mode).
+
+        Under sustained fault pressure the reliability layer prefers
+        serving every request a bit slower over shedding some outright:
+        passing a value saves the tenant's original target in
+        ``brownout_base_ms`` and arbitrates against the degraded one
+        (a looser target admits cheaper LUT points, freeing chips on the
+        shrunken post-fault cluster); passing ``None`` restores the
+        original.  Idempotent in both directions — re-entering brownout
+        keeps the first saved base, restoring twice is a no-op.
+        """
+        with self._lock:
+            w = self._workloads[name]
+            if degraded_target_ms is None:
+                if w.brownout_base_ms is not None:
+                    w.target_latency_ms = w.brownout_base_ms
+                    w.brownout_base_ms = None
+            else:
+                if w.brownout_base_ms is None:
+                    w.brownout_base_ms = w.target_latency_ms
+                    self.metrics.counter("arbiter_brownouts_total",
+                                         tenant=name).inc()
+                w.target_latency_ms = float(degraded_target_ms)
 
     def _backlog(self, w: Workload) -> float:
         """Pending work the surplus pass should drain: queued requests plus
@@ -738,6 +766,8 @@ class ResourceArbiter:
             if w.queue_depth or w.arrival_ewma:
                 row["queue_depth"] = w.queue_depth
                 row["arrival_ewma_rps"] = round(w.arrival_ewma, 2)
+            if w.brownout_base_ms is not None:
+                row["brownout"] = True
             if self.calibration is not None:
                 row["power_scale"] = round(self._power_scale(name), 4)
             out[name] = row

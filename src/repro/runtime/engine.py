@@ -40,7 +40,8 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Callable, Deque, Dict, List, Optional, Set, Tuple
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Set, Tuple)
 
 import jax
 import numpy as np
@@ -182,6 +183,7 @@ class DynamicServer:
         self._paused = threading.Event()
         self._resume = threading.Event()
         self._resume.set()
+        self._wedged = False   # chaos: resume() defeated until unwedge()
         self._worker: Optional[threading.Thread] = None
         self._completer: Optional[threading.Thread] = None
         self.active_spec = SubnetSpec()
@@ -295,15 +297,20 @@ class DynamicServer:
     def _stop_reason(self) -> str:
         return self._fail_reason or "server stopped"
 
-    def submit(self, x, trace_id: Optional[int] = None) -> "queue.Queue":
+    def submit(self, x, trace_id: Optional[int] = None,
+               links: Sequence[int] = ()) -> "queue.Queue":
         fut: "queue.Queue" = queue.Queue(maxsize=1)
         t_submit = time.perf_counter()
         if self.tracer is not None and trace_id is None:
             # standalone server: begin the tree here under the tenant
             # label (the cluster frontend begins it earlier, with the
-            # SLO class and a route span, and hands us its trace_id)
+            # SLO class and a route span, and hands us its trace_id).
+            # ``links`` names prior attempts' trace_ids (retry/hedge).
             trace_id = self.tracer.begin_request(
-                self.tenant or "default", t=t_submit, node=self.trace_node)
+                self.tenant or "default", t=t_submit, node=self.trace_node,
+                links=links)
+        # retry layers read the id back off the future to link attempts
+        fut.trace_id = trace_id
         r = Request(x=x, t_submit=t_submit, future=fut, trace_id=trace_id)
         with self._acct_lock:
             self._outstanding += 1
@@ -406,9 +413,23 @@ class DynamicServer:
             self._put_wake()         # wake a collector blocked on get()
 
     def resume(self):
+        if self._wedged:
+            return   # a wedged worker silently ignores the arbiter
         if self._paused.is_set():
             self._paused.clear()
             self._resume.set()
+
+    def wedge(self):
+        """Chaos: silently hang the worker.  Requests keep queueing and
+        the server stays registered/routable, but nothing completes and
+        ``resume()`` is defeated until :meth:`unwedge` — the failure
+        mode only the stall health check can see."""
+        self._wedged = True
+        self.pause()
+
+    def unwedge(self):
+        self._wedged = False
+        self.resume()
 
     def _bucket_for(self, n: int) -> int:
         # scan the precomputed ladder: no per-dispatch allocation

@@ -33,6 +33,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import math
+import queue
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -68,6 +69,8 @@ class ClassStats:
     good: int = 0          # completed within the deadline
     batches: int = 0       # serving batches dispatched (sim service model)
     batch_occupancy: int = 0   # requests summed over those batches
+    retried: int = 0       # failed attempts re-submitted (reliability layer)
+    hedge_wasted: int = 0  # hedge copies whose sibling answered first
     latencies_ms: List[float] = dataclasses.field(default_factory=list)
 
     @property
@@ -90,6 +93,9 @@ class ClassStats:
                "goodput_rate": round(self.good / self.submitted, 4)
                if self.submitted else 0.0,
                "mean_batch": round(self.mean_batch, 3)}
+        if self.retried or self.hedge_wasted:
+            out["retried"] = self.retried
+            out["hedge_wasted"] = self.hedge_wasted
         for q in (50, 95, 99):
             # None (not NaN) when nothing completed: NaN != NaN breaks
             # report equality for deterministic-replay checks
@@ -104,6 +110,8 @@ class TrafficReport:
     policy: str
     classes: Dict[str, ClassStats]
     arbiter: dict = dataclasses.field(default_factory=dict)
+    # retry-budget accounting when a reliability layer ran (else empty)
+    reliability: dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_goodput(self) -> int:
@@ -114,12 +122,15 @@ class TrafficReport:
         return sum(s.dropped for s in self.classes.values())
 
     def summary(self) -> dict:
-        return {"policy": self.policy,
-                "total_goodput": self.total_goodput,
-                "total_dropped": self.total_dropped,
-                "classes": {n: s.summary()
-                            for n, s in self.classes.items()},
-                "arbiter": self.arbiter}
+        out = {"policy": self.policy,
+               "total_goodput": self.total_goodput,
+               "total_dropped": self.total_dropped,
+               "classes": {n: s.summary()
+                           for n, s in self.classes.items()},
+               "arbiter": self.arbiter}
+        if self.reliability:
+            out["reliability"] = self.reliability
+        return out
 
 
 def _register_classes(arbiter: ResourceArbiter, classes: Sequence[SLOClass],
@@ -358,6 +369,78 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                          arbiter=arbiter.summary())
 
 
+def _drain_reliable(pending, by_class, servers, make_input, stats,
+                    reliability, t0: float, timeout_s: float):
+    """Reliability-aware drain loop for :func:`drive_live`.
+
+    Polls outstanding futures; a FAILED attempt (error payload from a
+    fail-stopped node) is re-submitted through the cluster router after
+    its class's backoff — but only while the policy's attempt cap, the
+    cluster-wide retry budget, and the request's own deadline all still
+    allow it (a retry that could not land before the SLO deadline is
+    wasted work on a degraded cluster).  The retry's span tree links to
+    the first failed attempt's trace_id.  Returns the final
+    ``(name, future)`` list for the normal harvest loop — each arrival
+    contributes exactly one terminal future, so the accounting invariant
+    (submitted == rejected+dropped+failed+completed) is untouched.
+    """
+    budget = reliability.budget.fresh()
+    # entry: [name, fut-or-None, t_sub, attempts, retry_at, first_tid]
+    live = [[name, fut, t_sub, 1, 0.0, None]
+            for name, fut, t_sub in pending]
+    final: List = []
+    completed_seen = 0
+    deadline = time.perf_counter() + timeout_s
+    while live and time.perf_counter() < deadline:
+        nxt: List = []
+        for entry in live:
+            name, fut, t_sub, attempts, retry_at, first_tid = entry
+            now = time.perf_counter() - t0
+            if fut is None:               # parked for backoff
+                if now < retry_at:
+                    nxt.append(entry)
+                    continue
+                links = [first_tid] if first_tid is not None else []
+                nf = (servers[name].submit(make_input(name), links=links)
+                      if links else servers[name].submit(make_input(name)))
+                nxt.append([name, nf, t_sub, attempts, 0.0, first_tid])
+                continue
+            if fut.empty():
+                nxt.append(entry)
+                continue
+            out = fut.get()
+            if out.get("cancelled") and out.get("failed"):
+                pol = reliability.policy_for(name)
+                c = by_class[name]
+                t_retry = now + pol.backoff(attempts)
+                if (attempts < pol.max_attempts
+                        and t_retry <= t_sub + c.deadline_ms / 1e3
+                        and budget.allow(completed_seen)):
+                    stats[name].retried += 1
+                    tid = getattr(fut, "trace_id", None)
+                    nxt.append([name, None, t_sub, attempts + 1, t_retry,
+                                first_tid if first_tid is not None else tid])
+                    continue
+            if not out.get("cancelled"):
+                completed_seen += 1
+            fut.put(out)                  # hand back to the harvest loop
+            final.append((name, fut))
+        live = nxt
+        time.sleep(0.005)
+    for name, fut, *_ in live:            # timed out mid-flight / parked
+        if fut is None:
+            fut = _dead_live_future("retry window expired")
+        final.append((name, fut))
+    return final, budget
+
+
+def _dead_live_future(reason: str) -> "queue.Queue":
+    fut: "queue.Queue" = queue.Queue(maxsize=1)
+    fut.put({"y": None, "cancelled": True, "failed": True,
+             "error": reason, "latency_ms": 0.0, "subnet": None})
+    return fut
+
+
 def drive_live(classes: Sequence[SLOClass],
                servers: Dict[str, DynamicServer],
                arbiter: ResourceArbiter,
@@ -366,6 +449,7 @@ def drive_live(classes: Sequence[SLOClass],
                g_fn: Callable[[], GlobalConstraints],
                speed: float = 1.0, timeout_s: float = 120.0,
                record_path: Optional[str] = None, tracer=None,
+               reliability=None,
                metrics: Optional[MetricsRegistry] = None) -> TrafficReport:
     """Wall-clock open-loop driver: real requests to real servers.
 
@@ -384,6 +468,14 @@ def drive_live(classes: Sequence[SLOClass],
     multi-stream schedule JSON, so a real run becomes a regression trace:
     ``load_schedule`` feeds it back to :func:`simulate` (bit-identical
     replay) or ``launch.serve --trace <file>``.
+
+    ``reliability`` (a :class:`repro.chaos.Reliability`) turns on the
+    retry layer: failed attempts (fail-stopped replicas, chaos kills)
+    are re-routed through the cluster with per-class backoff, capped by
+    the policy's attempt limit, the cluster-wide retry budget, and the
+    request's own deadline; retries count in ``ClassStats.retried`` and
+    their span trees link to the first attempt.  (Hedging is a
+    virtual-time feature — see :func:`repro.cluster.sim.simulate_cluster`.)
     """
     by_class = {c.name: c for c in classes}
     stats = {c.name: ClassStats() for c in classes}
@@ -407,21 +499,33 @@ def drive_live(classes: Sequence[SLOClass],
             wait = ta / speed - (time.perf_counter() - t0)
             if wait > 0:
                 time.sleep(wait)
-            recorded[name].append(time.perf_counter() - t0)
-            pending.append((name, servers[name].submit(make_input(name))))
-        # wait for the fleet to drain; a starved server's requests may
-        # never run — arbiter.stop() below cancels them so no get() hangs
-        deadline = time.perf_counter() + timeout_s
-        while (time.perf_counter() < deadline
-               and any(fut.empty() for _, fut in pending)):
-            time.sleep(0.02)
+            now = time.perf_counter() - t0
+            recorded[name].append(now)
+            pending.append((name, servers[name].submit(make_input(name)),
+                            now))
+        rel_info: dict = {}
+        if reliability is not None:
+            pending, budget = _drain_reliable(
+                pending, by_class, servers, make_input, stats,
+                reliability, t0, timeout_s)
+            pending = [(name, fut, 0.0) for name, fut in pending]
+            rel_info = {"retry_granted": budget.granted,
+                        "retry_denied": budget.denied}
+        else:
+            # wait for the fleet to drain; a starved server's requests may
+            # never run — arbiter.stop() below cancels them so no get()
+            # hangs
+            deadline = time.perf_counter() + timeout_s
+            while (time.perf_counter() < deadline
+                   and any(fut.empty() for _, fut, _ in pending)):
+                time.sleep(0.02)
     finally:
         arbiter.stop()
     if record_path is not None:
         arr.save_schedule(record_path, recorded,
                           meta={"kind": "drive_live", "speed": speed,
                                 "classes": [c.name for c in classes]})
-    for name, fut in pending:
+    for name, fut, _ in pending:
         st = stats[name]
         st.submitted += 1
         try:
@@ -443,4 +547,4 @@ def drive_live(classes: Sequence[SLOClass],
         if lat <= by_class[name].deadline_ms:
             st.good += 1
     return TrafficReport(policy="live", classes=stats,
-                         arbiter=arbiter.summary())
+                         arbiter=arbiter.summary(), reliability=rel_info)

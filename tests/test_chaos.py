@@ -1,0 +1,483 @@
+"""PR 8: chaos injection + request reliability.
+
+* **scenario/timeline** — the seeded fault vocabulary, validation, the
+  DVFS ladder, lifecycle expansion (rack → N fails, spot → drain+fail)
+  and the flattened live event stream;
+* **sim tentpole** — chaos fail-stop rides the exact ``fail_at``
+  failover path; seeded scenario + seeded trace ⇒ bit-identical
+  reports; retries recover failed work under budget/deadline caps;
+  hedging and brownout keep the accounting invariant;
+* **satellites** — make-before-break migrations (zero drops during a
+  scripted move), retry span links through check_trace/Perfetto,
+  re-armable Watchdog + capped StragglerMonitor, the live
+  ChaosController replaying a scenario against a real cluster, and the
+  live retry drain loop.
+"""
+import queue
+import time
+
+import pytest
+
+from repro.chaos import (DEFAULT_LADDER, FAIL_STOP, PARTITION, RACK_FAIL,
+                         SPOT_PREEMPT, STRAGGLER, THERMAL, WEDGE,
+                         BrownoutPolicy, ChaosTimeline, Injection,
+                         Reliability, RetryBudget, RetryPolicy, Scenario,
+                         generate)
+from repro.chaos import engine as ce
+from repro.cluster import (DEAD, FIRST_FIT, P2C, ClusterNode,
+                           simulate_cluster)
+from repro.core.types import ElasticSpace
+from repro.distributed.fault import StragglerMonitor, Watchdog
+from repro.obs import Tracer, to_chrome_trace
+from repro.obs.analyze import check_trace
+from repro.runtime import GlobalConstraints, ResourceArbiter, model_lut
+from repro.runtime import hwmodel as hm
+from repro.traffic import DEGRADE, SHED, SLOClass, poisson
+
+TERMS = hm.RooflineTerms(t_compute=0.02, t_memory=0.008, t_collective=0.004)
+SPACE = ElasticSpace(width_mults=(0.5, 0.75, 1.0), ffn_mults=(0.5, 1.0),
+                     depth_mults=(0.5, 1.0))
+
+
+def make_lut(scale=1.0, full_chips=256):
+    terms = hm.RooflineTerms(TERMS.t_compute * scale, TERMS.t_memory * scale,
+                             TERMS.t_collective * scale)
+    return model_lut(SPACE.enumerate(), full_terms=terms,
+                     full_chips=full_chips)
+
+
+def make_nodes(capacities):
+    return [ClusterNode(name=f"n{i}",
+                        g_fn=lambda t, c=cap: GlobalConstraints(total_chips=c))
+            for i, cap in enumerate(capacities)]
+
+
+def invariant(report):
+    for st in report.classes.values():
+        assert st.submitted == (st.rejected + st.dropped + st.failed
+                                + st.completed)
+
+
+# --- scenario vocabulary -----------------------------------------------------
+
+def test_injection_validation():
+    with pytest.raises(ValueError):
+        Injection(t=0.0, kind="meteor", node="n0")
+    with pytest.raises(ValueError):
+        Injection(t=0.0, kind=RACK_FAIL)            # needs `nodes`
+    with pytest.raises(ValueError):
+        Injection(t=0.0, kind=STRAGGLER)            # needs `node`
+    inj = Injection(t=1.0, kind=RACK_FAIL, nodes=("n0", "n1"))
+    assert inj.targets() == ("n0", "n1")
+    assert Injection(t=0.0, kind=WEDGE, node="n2").targets() == ("n2",)
+
+
+def test_scenario_sorts_and_summarises():
+    sc = Scenario(name="s", injections=(
+        Injection(t=2.0, kind=FAIL_STOP, node="n1"),
+        Injection(t=1.0, kind=RACK_FAIL, nodes=("n0", "n2"))))
+    assert [i.t for i in sc.injections] == [1.0, 2.0]
+    assert sc.summary() == [(1.0, RACK_FAIL, "n0"), (1.0, RACK_FAIL, "n2"),
+                            (2.0, FAIL_STOP, "n1")]
+
+
+def test_generate_is_seeded():
+    names = ["n0", "n1", "n2"]
+    racks = {"r0": ["n0", "n1"]}
+    a = generate(11, 10.0, names, racks=racks, n_faults=6)
+    b = generate(11, 10.0, names, racks=racks, n_faults=6)
+    assert a == b
+    c = generate(12, 10.0, names, racks=racks, n_faults=6)
+    assert a != c
+    for inj in a.injections:
+        assert inj.kind in (STRAGGLER, THERMAL, WEDGE, SPOT_PREEMPT,
+                            PARTITION, RACK_FAIL, FAIL_STOP)
+
+
+# --- timeline compilation ----------------------------------------------------
+
+def test_timeline_rejects_unknown_nodes():
+    sc = Scenario(injections=(Injection(t=0.0, kind=WEDGE, node="ghost"),))
+    with pytest.raises(ValueError):
+        ChaosTimeline(sc, ["n0", "n1"])
+
+
+def test_straggler_and_partition_windows():
+    sc = Scenario(injections=(
+        Injection(t=1.0, kind=STRAGGLER, node="n0", factor=2.0,
+                  duration_s=2.0),
+        Injection(t=2.0, kind=STRAGGLER, node="n0", factor=3.0,
+                  duration_s=2.0),
+        Injection(t=1.0, kind=PARTITION, node="n1", duration_s=1.0)))
+    tl = ChaosTimeline(sc, ["n0", "n1"])
+    assert tl.latency_mult("n0", 0.5) == 1.0
+    assert tl.latency_mult("n0", 1.5) == 2.0
+    assert tl.latency_mult("n0", 2.5) == 6.0     # overlapping windows stack
+    assert tl.latency_mult("n0", 3.5) == 3.0
+    assert tl.latency_mult("n0", 4.5) == 1.0
+    assert not tl.partitioned("n1", 0.5)
+    assert tl.partitioned("n1", 1.5)
+    assert not tl.partitioned("n1", 2.0)         # half-open window
+
+
+def test_thermal_ladder_steps_then_recovers():
+    sc = Scenario(injections=(
+        Injection(t=0.0, kind=THERMAL, node="n0", duration_s=4.0),))
+    tl = ChaosTimeline(sc, ["n0"])
+    seen = [tl.throttle("n0", 0.5 + i) for i in range(4)]
+    assert seen == list(DEFAULT_LADDER)          # walks the whole ladder
+    assert tl.throttle("n0", 4.0) == 1.0         # instant recovery
+
+
+def test_lifecycle_expansion():
+    sc = Scenario(injections=(
+        Injection(t=1.0, kind=RACK_FAIL, nodes=("n0", "n1")),
+        Injection(t=2.0, kind=SPOT_PREEMPT, node="n2", notice_s=0.5),
+        Injection(t=3.0, kind=WEDGE, node="n0")))
+    tl = ChaosTimeline(sc, ["n0", "n1", "n2"])
+    assert tl.lifecycle() == [
+        (1.0, ce.FAIL, "n0"), (1.0, ce.FAIL, "n1"),
+        (2.0, ce.DRAIN, "n2"), (2.5, ce.FAIL, "n2"),
+        (3.0, ce.WEDGE_ON, "n0")]
+    # the flattened live stream includes window ENDS and ladder steps
+    evs = ChaosTimeline(Scenario(injections=(
+        Injection(t=0.0, kind=STRAGGLER, node="n0", factor=2.0,
+                  duration_s=1.0),
+        Injection(t=0.0, kind=THERMAL, node="n0", duration_s=2.0),)),
+        ["n0"]).events()
+    assert evs == sorted(evs)
+    actions = [a for _, a, _, _ in evs]
+    assert actions.count(ce.THROTTLE) == len(DEFAULT_LADDER) + 1
+    assert ce.STRAGGLE_OFF in actions
+
+
+def test_node_chaos_overlay_on_constraints():
+    node = make_nodes([64])[0]
+    assert node.g(0.0).total_chips == 64
+    node.chaos_throttle = 0.5
+    node.chaos_capacity = 0.5
+    g = node.g(0.0)
+    assert g.total_chips == 32
+    assert g.temperature_throttle == 0.5
+    node.chaos_throttle = node.chaos_capacity = 1.0
+    assert node.g(0.0).total_chips == 64
+
+
+# --- sim: chaos rides the scripted failover machinery ------------------------
+
+def _cls(name="api", deadline_ms=800.0, drop=SHED, priority=2):
+    return SLOClass(name, deadline_ms=deadline_ms, priority=priority,
+                    drop_policy=drop)
+
+
+def _run(chaos=None, reliability=None, caps=(64, 64), rate=300.0,
+         horizon=3.0, seed=1, **kw):
+    cls = [_cls()]
+    return simulate_cluster(cls, {"api": make_lut()},
+                            {"api": poisson(rate, horizon, seed=seed)},
+                            make_nodes(list(caps)), router=P2C,
+                            chaos=chaos, reliability=reliability, **kw)
+
+
+def test_chaos_fail_stop_matches_fail_at_scripting():
+    sc = Scenario(injections=(Injection(t=1.0, kind=FAIL_STOP, node="n0"),))
+    a = _run(chaos=sc)
+    b = _run(fail_at={"n0": 1.0})
+    assert a.decisions == b.decisions
+    assert {n: s.summary() for n, s in a.classes.items()} == \
+           {n: s.summary() for n, s in b.classes.items()}
+    assert a.injections == [(1.0, FAIL_STOP, "n0")]
+    assert b.injections == []
+
+
+def test_chaos_determinism_bit_identical():
+    names = ["n0", "n1", "n2"]
+    sc = generate(5, 2.5, names, racks={"r0": ["n1", "n2"]}, n_faults=5)
+    rel = Reliability()
+    runs = [_run(chaos=sc, reliability=rel, caps=(64, 64, 64))
+            for _ in range(2)]
+    assert runs[0].summary() == runs[1].summary()
+    assert runs[0].decisions == runs[1].decisions
+    assert runs[0].injections == sorted(sc.summary())
+    for r in runs:
+        invariant(r)
+
+
+def test_retry_recovers_failed_work():
+    sc = Scenario(injections=(Injection(t=1.0, kind=FAIL_STOP, node="n0"),))
+    off = _run(chaos=sc)
+    assert off.total_failed > 0                   # queued work died with n0
+    rel = Reliability(default=RetryPolicy(max_attempts=3, backoff_s=0.05),
+                      budget=RetryBudget(burst=1000, fraction=1.0),
+                      brownout=None)
+    on = _run(chaos=sc, reliability=rel)
+    st = on.classes["api"]
+    assert st.retried > 0
+    assert on.retry_granted == sum(s.retried for s in on.classes.values())
+    assert on.total_failed < off.total_failed     # retries landed elsewhere
+    invariant(on)
+
+
+def test_never_retry_past_deadline():
+    sc = Scenario(injections=(Injection(t=1.0, kind=FAIL_STOP, node="n0"),))
+    # backoff alone blows the 800ms deadline: every retry is refused
+    rel = Reliability(default=RetryPolicy(max_attempts=3, backoff_s=10.0),
+                      brownout=None)
+    r = _run(chaos=sc, reliability=rel)
+    assert r.retry_denied["deadline"] > 0
+    assert r.classes["api"].retried == 0
+    assert r.retry_granted == 0
+    invariant(r)
+
+
+def test_retry_budget_exhaustion():
+    sc = Scenario(injections=(Injection(t=1.0, kind=FAIL_STOP, node="n0"),))
+    rel = Reliability(default=RetryPolicy(max_attempts=3, backoff_s=0.05),
+                      budget=RetryBudget(burst=0, fraction=0.0),
+                      brownout=None)
+    r = _run(chaos=sc, reliability=rel)
+    assert r.retry_denied["budget"] > 0
+    assert r.classes["api"].retried == 0
+    assert r.retry_granted == 0
+    invariant(r)
+
+
+def test_hedged_requests_first_completion_wins():
+    rel = Reliability(policies={"api": RetryPolicy(hedge=True)},
+                      brownout=None)
+    r = _run(reliability=rel, rate=200.0)
+    st = r.classes["api"]
+    assert st.hedge_wasted > 0                    # losers are accounted...
+    assert st.completed <= st.submitted           # ...never double-counted
+    invariant(r)
+    # the hedged run completes no fewer requests than the plain one
+    plain = _run(rate=200.0)
+    assert st.completed >= plain.classes["api"].completed - 1
+
+
+def test_retry_span_links_flow_to_export():
+    sc = Scenario(injections=(Injection(t=1.0, kind=FAIL_STOP, node="n0"),))
+    rel = Reliability(default=RetryPolicy(max_attempts=3, backoff_s=0.05),
+                      budget=RetryBudget(burst=1000, fraction=1.0),
+                      brownout=None)
+    tracer = Tracer()
+    r = _run(chaos=sc, reliability=rel, tracer=tracer)
+    assert r.classes["api"].retried > 0
+    linked = [tr for tr in tracer.requests() if tr.links]
+    assert linked                                 # second attempts link back
+    by_id = {tr.trace_id: tr for tr in tracer.requests()}
+    for tr in linked:
+        for rid in tr.links:
+            first = by_id[rid]
+            assert first.cls == tr.cls
+            assert first.t1 <= tr.t0 + 1e-9       # causally prior
+    check_trace(linked[0])                        # components still partition
+    doc = to_chrome_trace(tracer)
+    ids = {tr.trace_id for tr in linked}
+    ev_links = [e["args"]["links"] for e in doc["traceEvents"]
+                if e.get("args", {}).get("trace_id") in ids]
+    assert ev_links and all(l for l in ev_links)
+
+
+def test_make_before_break_zero_drops():
+    """A scripted move (replicas=1, first_fit start on the small node,
+    rebalance onto the big one) keeps the SOURCE routable until the
+    destination's priced warmup lands: no arrival is dropped mid-move."""
+    nodes = [ClusterNode(name="n0", g_fn=lambda t: GlobalConstraints(
+                 total_chips=128 if t < 0.9 else 2)),   # shrinks pre-move
+             ClusterNode(name="n1", g_fn=lambda t: GlobalConstraints(
+                 total_chips=256))]
+    cls = [_cls(drop=DEGRADE, deadline_ms=2000.0)]
+    r = simulate_cluster(cls, {"api": make_lut()},
+                         {"api": poisson(400.0, 3.0, seed=2)},
+                         nodes, router=P2C,
+                         placement_mode=FIRST_FIT, replicas=1,
+                         rebalance_at=[1.0], hysteresis=0.0)
+    moves = [m for m in r.migrations if m[1] == "api"
+             and m[2] is not None and m[3] is not None]
+    assert moves                                  # a true src→dst move ran
+    st = r.classes["api"]
+    # before make-before-break the source retired at the move instant,
+    # leaving only a weight-0 warming destination: arrivals during the
+    # warmup window were dropped "placements exist but none routable"
+    assert st.dropped == 0
+    assert st.completed == st.submitted
+    invariant(r)
+
+
+def test_brownout_enters_and_exits_under_pressure():
+    """Partitioning EVERY replica makes each arrival a failed route: the
+    pressure EWMA crosses the enter threshold, the class browns out
+    (arbiter pinned to the DEGRADE target), and once the partition
+    heals and completions resume it exits again."""
+    sc = Scenario(injections=(
+        Injection(t=1.0, kind=PARTITION, node="n0", duration_s=1.0),
+        Injection(t=1.0, kind=PARTITION, node="n1", duration_s=1.0)))
+    rel = Reliability(default=RetryPolicy(max_attempts=2, backoff_s=0.05),
+                      budget=RetryBudget(burst=10000, fraction=1.0),
+                      brownout=BrownoutPolicy())
+    r = _run(chaos=sc, reliability=rel, rate=200.0, horizon=4.0)
+    directions = [d for _, _, d in r.brownouts]
+    assert "enter" in directions
+    assert "exit" in directions
+    assert directions.index("enter") < directions.index("exit")
+    ts = [t for t, _, _ in r.brownouts]
+    assert ts == sorted(ts)
+    invariant(r)
+
+
+def test_arbiter_set_brownout_pins_and_restores():
+    arb = ResourceArbiter()
+    arb.register("api", make_lut(), 400.0, priority=2)
+    arb.set_brownout("api", 1600.0)
+    row = arb.summary()["api"]
+    assert row["brownout"]
+    arb.set_brownout("api", 1600.0)               # idempotent
+    arb.set_brownout("api", None)
+    row = arb.summary()["api"]
+    assert "brownout" not in row or not row["brownout"]
+
+
+# --- distributed/fault hardening ---------------------------------------------
+
+def test_watchdog_rearms_after_recovery():
+    fired = []
+    wd = Watchdog(timeout_s=0.15, on_stall=lambda: fired.append(1)).start()
+    try:
+        time.sleep(0.5)
+        assert wd.stalled and wd.stall_count == 1 and len(fired) == 1
+        time.sleep(0.4)                   # same stall: no repeat firing
+        assert wd.stall_count == 1
+        wd.beat()                         # recovery re-arms
+        assert not wd.stalled
+        time.sleep(0.5)
+        assert wd.stalled and wd.stall_count == 2 and len(fired) == 2
+    finally:
+        wd.stop()
+
+
+def test_straggler_monitor_flag_log_is_bounded():
+    mon = StragglerMonitor(window=50, threshold=2.0, log_cap=3)
+    for step in range(10):
+        assert not mon.record(step, 1.0)
+    flagged = sum(mon.record(10 + i, 10.0) for i in range(6))
+    assert flagged >= 4                   # slow steps really are outliers
+    assert len(mon.flags) == 3            # capped deque...
+    assert mon.flags_dropped >= 1         # ...with an eviction counter
+    assert mon.flags[-1]["seconds"] == 10.0
+
+
+# --- live: ChaosController + retry drain loop --------------------------------
+
+def tiny_server(*_node):
+    import jax
+    from repro.models.vit import ViTConfig, vit_apply, vit_init
+    from repro.runtime import DynamicServer
+    cfg = ViTConfig(name="t", img_res=16, patch=8, n_layers=2,
+                    d_model=32, n_heads=4, d_ff=64, n_classes=4,
+                    compute_dtype="float32")
+    params = vit_init(jax.random.PRNGKey(0), cfg)
+    dims = {"d_model": 32, "d_ff": 64, "n_heads": 4, "n_layers": 2}
+    return DynamicServer(lambda p, x, E: vit_apply(p, x, cfg, E=E)[0],
+                         params, dims)
+
+
+def live_lut():
+    from repro.core.types import SubnetSpec
+    return model_lut([SubnetSpec()], full_terms=TERMS, full_chips=2,
+                     hw_states=[hm.HwState(chips=1, freq=1.0)])
+
+
+def test_live_chaos_controller_replays_scenario():
+    import numpy as np
+    from repro.chaos import ChaosController
+    from repro.cluster import Cluster
+    nodes = [ClusterNode(name=f"n{i}",
+                         g_fn=lambda t: GlobalConstraints(total_chips=2))
+             for i in range(2)]
+    cluster = Cluster(nodes, router=P2C)
+    cluster.register("api", live_lut(), target_latency_ms=500.0,
+                     priority=1, make_server=tiny_server)
+    sc = Scenario(name="live-day", injections=(
+        Injection(t=0.0, kind=STRAGGLER, node="n0", factor=2.0,
+                  duration_s=0.2),
+        Injection(t=0.05, kind=PARTITION, node="n0", duration_s=0.1),
+        Injection(t=0.3, kind=FAIL_STOP, node="n0")))
+    cluster.start()
+    try:
+        ctl = ChaosController(cluster, sc).start()
+        deadline = time.time() + 10.0
+        while not ctl.done and time.time() < deadline:
+            time.sleep(0.02)
+        assert ctl.done
+        # every flattened primitive event was applied, in order
+        assert [a for _, a, _ in ctl.applied] == \
+               [a for _, a, _, _ in ctl.timeline.events()]
+        assert cluster.nodes["n0"].state == DEAD
+        assert cluster.nodes["n0"].chaos_capacity == 1.0  # window closed
+        # the survivor still serves after the whole chaos day
+        x = np.zeros((16, 16, 3), "float32")
+        outs = [cluster.submit("api", x).get(timeout=30) for _ in range(4)]
+        assert all(not o.get("cancelled") for o in outs)
+    finally:
+        cluster.stop()
+
+
+class _FakeServer:
+    """submit() succeeds immediately; records the span links passed."""
+
+    def __init__(self):
+        self.links_seen = []
+
+    def submit(self, x, links=()):
+        self.links_seen.append(list(links))
+        fut = queue.Queue(maxsize=1)
+        fut.put({"y": 1, "cancelled": False, "failed": False,
+                 "latency_ms": 1.0, "subnet": None})
+        fut.trace_id = 99
+        return fut
+
+
+def _failed_fut(trace_id=7):
+    fut = queue.Queue(maxsize=1)
+    fut.put({"y": None, "cancelled": True, "failed": True,
+             "error": "node failed", "latency_ms": 0.0, "subnet": None})
+    fut.trace_id = trace_id
+    return fut
+
+
+def test_drain_reliable_retries_failed_attempt_with_links():
+    from repro.traffic.driver import ClassStats, _drain_reliable
+    srv = _FakeServer()
+    stats = {"api": ClassStats()}
+    rel = Reliability(default=RetryPolicy(max_attempts=3, backoff_s=0.01),
+                      brownout=None)
+    t0 = time.perf_counter()
+    final, budget = _drain_reliable(
+        [("api", _failed_fut(trace_id=7), 0.0)],
+        {"api": _cls(deadline_ms=5000.0)}, {"api": srv}, lambda n: None,
+        stats, rel, t0, timeout_s=5.0)
+    assert stats["api"].retried == 1
+    assert budget.granted == 1
+    assert srv.links_seen == [[7]]        # retry linked to first attempt
+    assert len(final) == 1
+    out = final[0][1].get()
+    assert not out.get("cancelled")       # the retry's answer wins
+
+
+def test_drain_reliable_respects_deadline():
+    from repro.traffic.driver import ClassStats, _drain_reliable
+    srv = _FakeServer()
+    stats = {"api": ClassStats()}
+    rel = Reliability(default=RetryPolicy(max_attempts=3, backoff_s=10.0),
+                      brownout=None)
+    t0 = time.perf_counter()
+    final, budget = _drain_reliable(
+        [("api", _failed_fut(), 0.0)],
+        {"api": _cls(deadline_ms=100.0)}, {"api": srv}, lambda n: None,
+        stats, rel, t0, timeout_s=5.0)
+    assert stats["api"].retried == 0      # backoff blows the deadline
+    assert budget.granted == 0
+    assert srv.links_seen == []           # never resubmitted
+    out = final[0][1].get()
+    assert out["cancelled"] and out["failed"]
