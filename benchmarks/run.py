@@ -12,7 +12,9 @@ BENCH_5.json the calibration loop: closed-loop energy ratio and replay
 p95-error ratio, BENCH_6.json the placement engine: rebalanced-vs-static
 goodput under skew and the zero-migration steady-load guard,
 BENCH_8.json the chaos day: reliability-on vs reliability-off goodput
-under a rack failure + thermal + partition scenario).
+under a rack failure + thermal + partition scenario, BENCH_9.json the
+watchtower throttle day: alert-driven actuation vs reactive baseline
+plus burn-rate attribution accuracy).
 
 ``--suite SUBSTR`` runs only the suites whose title contains SUBSTR —
 the tier-1 smoke test uses it to gate the placement headline in seconds
@@ -56,6 +58,12 @@ HEADLINES = {
     # retries may never exceed the cluster budget allowance
     "chaos/lost_futures": {"max": 0.0},
     "chaos/retry_budget_frac": {"max": 1.0},
+    # absolute floor: fired alerts whose attribution names the
+    # injected root cause on the seeded throttle day
+    "slo/attribution_accuracy": {"min": 0.8},
+    # absolute floor: alert-driven actuation must not make the day
+    # worse than the reactive baseline (time-in-SLO ratio)
+    "slo/alerted_time_in_slo_ratio": {"min": 1.0},
 }
 REGRESSION_TOL = 0.10
 
@@ -113,6 +121,7 @@ def main() -> None:
     import benchmarks.bench_obs as bo
     import benchmarks.bench_pareto as bp
     import benchmarks.bench_placement as bpl
+    import benchmarks.bench_slo as bslo
     import benchmarks.bench_switching as bs
     import benchmarks.bench_traffic as bt
     import benchmarks.roofline_table as rt
@@ -146,6 +155,8 @@ def main() -> None:
          lambda: bo.run(smoke=args.smoke)),
         ("chaos (seeded fault day: reliability on vs off)",
          lambda: bch.run(smoke=args.smoke)),
+        ("slo (watchtower throttle day: alert-driven vs reactive)",
+         lambda: bslo.run(smoke=args.smoke)),
         ("switching (paper: runtime architecture switching)", bs.run),
         ("kernels (elastic matmul / flash attention)", bk.run),
         ("roofline (dry-run derived)", rt.rows),

@@ -1,6 +1,6 @@
 """Multi-node cluster serving walkthrough.
 
-Seven acts:
+Eight acts:
 
 1. **Scale-out (virtual time)** — one overloaded SLO class replayed
    against 1-node and 2-node clusters through the deterministic
@@ -47,6 +47,18 @@ Seven acts:
    backoff, interactive requests hedge onto a second replica, and
    sustained pressure brownouts the class to its degraded target —
    the interactive p95 stays inside the SLO across the whole day.
+8. **SLO watchtower (virtual time)** — a deep thermal DVFS ladder
+   throttles both serving nodes: completions come back LATE without a
+   single failure, so act 7's failure-pressure EWMA never trips.  A
+   :class:`repro.obs.Watchtower` fed by the same span pipeline fires a
+   multi-window fast-burn page within epochs, the alert's attribution
+   names ``chaos:thermal`` as the root cause (the span decomposition
+   shows where the latency went, the injection log shows why), and —
+   replayed with ``actuate=True`` — alert pressure boosts the class's
+   water-fill demand, relaxes its quality target without suspending
+   admission control, and wakes the standby pool NOW instead of at the
+   scheduled autoscale instant: the interactive p95 lands back inside
+   the SLO.
 
     PYTHONPATH=src python examples/cluster_serving.py
 """
@@ -353,6 +365,64 @@ def act_7_chaos_day_reliability():
           f"{sn.p(95) <= 600.0} (goodput {sn.good} vs {so.good} bare)")
 
 
+def act_8_slo_watchtower():
+    print("== act 8: thermal burn -> paged alert -> early actuation ==")
+    from repro.chaos import THERMAL, Injection, Scenario
+    from repro.obs import Tracer, Watchtower, format_alerts
+    lut = model_lut(SPACE.enumerate(), full_terms=TERMS, full_chips=256)
+    cls = [SLOClass("interactive", deadline_ms=600.0, priority=3,
+                    drop_policy=SHED, degrade_factor=1.5),
+           SLOClass("batch", deadline_ms=2500.0, priority=1,
+                    drop_policy=DEGRADE)]
+    horizon = 8.0
+    # both serving nodes walk a DEEP DVFS ladder (the stock one bottoms
+    # at 0.5x, which this fleet absorbs): requests finish LATE, nothing
+    # fails — invisible to act 7's failure-pressure EWMA
+    day = Scenario(name="throttle-day", injections=(
+        Injection(t=2.0, kind=THERMAL, node="n0", duration_s=horizon - 3,
+                  ladder=(0.2, 0.12, 0.08)),
+        Injection(t=2.0, kind=THERMAL, node="n1", duration_s=horizon - 3,
+                  ladder=(0.2, 0.12, 0.08))))
+
+    def run(actuate):
+        nodes = make_nodes([16] * 4)
+        for n in nodes[2:]:
+            n.state = STANDBY       # half the fleet is a standby pool
+        tracer = Tracer(clock=lambda: 0.0)
+        wt = Watchtower({"interactive": 0.999, "batch": 0.99},
+                        time_scale=horizon / 86400.0, tracer=tracer,
+                        actuate=actuate, rebalance_on_alert=actuate)
+        rep = simulate_cluster(
+            cls, {"interactive": lut, "batch": lut},
+            {"interactive": poisson(200.0, horizon, seed=7),
+             "batch": poisson(100.0, horizon, seed=8)},
+            nodes, router=P2C, chaos=day, tracer=tracer, watchtower=wt,
+            scale_at=(0.8 * horizon,), min_nodes=2)
+        return rep, wt
+
+    reactive, wt_off = run(actuate=False)
+    alerted, wt_on = run(actuate=True)
+    print("  the alert log (monitoring-only day):")
+    for line in format_alerts(reactive.alerts).splitlines()[:3]:
+        print(f"    {line}")
+    top = reactive.alerts[0].attribution
+    print(f"  attribution: {top.component} regressed "
+          f"+{top.delta_ms:.0f}ms -> {top.cause}")
+    t_up = {name: min((t for t, d, _ in rep.scale_events if d == "up"),
+                      default=float("nan"))
+            for name, rep in (("reactive", reactive), ("alerted", alerted))}
+    print(f"  standby wake-up: scheduled t={t_up['reactive']:.1f}s vs "
+          f"alert-driven t={t_up['alerted']:.1f}s "
+          f"(scale_at was {0.8 * horizon:.1f}s)")
+    so, sn = reactive.classes["interactive"], alerted.classes["interactive"]
+    print(f"  reactive: p95={so.p(95):.0f}ms goodput={so.good} "
+          f"time-in-SLO={wt_off.time_in_slo('interactive'):.3f}")
+    print(f"  alerted:  p95={sn.p(95):.0f}ms goodput={sn.good} "
+          f"time-in-SLO={wt_on.time_in_slo('interactive'):.3f}")
+    print(f"  interactive p95 back inside the 600ms SLO: "
+          f"{sn.p(95) <= 600.0}")
+
+
 if __name__ == "__main__":
     act_1_scale_out()
     act_2_skewed_routing()
@@ -361,3 +431,4 @@ if __name__ == "__main__":
     act_5_placement_engine()
     act_6_trace_a_tail_request()
     act_7_chaos_day_reliability()
+    act_8_slo_watchtower()

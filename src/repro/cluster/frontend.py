@@ -304,6 +304,19 @@ class Cluster:
                     moves=len(plan.moves), preemptions=len(evs))
             return plan
 
+    def set_alert_pressure(self, name: str, pressure: float):
+        """Forward a watchtower alert-pressure signal to every replica's
+        arbiter: each node scales the class's backlog demand by
+        ``1 + pressure`` in its next water-fill (0.0 clears it).  The
+        live counterpart of the simulator's actuation hook — drive_live
+        calls this as its watchtower evaluates."""
+        with self._lock:
+            placed = list(self.placements.get(name, ()))
+        for nn in placed:
+            node = self.nodes[nn]
+            if node.alive and name in node.arbiter.tenants():
+                node.arbiter.set_alert_pressure(name, pressure)
+
     def _retire_replica(self, name: str, node_name: str):
         """Take one replica out: stop routing to it, drain its queue,
         export the registration (server stays up until drained)."""

@@ -129,6 +129,9 @@ class ClusterReport:
     # brownout transitions: (t, cls, "enter"/"exit")
     brownouts: List[Tuple[float, str, str]] = dataclasses.field(
         default_factory=list)
+    # SLO watchtower alerts fired during the run (rising edges), in
+    # firing order — typed repro.obs.health.Alert records
+    alerts: List = dataclasses.field(default_factory=list)
     # reliability accounting: retries granted by the cluster budget, and
     # the ones turned away (past-deadline / budget-exhausted / attempt cap)
     retry_granted: int = 0
@@ -169,6 +172,8 @@ class ClusterReport:
                 "unplaceable": list(self.unplaceable),
                 "injections": list(self.injections),
                 "brownouts": list(self.brownouts),
+                "alerts": [[round(a.t, 6), a.cls, a.window, a.severity]
+                           for a in self.alerts],
                 "retry_granted": self.retry_granted,
                 "retry_denied": dict(self.retry_denied),
                 "log_dropped": dict(self.log_dropped),
@@ -190,6 +195,7 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                      wedge_at: Optional[Dict[str, float]] = None,
                      chaos: Optional[Scenario] = None,
                      reliability: Optional[Reliability] = None,
+                     watchtower=None,
                      health_epochs: Optional[int] = None,
                      calibration=None,
                      placement_mode: str = REPLICATE,
@@ -250,6 +256,18 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     shedding is suspended — serve degraded instead of dropping — until
     the pressure decays below the exit threshold.  Retried requests'
     span trees link to their first failed attempt (``links=``).
+
+    ``watchtower`` (a :class:`repro.obs.Watchtower`) closes the
+    monitor→diagnose→actuate loop: each epoch's per-class outcomes
+    (late completions, drops, failures) feed its burn-rate monitors,
+    fired alerts land on ``report.alerts`` with attribution, and —
+    when it ``actuate``\\ s — an active fast-burn alert (a) scales the
+    class's backlog in every hosting arbiter via ``set_alert_pressure``
+    and (b) browns the class out BEFORE the failure-pressure EWMA
+    would (the EWMA only sees failures/retries; the alert also sees
+    late completions, so a pure latency fault like a thermal throttle
+    actuates epochs earlier).  ``rebalance_on_alert`` additionally
+    runs the cluster rebalancer on each rising-edge alert.
 
     The **placement engine** (PR 6) is scripted the same way lifecycle
     is: ``rebalance_at`` lists the virtual seconds the cluster-wide
@@ -317,6 +335,10 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     next_gid = 0
     brown_on = {c.name: False for c in classes}
     brown_p = {c.name: 0.0 for c in classes}
+    # alert-driven degrade (watchtower): relaxes the arbiter target like
+    # brown_on but does NOT suspend the shed check — tracked separately
+    # so the two brownout paths can overlap without fighting
+    wt_brown = {c.name: False for c in classes}
     brownouts: List[Tuple[float, str, str]] = []
     injections: List[Tuple[float, str, str]] = []
     # per-run accounting lives in a metrics registry (the report reads
@@ -325,6 +347,27 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     m = metrics if metrics is not None else MetricsRegistry()
     completions = {n.name: m.counter("sim_completions_total", node=n.name)
                    for n in nodes}   # liveness counters
+    # per-class latency histogram: buckets carry exemplar trace ids so
+    # a fired alert links straight to retained p99 traces
+    lat_hist = {c.name: m.histogram("cluster_request_ms", cls=c.name)
+                for c in classes}
+    # --- SLO watchtower -----------------------------------------------------
+    wt = watchtower
+    run_alerts: List = []
+    if wt is not None:
+        if wt.tracer is None:
+            wt.tracer = tracer
+        if wt.registry is None:
+            wt.registry = m
+        if chaos is not None:
+            # note every scheduled injection up front (attribution only
+            # considers ones whose time has passed) — durations matter
+            # for deciding whether a transient fault is still a suspect
+            for inj in chaos.injections:
+                for nn2 in (inj.targets() if hasattr(inj, "targets")
+                            else ((inj.node,) if inj.node else ())):
+                    wt.note_injection(inj.t, inj.kind, nn2,
+                                      duration_s=inj.duration_s)
     health = {n.name: StallDetector(epochs=health_epochs or 0)
               for n in nodes} if health_epochs else {}
     # event logs are bounded like the front-end's (switch_log idiom:
@@ -544,7 +587,7 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
             node.arbiter.register(cn, luts[cn], reg_info[cn]["target"],
                                   priority=reg_info[cn]["priority"],
                                   min_accuracy=reg_info[cn]["min_accuracy"])
-            if brown_on.get(cn):
+            if brown_on.get(cn) or wt_brown.get(cn):
                 # class is browned out: the new replica serves the same
                 # degraded target its siblings were pinned to
                 node.arbiter.set_brownout(cn,
@@ -578,8 +621,21 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 else:
                     stats[cn].dropped += len(q)
             else:
+                moved = []
+                for it in q:
+                    if tracer is not None and it.first_rid < 0:
+                        # preemption span link (ROADMAP follow-up a):
+                        # record the preempted attempt's truncated tree
+                        # (routed at it.t, queued on nn until the cut)
+                        # so the second service attempt links back to it
+                        frid = tracer.request(
+                            cn, it.t, t, node=nn, spans=[
+                                (obs.ROUTE, it.t, it.t, None),
+                                (obs.QUEUE, it.t, t, None)])
+                        it = dataclasses.replace(it, first_rid=frid)
+                    moved.append(it)
                 queues[home][cn] = collections.deque(
-                    sorted(list(queues[home][cn]) + list(q),
+                    sorted(list(queues[home][cn]) + moved,
                            key=lambda r: (r.t, r.t0)))
             q.clear()
         busy_until[nn][cn] = 0.0
@@ -787,6 +843,10 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                                stats[cn].completed + stats[cn].failed
                                + stats[cn].dropped + stats[cn].retried)
                           for cn in stats}
+        if wt is not None:
+            wt_snap = {cn: (stats[cn].good, stats[cn].completed,
+                            stats[cn].dropped, stats[cn].failed)
+                       for cn in stats}
 
         def route_candidates(cn: str, ta: float):
             """Routable placements minus chaos-partitioned edges."""
@@ -940,6 +1000,7 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                         if lat_ms <= c.deadline_ms:
                             st.good += 1
                         if tracer is None:
+                            lat_hist[cn].observe(lat_ms)
                             continue
                         # virtual-time span tree, same schema as live:
                         # host-side stages are zero-width points at batch
@@ -962,11 +1023,12 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                             (obs.DISPATCH, start, start, None),
                             (obs.DEVICE, start, done, dev_attrs),
                             (obs.COMPLETE, done, done, None)])
-                        tracer.request(cn, it.t, done, node=nn,
-                                       spans=spans,
-                                       links=([it.first_rid]
-                                              if it.first_rid >= 0
-                                              else ()))
+                        rid = tracer.request(cn, it.t, done, node=nn,
+                                             spans=spans,
+                                             links=([it.first_rid]
+                                                    if it.first_rid >= 0
+                                                    else ()))
+                        lat_hist[cn].observe(lat_ms, exemplar=rid)
 
         # --- stall-based health check (end of epoch) ------------------------
         for node in nodes:
@@ -1010,12 +1072,78 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 elif brown_on[cn] and brown_p[cn] <= bp.exit_pressure:
                     brown_on[cn] = False
                     brownouts.append((t_next, cn, "exit"))
-                    for nn2 in placements[cn]:
-                        if cn in by_node[nn2].arbiter.tenants():
-                            by_node[nn2].arbiter.set_brownout(cn, None)
+                    if not wt_brown[cn]:
+                        # watchtower still burning: its alert owns the
+                        # degraded target until it clears
+                        for nn2 in placements[cn]:
+                            if cn in by_node[nn2].arbiter.tenants():
+                                by_node[nn2].arbiter.set_brownout(cn, None)
                     if tracer is not None:
                         tracer.decision(obs.BROWNOUT, t_next, t_next,
                                         cls=cn, direction="exit")
+
+        # --- SLO watchtower: feed outcomes, evaluate, actuate ---------------
+        if wt is not None:
+            for cn, st in stats.items():
+                g0, c0, d0, f0 = wt_snap[cn]
+                d_good = st.good - g0
+                bad = ((st.completed - c0) - d_good
+                       + (st.dropped - d0) + (st.failed - f0))
+                # every epoch samples (zeros keep the window clock
+                # honest: no-traffic epochs burn nothing)
+                wt.observe(t_next, cn, good=d_good, bad=bad)
+            alerts_new = wt.evaluate(t_next)
+            run_alerts.extend(alerts_new)
+            if wt.actuate:
+                for cn in stats:
+                    p = wt.pressure(cn)
+                    for nn2 in placements[cn]:
+                        by_node[nn2].arbiter.set_alert_pressure(cn, p)
+                    c = by_class[cn]
+                    if (wt.active(cn) and not wt_brown[cn]
+                            and c.degraded_target_ms > c.service_target_ms):
+                        # alert-driven early degrade: the fast burn sees
+                        # LATE completions, which the failure-pressure
+                        # EWMA is blind to — a pure latency fault relaxes
+                        # the arbiter's quality target here, epochs
+                        # before (or entirely without) the reactive
+                        # path; the shed check stays ON (only the EWMA
+                        # brownout suspends admission control)
+                        wt_brown[cn] = True
+                        brownouts.append((t_next, cn, "enter"))
+                        m.counter("cluster_brownouts_total", cls=cn).inc()
+                        if not brown_on[cn]:
+                            for nn2 in placements[cn]:
+                                if cn in by_node[nn2].arbiter.tenants():
+                                    by_node[nn2].arbiter.set_brownout(
+                                        cn, c.degraded_target_ms)
+                        if tracer is not None:
+                            tracer.decision(obs.BROWNOUT, t_next, t_next,
+                                            cls=cn, direction="enter")
+                    elif wt_brown[cn] and not wt.active(cn):
+                        wt_brown[cn] = False
+                        brownouts.append((t_next, cn, "exit"))
+                        if not brown_on[cn]:
+                            for nn2 in placements[cn]:
+                                if cn in by_node[nn2].arbiter.tenants():
+                                    by_node[nn2].arbiter.set_brownout(
+                                        cn, None)
+                        if tracer is not None:
+                            tracer.decision(obs.BROWNOUT, t_next, t_next,
+                                            cls=cn, direction="exit")
+                if getattr(wt, "rebalance_on_alert", False) and alerts_new:
+                    # alert pressure reaches the placement layer too: a
+                    # rising-edge alert triggers the autoscaler NOW
+                    # instead of at the next scheduled scale_at instant
+                    # — the same water-filling objective decides, the
+                    # alert only moves the clock.  Only when no standby
+                    # capacity came up does a full rebalance run:
+                    # rebalancing WHILE fresh replicas warm retires the
+                    # degraded-but-serving sources into a capacity hole
+                    n_scale = len(scale_events)
+                    run_scaling(t_next)
+                    if len(scale_events) == n_scale:
+                        run_rebalance(t_next)
         t = t_next
 
     for node in nodes:
@@ -1053,6 +1181,7 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                          unplaceable=sorted(unplaceable),
                          injections=list(injections),
                          brownouts=list(brownouts),
+                         alerts=list(run_alerts),
                          retry_granted=budget.granted if budget else 0,
                          retry_denied=dict(retry_denied),
                          decisions_dropped=rtr.decisions_dropped,

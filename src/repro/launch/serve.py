@@ -57,8 +57,10 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core.types import SubnetSpec
-from repro.obs import (MetricsRegistry, Tracer, decompose_latency,
-                       format_decomposition, quantile, write_chrome_trace)
+from repro.obs import (MetricsRegistry, TraceStreamer, Tracer, Watchtower,
+                       decompose_latency, default_windows,
+                       format_alerts, format_decomposition, format_profile,
+                       profile_devices, quantile, write_chrome_trace)
 from repro.runtime import (CalibrationStore, Constraints, DynamicServer,
                            GlobalConstraints, JointGovernor, Monitor,
                            PerformanceGovernor, ResourceArbiter,
@@ -100,9 +102,22 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
     from repro.traffic import (DEGRADE, SLOClass, drive_live, load_schedule,
                                onoff, poisson)
 
-    tracer = Tracer() if args.trace_out else None
-    metrics = MetricsRegistry() if args.metrics_out else None
+    need_tracer = (args.trace_out or args.stream_trace or args.profile_out
+                   or args.alerts_out)
+    tracer = Tracer() if need_tracer else None
+    metrics = (MetricsRegistry()
+               if (args.metrics_out or args.alerts_out) else None)
     dur = args.trace_duration
+    streamer = (TraceStreamer(args.stream_trace).attach(tracer)
+                if args.stream_trace else None)
+    watchtower = None
+    if args.alerts_out:
+        # burn windows scaled so the trace duration is one SLO day; the
+        # live driver feeds/evaluates it as futures resolve
+        watchtower = Watchtower(
+            {"interactive": 0.99, "batch": 0.95},
+            windows=default_windows(dur / 86400.0),
+            tracer=tracer, registry=metrics, hist_name="engine_request_ms")
     rate = args.requests / dur
     a_batch = poisson(max(rate / 2, 0.5), dur, seed=1)
     if args.trace == "poisson":
@@ -163,7 +178,7 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
         report = drive_live(
             classes, cluster.ports(), cluster, streams, lambda name: x[0],
             g_fn=lambda: GlobalConstraints(total_chips=2),
-            record_path=args.record)
+            record_path=args.record, watchtower=watchtower)
         print(f"\ncluster trace mode [{args.trace}] x{args.nodes} nodes, "
               f"router={args.router}: {len(a_int)} interactive + "
               f"{len(a_batch)} batch arrivals over {dur:.1f}s")
@@ -177,7 +192,8 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
             print(f"  migrations:   {report.arbiter.get('migrations', [])}")
             print(f"  preempted:    {report.arbiter.get('preempted', [])}")
         _report_calibration(store, args)
-        _emit_obs(args, tracer, cluster.metrics)
+        _emit_obs(args, tracer, cluster.metrics, watchtower=watchtower,
+                  streamer=streamer)
         return
 
     batch_server = build_server(arch, cfg, max_batch=server.max_batch,
@@ -201,7 +217,8 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
     report = drive_live(
         classes, servers, arbiter, streams, lambda name: x[0],
         g_fn=lambda: GlobalConstraints(total_chips=2),
-        record_path=args.record, tracer=tracer, metrics=metrics)
+        record_path=args.record, tracer=tracer, metrics=metrics,
+        watchtower=watchtower)
     print(f"\ntrace mode [{args.trace}] {len(a_int)} interactive + "
           f"{len(a_batch)} batch arrivals over {dur:.1f}s")
     for name, cs in report.classes.items():
@@ -210,12 +227,17 @@ def run_trace_mode(args, arch, cfg, server, lut, x, base_ms):
     if args.record:
         print(f"  recorded actual arrivals -> {args.record}")
     _report_calibration(store, args)
-    _emit_obs(args, tracer, arbiter.metrics)
+    _emit_obs(args, tracer, arbiter.metrics, watchtower=watchtower,
+              streamer=streamer)
 
 
-def _emit_obs(args, tracer, metrics):
-    """Write --trace-out / --metrics-out artifacts and print the
-    per-class latency decomposition for the retained traces."""
+def _emit_obs(args, tracer, metrics, watchtower=None, streamer=None):
+    """Write --trace-out / --metrics-out / --alerts-out / --profile-out
+    artifacts, close the --stream-trace stream, and print the per-class
+    latency decomposition for the retained traces."""
+    if streamer is not None:
+        n = streamer.close(tracer)
+        print(f"  streamed {n} trace events -> {streamer.path}")
     if tracer is not None and args.trace_out:
         n = write_chrome_trace(tracer, args.trace_out)
         print(f"  trace: {len(tracer.requests())} request trees retained "
@@ -223,6 +245,19 @@ def _emit_obs(args, tracer, metrics):
         decomp = decompose_latency(tracer)
         if decomp:
             print(format_decomposition(decomp))
+    if watchtower is not None and args.alerts_out:
+        with open(args.alerts_out, "w") as f:
+            text = format_alerts(watchtower.alerts)
+            f.write(text + ("\n" if text else ""))
+        print(f"  {len(watchtower.alerts)} SLO alerts "
+              f"(time-in-SLO {watchtower.summary()['time_in_slo']}) "
+              f"-> {args.alerts_out}")
+    if tracer is not None and getattr(args, "profile_out", None):
+        prof = profile_devices(tracer)
+        with open(args.profile_out, "w") as f:
+            f.write(format_profile(prof) + "\n")
+        print(f"  device profile: {len(prof)} (subnet, bucket) rows "
+              f"-> {args.profile_out}")
     if metrics is not None and args.metrics_out:
         text = (metrics.to_prometheus()
                 if args.metrics_out.endswith(".prom")
@@ -287,6 +322,18 @@ def main(argv=None):
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the metrics snapshot as JSON (Prometheus "
                          "text format when PATH ends in .prom)")
+    ap.add_argument("--stream-trace", default=None, metavar="PATH",
+                    help="stream trace events to PATH as requests retire "
+                         "(incremental Perfetto JSON — loadable mid-run "
+                         "or after a crash)")
+    ap.add_argument("--alerts-out", default=None, metavar="PATH",
+                    help="--trace mode: run the SLO watchtower (burn-rate "
+                         "alerts + attribution) against the live run and "
+                         "write the alert log to PATH")
+    ap.add_argument("--profile-out", default=None, metavar="PATH",
+                    help="write the per-(subnet, bucket) device profile "
+                         "(analytic FLOPs, MXU utilisation, roofline "
+                         "position) from retained DEVICE spans to PATH")
     ap.add_argument("--max-batch", type=int, default=8,
                     help="batching ceiling (bucket ladder = powers of two)")
     ap.add_argument("--no-buckets", action="store_true",
@@ -346,8 +393,11 @@ def main(argv=None):
     constraints = lambda: Constraints(target_latency_ms=base_ms,
                                       chips_available=1)
     server.governor = gov
-    tracer = Tracer() if args.trace_out else None
+    tracer = (Tracer() if (args.trace_out or args.stream_trace
+                           or args.profile_out) else None)
     metrics = MetricsRegistry() if args.metrics_out else None
+    streamer = (TraceStreamer(args.stream_trace).attach(tracer)
+                if args.stream_trace else None)
     if tracer is not None:
         server.tracer = tracer
     if metrics is not None:
@@ -365,7 +415,7 @@ def main(argv=None):
           f"(dropped {server.switch_log_dropped} log entries), "
           f"cold compiles while serving: {server.cold_compiles}, "
           f"buckets: {server.buckets}, pipeline: {server.pipeline}")
-    _emit_obs(args, tracer, metrics)
+    _emit_obs(args, tracer, metrics, streamer=streamer)
 
 
 if __name__ == "__main__":

@@ -39,7 +39,20 @@ What's inside:
   into queue / collect / stack / dispatch / device / warming, with the
   sum-to-measured-latency invariant *asserted*, not assumed.
 * ``export``   — Chrome trace-event / Perfetto JSON
-  (:func:`to_chrome_trace`, :func:`write_chrome_trace`).
+  (:func:`to_chrome_trace`, :func:`write_chrome_trace`), incremental
+  via the shared :class:`EventBuilder`.
+* ``stream``   — :class:`TraceStreamer`: live Perfetto streaming;
+  spans append to disk as requests retire (``serve.py
+  --stream-trace``).
+* ``health``   — the SLO watchtower: per-class multi-window burn-rate
+  :class:`Alert`\\ s with regression :class:`Attribution` (which
+  component regressed, ranked probable causes from chaos injections
+  and decision spans) and histogram-bucket exemplars; its
+  :meth:`Watchtower.pressure` signal closes the monitor→diagnose→
+  actuate loop through the arbiter and rebalancer.
+* ``profile``  — analytic device profiling: retained DEVICE spans
+  joined with the analytic FLOPs/bytes model into per-(subnet, bucket)
+  MXU utilisation and roofline position.
 
 Design rules: stdlib-only (imported by every layer — must never cycle
 or pull in jax); ``tracer=None`` everywhere means zero work on the hot
@@ -48,10 +61,17 @@ injectable clock default to ``time.perf_counter``.
 """
 from repro.obs.analyze import (DecompositionError, decompose_latency,
                                format_decomposition, mean_components)
-from repro.obs.export import to_chrome_trace, write_chrome_trace
+from repro.obs.export import (EventBuilder, iter_trace_events,
+                              to_chrome_trace, write_chrome_trace)
+from repro.obs.health import (FAST, PAGE, SLOW, TICKET, Alert, Attribution,
+                              BurnWindow, Cause, SLOTarget, Watchtower,
+                              default_windows, format_alerts)
 from repro.obs.metrics import (DEFAULT_BUCKETS_MS, Counter, Gauge,
                                Histogram, MetricsRegistry, quantile,
                                weighted_quantile)
+from repro.obs.profile import (export_profile, format_profile,
+                               profile_devices)
+from repro.obs.stream import TraceStreamer
 from repro.obs.trace import (ARBITRATE, BROWNOUT, CHAOS, COLLECT, COMPLETE,
                              COMPONENTS, DECISION_SPANS, DEVICE, DISPATCH,
                              HEALTH_FAIL, MIGRATE, PREEMPT, QUEUE, REBALANCE,
@@ -69,5 +89,10 @@ __all__ = [
     "DEFAULT_BUCKETS_MS", "quantile", "weighted_quantile",
     "decompose_latency", "format_decomposition", "mean_components",
     "DecompositionError",
-    "to_chrome_trace", "write_chrome_trace",
+    "to_chrome_trace", "write_chrome_trace", "EventBuilder",
+    "iter_trace_events", "TraceStreamer",
+    "Watchtower", "Alert", "Attribution", "Cause", "SLOTarget",
+    "BurnWindow", "default_windows", "format_alerts",
+    "FAST", "SLOW", "PAGE", "TICKET",
+    "profile_devices", "format_profile", "export_profile",
 ]

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import json
 import math
+import re
 import threading
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -102,7 +103,12 @@ class Gauge:
 class Histogram:
     """Fixed-bucket histogram (cumulative-style export, upper-edge
     percentiles).  Buckets are upper edges, last edge +inf; tracked
-    min/max tighten the q=0/q=100 answers to observed values."""
+    min/max tighten the q=0/q=100 answers to observed values.
+
+    Each bucket can carry one **exemplar** — an opaque id (a trace id)
+    of the latest observation that landed in it — so a p99 bucket links
+    to a concrete retained trace.  Keep-latest is deterministic under
+    virtual time and costs one slot per bucket."""
     kind = "histogram"
 
     def __init__(self, buckets: Sequence[float] = DEFAULT_BUCKETS_MS):
@@ -111,15 +117,18 @@ class Histogram:
             edges = edges + (float("inf"),)
         self.edges = edges
         self.counts = [0] * len(edges)
+        self.exemplars: List[object] = [None] * len(edges)
         self.sum = 0.0
         self.count = 0
         self._min = float("inf")
         self._max = float("-inf")
 
-    def observe(self, v: float):
+    def observe(self, v: float, exemplar=None):
         for i, edge in enumerate(self.edges):
             if v <= edge:
                 self.counts[i] += 1
+                if exemplar is not None:
+                    self.exemplars[i] = exemplar
                 break
         self.sum += v
         self.count += 1
@@ -227,6 +236,9 @@ class MetricsRegistry:
                     row.update(count=s.count, sum=s.sum,
                                buckets=[[e, c] for e, c in
                                         zip(s.edges, s.counts)],
+                               exemplars=[[e, x] for e, x in
+                                          zip(s.edges, s.exemplars)
+                                          if x is not None],
                                p50=s.percentile(50), p95=s.percentile(95),
                                p99=s.percentile(99))
                 else:
@@ -241,6 +253,9 @@ class MetricsRegistry:
         for row in rows:
             if "buckets" in row:
                 row["buckets"] = [[_enc(e), c] for e, c in row["buckets"]]
+            if "exemplars" in row:
+                row["exemplars"] = [[_enc(e), x]
+                                    for e, x in row["exemplars"]]
             for k in ("p50", "p95", "p99"):
                 if k in row and isinstance(row[k], float) \
                         and math.isnan(row[k]):
@@ -250,13 +265,18 @@ class MetricsRegistry:
 
     def to_prometheus(self) -> str:
         """Prometheus text exposition (counter/gauge/histogram with
-        cumulative ``_bucket{le=...}`` rows)."""
+        cumulative ``_bucket{le=...}`` rows).
+
+        Names are sanitized to the exposition-format charset and label
+        values are escaped (backslash, double-quote, newline) — a tenant
+        named ``a"b\\nc`` must not corrupt the scrape."""
         lines: List[str] = []
         with self._lock:
             items = [(n, dict(bl)) for n, bl in self._series.items()]
         for name, by_label in sorted(items):
+            pname = _prom_name(name)
             kind = next(iter(by_label.values())).kind
-            lines.append(f"# TYPE {name} {kind}")
+            lines.append(f"# TYPE {pname} {kind}")
             for key, s in sorted(by_label.items()):
                 lbl = _prom_labels(key)
                 if isinstance(s, Histogram):
@@ -265,18 +285,45 @@ class MetricsRegistry:
                         cum += c
                         le = "+Inf" if edge == float("inf") else f"{edge:g}"
                         extra = (("le", le),) + key
-                        lines.append(f"{name}_bucket{_prom_labels(extra)}"
+                        lines.append(f"{pname}_bucket{_prom_labels(extra)}"
                                      f" {cum}")
-                    lines.append(f"{name}_sum{lbl} {s.sum:g}")
-                    lines.append(f"{name}_count{lbl} {s.count}")
+                    lines.append(f"{pname}_sum{lbl} {s.sum:g}")
+                    lines.append(f"{pname}_count{lbl} {s.count}")
                 else:
-                    lines.append(f"{name}{lbl} {s.value:g}")
+                    lines.append(f"{pname}{lbl} {s.value:g}")
         return "\n".join(lines) + ("\n" if lines else "")
+
+
+# Prometheus exposition charsets: metric names [a-zA-Z_:][a-zA-Z0-9_:]*,
+# label names [a-zA-Z_][a-zA-Z0-9_]*; label VALUES are free text with
+# backslash/quote/newline escaped.
+_PROM_NAME_BAD = re.compile(r"[^a-zA-Z0-9_:]")
+_PROM_LABEL_BAD = re.compile(r"[^a-zA-Z0-9_]")
+
+
+def _prom_name(name: str) -> str:
+    name = _PROM_NAME_BAD.sub("_", name)
+    if not name or name[0].isdigit():
+        name = "_" + name
+    return name
+
+
+def _prom_label_name(name: str) -> str:
+    name = _PROM_LABEL_BAD.sub("_", name)
+    if not name or name[0].isdigit():
+        name = "_" + name
+    return name
+
+
+def _prom_escape(value: str) -> str:
+    return (value.replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
 
 
 def _prom_labels(key: Iterable[Tuple[str, str]]) -> str:
     key = tuple(key)
     if not key:
         return ""
-    body = ",".join(f'{k}="{v}"' for k, v in sorted(key))
+    body = ",".join(f'{_prom_label_name(k)}="{_prom_escape(v)}"'
+                    for k, v in sorted(key))
     return "{" + body + "}"

@@ -185,6 +185,11 @@ class Tracer:
         self.decision_cap = decision_cap
         self.decisions: Deque[Span] = collections.deque(maxlen=decision_cap)
         self.decisions_dropped = 0
+        # retirement hook: called with each FINALIZED RequestTrace (every
+        # finished tree, whether or not sampling keeps it) — the streaming
+        # exporter attaches here.  Always invoked OUTSIDE the tracer lock:
+        # the callback may do file IO or call back into the tracer.
+        self.on_retire = None
 
     # --- request span trees --------------------------------------------------
 
@@ -223,6 +228,9 @@ class Tracer:
             if node is not None:
                 tr.node = node
             self._retain(tr)
+            cb = self.on_retire
+        if cb is not None:
+            cb(tr)
 
     def finish_request(self, trace_id: int, *, t: Optional[float] = None,
                        node: Optional[str] = None,
@@ -243,13 +251,38 @@ class Tracer:
                                      node=tr.node, attrs=dict(attrs or {})))
             tr.t1 = self.clock() if t is None else t
             self._retain(tr)
+            cb = self.on_retire
+        if cb is not None:
+            cb(tr)
 
-    def abort_request(self, trace_id: int):
+    def abort_request(self, trace_id: int, *, t: Optional[float] = None,
+                      retain: bool = False):
         """Forget a begun request that will never complete (shed, failed,
-        cancelled) — aborted trees never enter the buffer."""
+        cancelled) — aborted trees never enter the buffer.
+
+        ``retain=True`` instead FINALIZES the partial tree at the cut
+        instant (a closing ``queue`` span covers whatever the emitters
+        had not stamped yet, so the decomposition still sums) and keeps
+        it — a preempted request's first attempt must stay resolvable
+        when its second attempt links back to it."""
+        cb = tr = None
         with self._lock:
-            if self._open.pop(trace_id, None) is not None:
-                self.aborted += 1
+            tr = self._open.pop(trace_id, None)
+            if tr is None:
+                return
+            self.aborted += 1
+            if not retain:
+                return
+            cut = self.clock() if t is None else t
+            last = max((s.t1 for s in tr.spans), default=tr.t0)
+            tr.t1 = max(cut, last)
+            tr.spans.append(Span(name=QUEUE, t0=last, t1=tr.t1,
+                                 trace_id=trace_id, cls=tr.cls,
+                                 node=tr.node, attrs={"aborted": True}))
+            self._retain(tr)
+            cb = self.on_retire
+        if cb is not None:
+            cb(tr)
 
     def request(self, cls: str, t0: float, t1: float, *,
                 node: Optional[str] = None,
@@ -269,7 +302,10 @@ class Tracer:
                                      cls=cls, node=node,
                                      attrs=dict(attrs or {})))
             self._retain(tr)
-            return rid
+            cb = self.on_retire
+        if cb is not None:
+            cb(tr)
+        return rid
 
     def _retain(self, tr: RequestTrace):
         """Tail-biased sampling: keep the slowest ``tail_cap`` requests

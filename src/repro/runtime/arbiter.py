@@ -131,6 +131,11 @@ class Workload:
     # brownout mode (chaos reliability): the ORIGINAL target while the
     # tenant is pinned to its degraded one; None = not browned out
     brownout_base_ms: Optional[float] = None
+    # SLO-watchtower burn signal (0 = healthy): while a fast burn-rate
+    # alert is active on this tenant's class, the surplus pass treats its
+    # backlog as (1 + alert_pressure)x — capacity shifts toward the
+    # burning class BEFORE failure pressure would have reacted
+    alert_pressure: float = 0.0
 
     def __post_init__(self):
         if self.governor is None:
@@ -319,6 +324,22 @@ class ResourceArbiter:
                                          tenant=name).inc()
                 w.target_latency_ms = float(degraded_target_ms)
 
+    def set_alert_pressure(self, name: str, pressure: float):
+        """Feed one tenant's watchtower burn signal into arbitration.
+
+        ``pressure`` is the normalised fast-window burn (0 = no active
+        alert); the demand phrasing scales the tenant's backlog by
+        ``1 + pressure`` so water-filling's surplus pass favours the
+        burning class.  Unknown tenants are ignored (the watchtower may
+        monitor classes a node does not host)."""
+        with self._lock:
+            w = self._workloads.get(name)
+            if w is None:
+                return
+            w.alert_pressure = max(0.0, float(pressure))
+            self.metrics.gauge("arbiter_alert_pressure",
+                               tenant=name).set(w.alert_pressure)
+
     def _backlog(self, w: Workload) -> float:
         """Pending work the surplus pass should drain: queued requests plus
         the arrivals expected before the next arbitration."""
@@ -493,7 +514,8 @@ class ResourceArbiter:
 
         return wf.Demand(name=w.name, feasible=feasible,
                          candidates=candidates, priority=w.priority,
-                         backlog=self._backlog(w))
+                         backlog=self._backlog(w)
+                         * (1.0 + w.alert_pressure))
 
     def _min_share_point(self, w: Workload, chips_cap: int,
                          power_cap: float, throttle: float
@@ -768,6 +790,8 @@ class ResourceArbiter:
                 row["arrival_ewma_rps"] = round(w.arrival_ewma, 2)
             if w.brownout_base_ms is not None:
                 row["brownout"] = True
+            if w.alert_pressure > 0.0:
+                row["alert_pressure"] = round(w.alert_pressure, 3)
             if self.calibration is not None:
                 row["power_scale"] = round(self._power_scale(name), 4)
             out[name] = row

@@ -284,7 +284,10 @@ class DynamicServer:
                       "subnet": None})
         self.cancelled += 1
         if self.tracer is not None and r.trace_id is not None:
-            self.tracer.abort_request(r.trace_id)
+            # retain the partial tree: a retried/re-routed attempt links
+            # back to this trace_id, and a link whose target was popped
+            # from the buffer can never resolve in the exported trace
+            self.tracer.abort_request(r.trace_id, retain=True)
         if self.metrics is not None:
             # node label: engine series from different nodes must not
             # collide in a shared cluster registry
@@ -543,7 +546,9 @@ class DynamicServer:
             hist = self.metrics.histogram("engine_request_ms", tenant=tn,
                                           node=nd)
             for r in item.reqs:
-                hist.observe((t_ready - r.t_submit) * 1e3)
+                # exemplar: a p99 bucket names a concrete retained trace
+                hist.observe((t_ready - r.t_submit) * 1e3,
+                             exemplar=r.trace_id)
 
     def _complete_safe(self, item: _InFlight):
         """_complete, never letting an exception kill the thread: a failed

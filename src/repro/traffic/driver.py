@@ -441,6 +441,55 @@ def _dead_live_future(reason: str) -> "queue.Queue":
     return fut
 
 
+class _WatchtowerFeed:
+    """Wall-clock feeder for :class:`repro.obs.Watchtower` inside
+    :func:`drive_live`: periodically sweeps the outstanding futures
+    without consuming them (peek + put-back, the `_drain_reliable`
+    idiom), classifies newly-resolved ones against their class deadline,
+    feeds the watchtower one delta sample, evaluates, and forwards the
+    per-class alert pressure to the arbiter/cluster — the live mirror
+    of the simulator's per-epoch actuation hook."""
+
+    def __init__(self, wt, arbiter, by_class, t0: float):
+        self.wt = wt
+        self.arbiter = arbiter
+        self.by_class = by_class
+        self.t0 = t0
+        self.interval = max(0.05, min(w.short_s for w in wt.windows) / 2.0)
+        self._seen: set = set()
+        self._last = 0.0
+
+    def sweep(self, pending, force: bool = False):
+        now = time.perf_counter() - self.t0
+        if not force and now - self._last < self.interval:
+            return
+        self._last = now
+        delta = {cn: [0, 0] for cn in self.by_class}
+        for i, (name, fut, _t_sub) in enumerate(pending):
+            if i in self._seen or fut is None or fut.empty():
+                continue
+            try:
+                out = fut.get_nowait()
+            except Exception:   # raced with the harvest loop
+                continue
+            fut.put(out)
+            self._seen.add(i)
+            if out.get("cancelled"):
+                good = 0
+            else:
+                good = int(out["latency_ms"]
+                           <= self.by_class[name].deadline_ms)
+            delta[name][0] += good
+            delta[name][1] += 1 - good
+        for cn, (g, b) in delta.items():
+            if cn in self.wt.targets:
+                self.wt.observe(now, cn, good=g, bad=b)
+        self.wt.evaluate(now)
+        if self.wt.actuate and hasattr(self.arbiter, "set_alert_pressure"):
+            for cn in self.wt.targets:
+                self.arbiter.set_alert_pressure(cn, self.wt.pressure(cn))
+
+
 def drive_live(classes: Sequence[SLOClass],
                servers: Dict[str, DynamicServer],
                arbiter: ResourceArbiter,
@@ -449,7 +498,7 @@ def drive_live(classes: Sequence[SLOClass],
                g_fn: Callable[[], GlobalConstraints],
                speed: float = 1.0, timeout_s: float = 120.0,
                record_path: Optional[str] = None, tracer=None,
-               reliability=None,
+               reliability=None, watchtower=None,
                metrics: Optional[MetricsRegistry] = None) -> TrafficReport:
     """Wall-clock open-loop driver: real requests to real servers.
 
@@ -476,6 +525,14 @@ def drive_live(classes: Sequence[SLOClass],
     request's own deadline; retries count in ``ClassStats.retried`` and
     their span trees link to the first attempt.  (Hedging is a
     virtual-time feature — see :func:`repro.cluster.sim.simulate_cluster`.)
+
+    ``watchtower`` (a :class:`repro.obs.Watchtower`) runs the SLO burn
+    monitors against the live outcomes as they resolve: resolved futures
+    are classified against their class deadline, fed as delta samples on
+    the wall clock, and — when the watchtower actuates — the per-class
+    alert pressure is forwarded to ``arbiter.set_alert_pressure`` (a
+    plain arbiter or a :class:`repro.cluster.Cluster` alike).  The same
+    instance fed by the simulator fires the same alerts.
     """
     by_class = {c.name: c for c in classes}
     stats = {c.name: ClassStats() for c in classes}
@@ -495,6 +552,8 @@ def drive_live(classes: Sequence[SLOClass],
     arbiter.start(g_fn)
     try:
         t0 = time.perf_counter()
+        feed = (_WatchtowerFeed(watchtower, arbiter, by_class, t0)
+                if watchtower is not None else None)
         for ta, name in events:
             wait = ta / speed - (time.perf_counter() - t0)
             if wait > 0:
@@ -503,6 +562,8 @@ def drive_live(classes: Sequence[SLOClass],
             recorded[name].append(now)
             pending.append((name, servers[name].submit(make_input(name)),
                             now))
+            if feed is not None:
+                feed.sweep(pending)
         rel_info: dict = {}
         if reliability is not None:
             pending, budget = _drain_reliable(
@@ -518,7 +579,12 @@ def drive_live(classes: Sequence[SLOClass],
             deadline = time.perf_counter() + timeout_s
             while (time.perf_counter() < deadline
                    and any(fut.empty() for _, fut, _ in pending)):
+                if feed is not None:
+                    feed.sweep(pending)
                 time.sleep(0.02)
+        if feed is not None:
+            # terminal sample: whatever resolved since the last sweep
+            feed.sweep(pending, force=True)
     finally:
         arbiter.stop()
     if record_path is not None:

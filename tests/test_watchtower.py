@@ -1,0 +1,547 @@
+"""PR 9: SLO watchtower (`repro.obs.health` + streaming + profiling).
+
+* **burn window math** — burn = bad_fraction / (1 - objective) over the
+  exact ``(t - window, t]`` slice of the cumulative series, with the
+  min-traffic guard and the sub-interval fallback;
+* **multi-window gating** — an alert needs BOTH the short and the long
+  window over threshold, fires on the rising edge only, and holds
+  (hysteresis) so one good sample cannot flap the actuation it drove;
+* **attribution** — for every chaos kind the regressed component and
+  the top-ranked cause name the injected fault, chaos outranks the
+  control plane's own reaction, and long-expired transients are not
+  suspects;
+* **exemplars** — alert exemplars come from histogram buckets and
+  resolve to RETAINED traces only;
+* **parity + determinism** — the same watchtower fed by the virtual
+  cluster sim and the wall-clock live driver fires the same
+  (class, window, severity) alerts; the sim day is bit-identical on
+  replay;
+* **actuation plumbing** — arbiter demand boost under alert pressure
+  and the cluster frontend fan-out;
+* **span links** — preempted/migrated work links back to its first
+  attempt's retained (truncated) tree, in the sim and through
+  ``abort_request(retain=True)``, and the links survive Perfetto
+  export and live streaming;
+* **Prometheus escaping** — hostile label values round-trip.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.types import ElasticSpace
+from repro.obs import (FAST, PAGE, SLOW, BurnWindow, MetricsRegistry,
+                       TraceStreamer, Tracer, Watchtower, default_windows,
+                       format_alerts, iter_trace_events, to_chrome_trace)
+from repro.obs import trace as obs
+from repro.obs.health import EXPECTED_COMPONENT
+from repro.runtime import GlobalConstraints, model_lut
+from repro.runtime import hwmodel as hm
+from repro.traffic import DEGRADE, SHED, SLOClass, poisson
+
+TERMS = hm.RooflineTerms(t_compute=0.02, t_memory=0.008,
+                         t_collective=0.004)
+SPACE = ElasticSpace(width_mults=(0.5, 0.75, 1.0), ffn_mults=(0.5, 1.0),
+                     depth_mults=(0.5, 1.0))
+
+
+def make_lut(full_chips=256):
+    return model_lut(SPACE.enumerate(), full_terms=TERMS,
+                     full_chips=full_chips)
+
+
+def vt():
+    return Tracer(clock=lambda: 0.0)
+
+
+# --- burn window math --------------------------------------------------------
+
+def test_burn_is_bad_fraction_over_budget():
+    wt = Watchtower({"api": 0.99}, min_total=1)     # budget = 0.01
+    for i in range(1, 11):
+        wt.observe(float(i), "api", good=90, bad=10)
+    # any window covering whole samples sees bad_frac 0.1 -> burn 10x
+    assert wt.burn("api", 10.0, 5.0) == pytest.approx(10.0)
+    assert wt.burn("api", 10.0, 100.0) == pytest.approx(10.0)
+    # a clean stretch dilutes the windowed burn
+    for i in range(11, 21):
+        wt.observe(float(i), "api", good=100, bad=0)
+    assert wt.burn("api", 20.0, 5.0) == 0.0
+    assert wt.burn("api", 20.0, 20.0) == pytest.approx(5.0)  # half clean
+    # budget_remaining uses the slowest long window
+    assert 0.0 <= wt.budget_remaining("api", 20.0) <= 1.0
+    # unknown class never burns
+    assert wt.burn("ghost", 20.0, 5.0) == 0.0
+
+
+def test_burn_window_slice_is_exact():
+    wt = Watchtower({"api": 0.9}, min_total=1)      # budget = 0.1
+    wt.observe(1.0, "api", good=10, bad=0)
+    wt.observe(2.0, "api", good=0, bad=10)
+    wt.observe(3.0, "api", good=10, bad=0)
+    # (2, 3]: only the good sample at t=3 -> no burn
+    assert wt.burn("api", 3.0, 1.0) == 0.0
+    # (1, 3]: 10 bad of 20 -> 0.5 / 0.1 = 5x
+    assert wt.burn("api", 3.0, 2.0) == pytest.approx(5.0)
+    # sub-interval window falls back to the latest sample delta
+    assert wt.burn("api", 2.0, 0.01) == pytest.approx(10.0)
+
+
+def test_min_total_guard_squelches_cold_start():
+    wt = Watchtower({"api": 0.999})                 # default min_total=8
+    wt.observe(0.1, "api", good=0, bad=2)
+    # 2/2 bad at cold start is NOT an 800x burn — below min traffic
+    assert wt.burn("api", 0.1, 1.0) == 0.0
+    assert wt.evaluate(0.1) == []
+    wt.observe(0.2, "api", good=0, bad=6)           # now 8 samples
+    assert wt.burn("api", 0.2, 1.0) > 100.0
+
+
+def test_observe_rejects_out_of_order_samples():
+    wt = Watchtower({"api": 0.99})
+    wt.observe(2.0, "api", good=1)
+    with pytest.raises(ValueError):
+        wt.observe(1.0, "api", good=1)
+
+
+# --- multi-window gating + hysteresis ----------------------------------------
+
+def burny():
+    """One fast-style window: short 2s / long 10s, 5x threshold."""
+    return Watchtower({"api": 0.9}, min_total=1, windows=(
+        BurnWindow(FAST, 2.0, 10.0, 5.0, PAGE),))
+
+
+def test_alert_needs_both_windows_over_threshold():
+    wt = burny()
+    # long history of good traffic, then a short burst of bad: the
+    # short window burns 10x but the long window stays diluted
+    for i in range(1, 10):
+        wt.observe(float(i), "api", good=100, bad=0)
+    wt.observe(10.0, "api", good=0, bad=100)
+    bs = wt.burn("api", 10.0, 2.0)
+    bl = wt.burn("api", 10.0, 10.0)
+    assert bs >= 5.0 > bl
+    assert wt.evaluate(10.0) == [] and not wt.active("api")
+    # keep burning: the long window catches up -> rising edge fires once
+    fired = []
+    for i in range(11, 20):
+        wt.observe(float(i), "api", good=0, bad=100)
+        fired += wt.evaluate(float(i))
+    assert len(fired) == 1
+    a = fired[0]
+    assert (a.cls, a.window, a.severity) == ("api", FAST, PAGE)
+    assert a.burn_short >= 5.0 and a.burn_long >= 5.0
+    assert wt.active("api")
+    assert wt.pressure("api") > 0.0
+    assert "PAGE" in format_alerts([a])
+
+
+def test_alert_hold_hysteresis_prevents_flapping():
+    wt = burny()                                    # hold = short_s = 2.0
+    for i in range(1, 12):
+        wt.observe(float(i), "api", good=0, bad=100)
+        wt.evaluate(float(i))
+    assert wt.active("api")
+    # condition clears, but the alert HOLDS for short_s: the actuation
+    # it triggered is not withdrawn by one good sample
+    wt.observe(12.0, "api", good=1000, bad=0)
+    wt.evaluate(12.0)
+    assert wt.active("api")
+    assert wt.pressure("api") < 1.0     # burn itself already subsided
+    # ... and clears once the condition has been false for the hold
+    for i in range(13, 17):
+        wt.observe(float(i), "api", good=1000, bad=0)
+        wt.evaluate(float(i))
+    assert not wt.active("api")
+    # hold_s=0 disables the hysteresis entirely
+    wt2 = Watchtower({"api": 0.9}, min_total=1, hold_s=0.0, windows=(
+        BurnWindow(FAST, 2.0, 10.0, 5.0, PAGE),))
+    for i in range(1, 12):
+        wt2.observe(float(i), "api", good=0, bad=100)
+        wt2.evaluate(float(i))
+    assert wt2.active("api")
+    wt2.observe(12.0, "api", good=10000, bad=0)
+    wt2.evaluate(12.0)
+    assert not wt2.active("api")
+    # time_in_slo counted the unhealthy ticks
+    assert wt2.time_in_slo("api") < 1.0
+
+
+def test_default_windows_scale_to_virtual_day():
+    ws = default_windows(10.0 / 86400.0)            # 10s virtual day
+    fast = next(w for w in ws if w.name == FAST)
+    slow = next(w for w in ws if w.name == SLOW)
+    assert fast.short_s == pytest.approx(300.0 * 10.0 / 86400.0)
+    assert slow.long_s == pytest.approx(259200.0 * 10.0 / 86400.0)
+    assert fast.burn == 14.4 and slow.burn == 1.0
+
+
+# --- attribution -------------------------------------------------------------
+
+def feed_component_regression(tr, cls, component, t_bad=10.0):
+    """Baseline traces (small queue+device), then a window where one
+    component inflates 10x."""
+    for i in range(20):
+        t0 = 0.1 * i
+        tr.request(cls, t0, t0 + 0.002, spans=[
+            (obs.QUEUE, t0, t0 + 0.001, None),
+            (obs.DEVICE, t0 + 0.001, t0 + 0.002,
+             {"bucket": 1, "subnet": "s", "n": 1})])
+    for i in range(10):
+        t0 = t_bad + 0.1 * i
+        q_ms, d_ms = (0.050, 0.001) if component == "queue" \
+            else (0.001, 0.050)
+        tr.request(cls, t0, t0 + q_ms + d_ms, spans=[
+            (obs.QUEUE, t0, t0 + q_ms, None),
+            (obs.DEVICE, t0 + q_ms, t0 + q_ms + d_ms,
+             {"bucket": 1, "subnet": "s", "n": 1})])
+
+
+@pytest.mark.parametrize("kind", sorted(EXPECTED_COMPONENT))
+def test_attribution_names_injected_cause_per_kind(kind):
+    tr = vt()
+    comp = EXPECTED_COMPONENT[kind]
+    feed_component_regression(tr, "api", comp)
+    wt = Watchtower({"api": 0.999}, tracer=tr, min_total=1)
+    wt.note_injection(10.0, kind, node="n0", duration_s=5.0)
+    attr = wt.attribute(11.0, "api", window_s=2.0)
+    assert attr.component == comp
+    assert attr.cause == f"chaos:{kind}"
+    assert attr.delta_ms > 10.0 and attr.baseline_ms < 5.0
+
+
+def test_attribution_chaos_outranks_decision_reaction():
+    tr = vt()
+    feed_component_regression(tr, "api", "queue")
+    # the control plane REACTED inside the window too: a scale decision
+    # whose expected component also matches
+    tr.decision(obs.SCALE, 10.5, 10.5, direction="up")
+    wt = Watchtower({"api": 0.999}, tracer=tr, min_total=1)
+    wt.note_injection(10.0, "rack_fail", node="r0", duration_s=0.0)
+    attr = wt.attribute(11.0, "api", window_s=2.0)
+    labels = [c.label for c in attr.causes]
+    assert labels[0] == "chaos:rack_fail"
+    assert "decision:scale" in labels
+    assert labels.index("chaos:rack_fail") < labels.index("decision:scale")
+
+
+def test_attribution_expired_transient_is_not_a_suspect():
+    tr = vt()
+    feed_component_regression(tr, "api", "device")
+    wt = Watchtower({"api": 0.999}, tracer=tr, min_total=1)
+    # thermal throttle that ended LONG before the firing window
+    wt.note_injection(0.5, "thermal", node="n0", duration_s=1.0)
+    attr = wt.attribute(11.0, "api", window_s=2.0)
+    assert all(c.label != "chaos:thermal" for c in attr.causes)
+    # a fail-stop never expires on its own: still a suspect hours later
+    wt.note_injection(0.5, "fail_stop", node="n0", duration_s=0.0)
+    attr = wt.attribute(11.0, "api", window_s=2.0)
+    assert any(c.label == "chaos:fail_stop" for c in attr.causes)
+
+
+# --- exemplars ---------------------------------------------------------------
+
+def test_exemplars_come_from_histogram_and_resolve_to_retained():
+    tr = vt()
+    rids = []
+    for i in range(10):
+        rids.append(tr.request("api", 0.1 * i, 0.1 * i + 0.01, spans=[
+            (obs.QUEUE, 0.1 * i, 0.1 * i, None),
+            (obs.DEVICE, 0.1 * i, 0.1 * i + 0.01,
+             {"bucket": 1, "subnet": "s", "n": 1})]))
+    m = MetricsRegistry()
+    h = m.histogram("cluster_request_ms", buckets=(1.0, 100.0), cls="api")
+    h.observe(0.5, exemplar=rids[0])
+    h.observe(50.0, exemplar=rids[1])
+    h.observe(500.0, exemplar=999999)      # stale id: evicted trace
+    wt = Watchtower({"api": 0.9}, min_total=1, tracer=tr, registry=m,
+                    windows=(BurnWindow(FAST, 2.0, 10.0, 1.0, PAGE),))
+    for i in range(1, 12):
+        wt.observe(float(i), "api", good=0, bad=10)
+        fired = wt.evaluate(float(i))
+        if fired:
+            break
+    assert fired
+    ex = fired[0].exemplars
+    assert ex, "alert carried no exemplars"
+    retained = {t.trace_id for t in tr.requests()}
+    assert set(ex) <= retained             # every link resolves
+    assert 999999 not in ex                # the stale one was filtered
+    # slowest buckets first: the 50ms exemplar outranks the 0.5ms one
+    assert ex.index(rids[1]) < ex.index(rids[0])
+
+
+# --- sim + live parity, determinism ------------------------------------------
+
+def throttle_sim(actuate, horizon_s=7.0):
+    from repro.chaos import THERMAL, Injection, Scenario
+    from repro.cluster import P2C, ClusterNode, simulate_cluster
+    from repro.cluster.node import STANDBY
+    nodes = [ClusterNode(name=f"n{i}",
+                         g_fn=lambda t: GlobalConstraints(total_chips=16),
+                         state=(STANDBY if i >= 2 else "up"))
+             for i in range(4)]
+    classes = [SLOClass("rt", deadline_ms=600.0, priority=3,
+                        drop_policy=SHED, degrade_factor=1.5),
+               SLOClass("batch", deadline_ms=2500.0, priority=1,
+                        drop_policy=DEGRADE)]
+    tracer = vt()
+    wt = Watchtower({"rt": 0.999, "batch": 0.99},
+                    time_scale=horizon_s / 86400.0, tracer=tracer,
+                    actuate=actuate, rebalance_on_alert=actuate)
+    chaos = Scenario(name="hot", seed=0, injections=(
+        Injection(t=2.0, kind=THERMAL, node="n0",
+                  duration_s=horizon_s - 3.0, ladder=(0.2, 0.12, 0.08)),
+        Injection(t=2.0, kind=THERMAL, node="n1",
+                  duration_s=horizon_s - 3.0, ladder=(0.2, 0.12, 0.08))))
+    lut = make_lut()
+    rep = simulate_cluster(
+        classes, {"rt": lut, "batch": lut},
+        {"rt": poisson(200.0, horizon_s, seed=7),
+         "batch": poisson(100.0, horizon_s, seed=8)},
+        nodes, router=P2C, chaos=chaos, tracer=tracer, watchtower=wt,
+        scale_at=(0.8 * horizon_s,), min_nodes=2)
+    return rep, wt
+
+
+def alert_sig(alerts):
+    return [(round(a.t, 6), a.cls, a.window, a.severity,
+             round(a.burn_short, 9), a.attribution.cause
+             if a.attribution else None) for a in alerts]
+
+
+def test_sim_alerts_are_deterministic_and_attributed():
+    rep1, wt1 = throttle_sim(actuate=True)
+    rep2, wt2 = throttle_sim(actuate=True)
+    assert rep1.alerts, "throttle day fired no alerts"
+    assert alert_sig(rep1.alerts) == alert_sig(rep2.alerts)
+    assert rep1.summary() == rep2.summary()
+    # the injected fault is named for >=80% of fired alerts (the PR's
+    # acceptance floor — a cold-start blip may page before any fault
+    # exists to blame), and every exemplar resolves to a retained trace
+    retained = {t.trace_id for t in rep1.tracer.requests()}
+    named = sum(1 for a in rep1.alerts if a.attribution is not None
+                and a.attribution.cause == "chaos:thermal")
+    assert named / len(rep1.alerts) >= 0.8
+    for a in rep1.alerts:
+        assert set(a.exemplars) <= retained
+    # report carries the watchtower's view
+    assert [row[1:] for row in rep1.summary()["alerts"]] == [
+        [a.cls, a.window, a.severity] for a in rep1.alerts]
+
+
+def test_actuating_watchtower_degrades_and_scales_early():
+    rep, wt = throttle_sim(actuate=True)
+    # alert-driven brownout entered (the arbiter target was relaxed)
+    assert any(k == "enter" for _, _, k in rep.brownouts)
+    # the rising edge moved the autoscaler's clock: standby capacity
+    # came up BEFORE the scheduled scale_at instant (0.8 * horizon)
+    t_up = min((t for t, d, _ in rep.scale_events if d == "up"),
+               default=float("inf"))
+    assert t_up < 0.8 * 7.0
+    assert wt.time_in_slo("rt") < 1.0     # the day really paged
+
+
+def tiny_server(**kw):
+    import jax
+    from repro.models.vit import ViTConfig, vit_apply, vit_init
+    from repro.runtime import DynamicServer
+    cfg = ViTConfig(name="t", img_res=16, patch=8, n_layers=2,
+                    d_model=32, n_heads=4, d_ff=64, n_classes=4,
+                    compute_dtype="float32")
+    params = vit_init(jax.random.PRNGKey(0), cfg)
+    dims = {"d_model": 32, "d_ff": 64, "n_heads": 4, "n_layers": 2}
+    return DynamicServer(lambda p, x, E: vit_apply(p, x, cfg, E=E)[0],
+                         params, dims, **kw)
+
+
+def test_live_driver_fires_same_alert_as_sim():
+    """Parity: a class whose every completion is late (impossible
+    deadline) fires the same (class, window, severity) alert through
+    the wall-clock driver as through the virtual-time simulator."""
+    from repro.runtime import ResourceArbiter
+    from repro.traffic import drive_live, simulate
+    windows = (BurnWindow(FAST, 0.5, 1.0, 1.0, PAGE),)
+    cls = SLOClass("api", deadline_ms=1e-3, priority=1,
+                   drop_policy=DEGRADE)
+    streams = {"api": list(poisson(150.0, 1.5, seed=3))}
+
+    server = tiny_server(max_batch=8, timeout_ms=2.0)
+    arb = ResourceArbiter(interval_s=0.05)
+    arb.register("api", make_lut(2), cls.service_target_ms, priority=1,
+                 server=server)
+    wt_live = Watchtower({"api": 0.99}, windows=windows)
+    live = drive_live([cls], {"api": server}, arb, streams,
+                      lambda n: np.zeros((16, 16, 3), "float32"),
+                      g_fn=lambda: GlobalConstraints(total_chips=2),
+                      watchtower=wt_live)
+    assert live.classes["api"].completed > 0
+
+    wt_sim = Watchtower({"api": 0.99}, windows=windows)
+    tr = vt()
+    rep = simulate([cls], {"api": make_lut()}, streams,
+                   lambda t: GlobalConstraints(total_chips=256),
+                   tracer=tr)
+    wt_sim.ingest(rep, t=1.5)
+
+    sig_live = {(a.cls, a.window, a.severity) for a in wt_live.alerts}
+    sig_sim = {(a.cls, a.window, a.severity) for a in wt_sim.alerts}
+    assert sig_live == sig_sim == {("api", FAST, PAGE)}
+
+
+# --- actuation plumbing ------------------------------------------------------
+
+def test_arbiter_alert_pressure_boosts_demand():
+    from repro.runtime import ResourceArbiter
+    arb = ResourceArbiter()
+    arb.register("hot", make_lut(), target_latency_ms=20.0, priority=1)
+    arb.register("cold", make_lut(), target_latency_ms=20.0, priority=1)
+    g = GlobalConstraints(total_chips=64)
+    base = arb.tick(g)["hot"].chips
+    arb.set_alert_pressure("hot", 3.0)
+    assert arb.metrics.value("arbiter_alert_pressure",
+                             tenant="hot") == 3.0
+    boosted = arb.tick(g)
+    assert boosted["hot"].chips >= base
+    assert boosted["hot"].chips >= boosted["cold"].chips
+    assert "alert_pressure" in arb.summary()["hot"]
+    # clears back to neutral (and clamps negatives)
+    arb.set_alert_pressure("hot", -1.0)
+    assert arb.metrics.value("arbiter_alert_pressure",
+                             tenant="hot") == 0.0
+
+
+def test_cluster_frontend_fans_out_alert_pressure():
+    from repro.cluster import Cluster, ClusterNode, P2C
+    nodes = [ClusterNode(name=f"n{i}",
+                         g_fn=lambda t: GlobalConstraints(total_chips=2))
+             for i in range(2)]
+    cluster = Cluster(nodes, router=P2C)
+    placed = cluster.register("api", make_lut(2), target_latency_ms=500.0,
+                              priority=1)
+    assert placed
+    cluster.set_alert_pressure("api", 1.5)
+    for nn in placed:
+        node = cluster.nodes[nn]
+        assert node.arbiter.metrics.value("arbiter_alert_pressure",
+                                          tenant="api") == 1.5
+    # unknown class is a no-op, not a crash
+    cluster.set_alert_pressure("ghost", 1.0)
+
+
+# --- span links across preemptions -------------------------------------------
+
+def test_sim_migration_links_back_to_truncated_first_attempt():
+    """A request whose queue was re-homed by a migration completes with
+    a link to its first attempt's retained TRUNCATED tree."""
+    from repro.cluster import (FIRST_FIT, LEAST_LOADED, ClusterNode,
+                               simulate_cluster)
+    # n1's capacity appears at t=0.5: first-fit lands the class on the
+    # small n0, the rebalance moves it to n1 while n0's queue is deep —
+    # that backlog is re-homed, which is the preemption link source
+    nodes = [ClusterNode(name="n0",
+                         g_fn=lambda t: GlobalConstraints(total_chips=8)),
+             ClusterNode(name="n1",
+                         g_fn=lambda t: GlobalConstraints(
+                             total_chips=256 if t >= 0.5 else 2))]
+    cls = SLOClass("api", deadline_ms=2000.0, priority=2,
+                   drop_policy=DEGRADE)
+    tr = vt()
+    simulate_cluster(
+        [cls], {"api": make_lut()},
+        {"api": poisson(800.0, 2.0, seed=5)}, nodes,
+        router=LEAST_LOADED, placement_mode=FIRST_FIT,
+        rebalance_at=[1.0], replicas=1, hysteresis=0.05, tracer=tr)
+    retained = {t.trace_id: t for t in tr.requests()}
+    linked = [t for t in retained.values() if t.links]
+    assert linked, "no migration re-homed queued work"
+    for t2 in linked:
+        for first in t2.links:
+            assert first in retained, "link target was not retained"
+            ft = retained[first]
+            # the truncated first attempt: routed + queued, never served
+            assert [s.name for s in ft.spans] == [obs.ROUTE, obs.QUEUE]
+    # the links survive Perfetto export on the complete events
+    doc = to_chrome_trace(tr)
+    ev_links = {ev["args"]["links"][0] for ev in doc["traceEvents"]
+                if ev["ph"] == "X" and "links" in ev.get("args", {})}
+    assert ev_links and ev_links <= set(retained)
+
+
+def test_abort_retain_keeps_resolvable_link_target():
+    tr = vt()
+    rid = tr.begin_request("api", t=0.0, node="n0")
+    tr.add_span(rid, obs.QUEUE, 0.0, 0.5)
+    tr.abort_request(rid, t=1.0, retain=True)
+    kept = {t.trace_id: t for t in tr.requests()}
+    assert rid in kept                       # retained despite the abort
+    ft = kept[rid]
+    assert ft.t1 == 1.0
+    assert ft.spans[-1].attrs.get("aborted") is True
+    assert tr.aborted == 1
+    # the second attempt links back and exports with the link
+    rid2 = tr.request("api", 1.0, 2.0, links=[rid], spans=[
+        (obs.QUEUE, 1.0, 1.5, None),
+        (obs.DEVICE, 1.5, 2.0, {"bucket": 1, "subnet": "s", "n": 1})])
+    doc = to_chrome_trace(tr)
+    linked = [ev for ev in doc["traceEvents"]
+              if ev.get("args", {}).get("links") == [rid]]
+    assert linked and all(ev["ph"] == "X" for ev in linked)
+    assert rid2 in {t.trace_id for t in tr.requests()}
+    # plain abort (no retain) stays invisible
+    rid3 = tr.begin_request("api", t=3.0)
+    tr.abort_request(rid3)
+    assert rid3 not in {t.trace_id for t in tr.requests()}
+
+
+# --- streaming export --------------------------------------------------------
+
+def test_streamer_appends_as_requests_retire(tmp_path):
+    path = str(tmp_path / "stream.json")
+    tr = vt()
+    streamer = TraceStreamer(path).attach(tr)
+    rid1 = tr.request("api", 0.0, 0.1, spans=[
+        (obs.QUEUE, 0.0, 0.05, None),
+        (obs.DEVICE, 0.05, 0.1, {"bucket": 1, "subnet": "s", "n": 1})])
+    mid_run = list(iter_trace_events(path))
+    assert mid_run, "nothing streamed before close (not incremental)"
+    tr.request("api", 0.1, 0.2, links=[rid1], spans=[
+        (obs.DEVICE, 0.1, 0.2, {"bucket": 1, "subnet": "s", "n": 1})])
+    tr.decision(obs.SCALE, 0.2, 0.2, direction="up")
+    n = streamer.close(tr)
+    assert tr.on_retire is None              # detached at close
+    evs = list(iter_trace_events(path))
+    assert len(evs) == n > len(mid_run)
+    names = {ev["name"] for ev in evs if ev["ph"] == "X"}
+    assert {"queue", "device", "scale"} <= names   # decisions flushed
+    assert any(ev.get("args", {}).get("links") == [rid1] for ev in evs)
+    # one-shot export of the same tracer names identical track metadata
+    one_shot = to_chrome_trace(tr)
+    assert ({json.dumps(e, sort_keys=True) for e in evs
+             if e["ph"] == "M"}
+            == {json.dumps(e, sort_keys=True)
+                for e in one_shot["traceEvents"] if e["ph"] == "M"})
+
+
+# --- Prometheus escaping -----------------------------------------------------
+
+def test_prometheus_hostile_labels_roundtrip():
+    m = MetricsRegistry()
+    hostile = 'a\\b"c\nd'
+    m.counter("served_total", tenant=hostile).inc(3)
+    m.gauge("weird.name-2", node="n0").set(1.0)
+    text = m.to_prometheus()
+    # the exposition stays one-record-per-line (newline was escaped)
+    line = next(ln for ln in text.splitlines()
+                if ln.startswith("served_total{"))
+    assert '\\\\' in line and '\\"' in line and "\\n" in line
+    # round-trip: unescape the label value -> the original bytes
+    start = line.index('tenant="') + len('tenant="')
+    end = line.rindex('"')
+    unescaped = (line[start:end].replace("\\n", "\n")
+                 .replace('\\"', '"').replace("\\\\", "\\"))
+    assert unescaped == hostile
+    assert line.rstrip().endswith(" 3")
+    # metric names are sanitized to the exposition charset
+    assert "weird_name_2" in text and "weird.name-2" not in text
