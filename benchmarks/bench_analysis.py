@@ -1,0 +1,97 @@
+"""Guarded-by instrumentation cost: guards OFF must be free.
+
+Replays bench_traffic's seeded contention trace through
+:func:`repro.traffic.simulate` three ways — uninstrumented (guards
+disabled, the production default), then with ``guarded_by`` assertions
+enabled on the arbiter/engine/cluster hot state — and gates on:
+
+* ``analysis/guard_overhead_ratio`` — guards-off goodput / uninstrumented
+  goodput.  With guards disabled the declarations are registry entries
+  only (no descriptors installed — asserted structurally), so the data
+  path is literally the same code; the ratio must be >= 0.97 (headline,
+  gated as an absolute floor by ``run.py --compare``) and the reports
+  must be IDENTICAL (asserted);
+* guards ON must not change the *measured* virtual-time report either
+  (asserted identical): lock-ownership assertions observe the schedule,
+  they must never perturb it;
+* wall-clock cost of the enabled descriptors is reported
+  (informational — host-dependent, not gated).
+
+    PYTHONPATH=src python benchmarks/bench_analysis.py [--smoke]
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.bench_traffic import CLASSES, INTERVAL_S, g_fn, make_luts, \
+    make_streams
+from repro.analysis import guards
+from repro.traffic import SLO_POLICY, simulate
+
+GOODPUT_FLOOR = 0.97
+
+
+def _one_run(horizon_s: float):
+    luts = make_luts()
+    classes = [cls for cls, _ in CLASSES]
+    t0 = time.perf_counter()
+    report = simulate(classes, luts, make_streams(horizon_s), g_fn,
+                      interval_s=INTERVAL_S, policy=SLO_POLICY)
+    return report, time.perf_counter() - t0
+
+
+def run(smoke: bool = False):
+    horizon_s = 12.0 if smoke else 60.0
+    from repro.runtime.arbiter import ResourceArbiter
+
+    guards.disable_guards()
+    base, t_base = _one_run(horizon_s)
+
+    guards.disable_guards()
+    # structural half of the zero-overhead claim: no descriptor installed
+    assert "_workloads" not in ResourceArbiter.__dict__, \
+        "guards-off left a descriptor on ResourceArbiter"
+    off, t_off = _one_run(horizon_s)
+
+    guards.enable_guards()
+    try:
+        assert "_workloads" in ResourceArbiter.__dict__, \
+            "enable_guards installed no descriptor"
+        on, t_on = _one_run(horizon_s)
+    finally:
+        guards.disable_guards()
+
+    ratio = off.total_goodput / max(base.total_goodput, 1)
+    assert ratio >= GOODPUT_FLOOR, (
+        f"guards-off goodput {off.total_goodput} < "
+        f"{GOODPUT_FLOOR}x uninstrumented {base.total_goodput}")
+    # virtual time makes the stronger claim checkable: identical reports
+    assert off.summary() == base.summary(), \
+        "guards-off run changed the measured report"
+    assert on.summary() == base.summary(), \
+        "guards-on run changed the measured report"
+
+    wall_off = t_off / max(t_base, 1e-9)
+    wall_on = t_on / max(t_base, 1e-9)
+    return [
+        ("analysis/guard_overhead_ratio", ratio,
+         f"goodput {off.total_goodput} guards-off vs {base.total_goodput} "
+         f"uninstrumented (floor {GOODPUT_FLOOR})"),
+        ("analysis/guards_off_wall_ratio", wall_off,
+         f"{t_off * 1e3:.1f}ms off vs {t_base * 1e3:.1f}ms uninstrumented "
+         f"(informational, host-dependent)"),
+        ("analysis/guards_on_wall_ratio", wall_on,
+         f"{t_on * 1e3:.1f}ms on vs {t_base * 1e3:.1f}ms uninstrumented "
+         f"(informational: the price REPRO_GUARDS=1 pays)"),
+    ]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short horizon (fast CI path)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, val, derived in run(smoke=args.smoke):
+        print(f"{name},{val:.3f},{derived}")

@@ -64,6 +64,9 @@ HEADLINES = {
     # absolute floor: alert-driven actuation must not make the day
     # worse than the reactive baseline (time-in-SLO ratio)
     "slo/alerted_time_in_slo_ratio": {"min": 1.0},
+    # absolute floor: guards-off goodput / uninstrumented goodput —
+    # guarded_by declarations must be free when REPRO_GUARDS is unset
+    "analysis/guard_overhead_ratio": {"min": 0.97},
 }
 REGRESSION_TOL = 0.10
 
@@ -112,6 +115,7 @@ def compare_headlines(prev_suites: dict, new_suites: dict) -> list:
 
 
 def main() -> None:
+    import benchmarks.bench_analysis as ban
     import benchmarks.bench_arbiter as ba
     import benchmarks.bench_calibration as bcal
     import benchmarks.bench_chaos as bch
@@ -157,6 +161,8 @@ def main() -> None:
          lambda: bch.run(smoke=args.smoke)),
         ("slo (watchtower throttle day: alert-driven vs reactive)",
          lambda: bslo.run(smoke=args.smoke)),
+        ("analysis (guarded-by assertions: off must be free)",
+         lambda: ban.run(smoke=args.smoke)),
         ("switching (paper: runtime architecture switching)", bs.run),
         ("kernels (elastic matmul / flash attention)", bk.run),
         ("roofline (dry-run derived)", rt.rows),

@@ -143,7 +143,7 @@ def act_3_live_lifecycle():
 
     drained = cluster.drain("n0", timeout_s=15.0)
     print(f"  drained n0 (backlog fully served: {drained}); "
-          f"placements now {cluster.placements['api']}")
+          f"placements now {cluster.placements_snapshot()['api']}")
     out = cluster.submit("api", x).get(timeout=30)
     print(f"  post-drain request served on the survivor: "
           f"{not out.get('cancelled')}")
@@ -196,7 +196,8 @@ def act_4_wedged_node_auto_failover():
     while nodes[0].state != DEAD and time.time() < deadline:
         time.sleep(0.02)
     outs = [f.get(timeout=10) for f in futs]
-    print(f"  live: health checker failed {cluster.health_log} "
+    print(f"  live: health checker failed "
+          f"{cluster.summary()['health_failed']} "
           f"({outs[0]['error']!r})")
     print(f"  live: {sum(o.get('failed', False) for o in outs)}/4 stuck "
           f"futures resolved with failed payloads, survivor serves: "

@@ -74,7 +74,7 @@ def main():
             time.sleep(0.02)
         alloc = {k: (a.chips, a.feasible,
                      a.point.subnet.name() if a.point else None)
-                 for k, a in arb.last_alloc.items()}
+                 for k, a in arb.last_allocations().items()}
         print(f"[{phase}] alloc (chips, meets-target, subnet): {alloc}")
     outs = [(who, f.get(timeout=60)) for who, f in futs]
     arb.stop()

@@ -1,0 +1,44 @@
+"""Static + dynamic invariant enforcement for the concurrent control plane.
+
+The paper's runtime manager "monitors dynamically changing performance
+targets ... and tunes the algorithm and hardware at the same time" — a
+concurrent control plane whose correctness rests on a handful of
+invariants this repo had, until now, only enforced by review: virtual
+time must flow through injected clocks, logs must be bounded, randomness
+must be seeded, span emitters must match the PR-7 schema, worker threads
+must be daemonized and wake-able, and shared state must be touched under
+its owning lock.  Each of those has been violated and hand-fixed at
+least once (unbounded ``switch_log``, arrival double-smoothing,
+unbounded router decision log); this package makes the fixes permanent:
+
+* :mod:`repro.analysis.lint` — an AST lint pass over ``src/repro`` with
+  project rules RT001–RT006 (see ``RULES``); run via
+  ``python -m repro.analysis --lint`` and gated in CI;
+* :mod:`repro.analysis.locks` — a dynamic lock-order detector:
+  instrumented ``Lock``/``RLock`` wrappers (opt-in monkeypatch mode, so
+  existing code needs no edits) record per-thread acquisition order
+  into a global graph and report cycles — potential deadlocks — with
+  both acquisition stacks.  ``pytest --lock-check`` runs the whole
+  tier-1 suite as the deadlock corpus;
+* :mod:`repro.analysis.guards` — ``guarded_by`` declarations on hot
+  shared state (engine accounting, arbiter tenant tables, frontend
+  placement maps) that assert the owning lock is held on access when
+  ``REPRO_GUARDS=1`` and compile to zero-overhead no-ops otherwise.
+
+Runtime invariants (the rules, with rationale) are documented in
+ROADMAP.md under "Runtime invariants".
+"""
+from repro.analysis.guards import (GuardViolation, disable_guards,
+                                   enable_guards, guarded_by,
+                                   guards_enabled)
+from repro.analysis.lint import (RULES, Finding, format_findings,
+                                 lint_file, lint_tree)
+from repro.analysis.locks import (LockMonitor, get_monitor, install,
+                                  uninstall)
+
+__all__ = [
+    "RULES", "Finding", "lint_file", "lint_tree", "format_findings",
+    "LockMonitor", "get_monitor", "install", "uninstall",
+    "guarded_by", "enable_guards", "disable_guards", "guards_enabled",
+    "GuardViolation",
+]

@@ -1,0 +1,57 @@
+"""CLI: ``python -m repro.analysis [--lint] [--root DIR] [--json OUT]``.
+
+Exit status 0 on a clean tree, 1 if any finding survives.  This is the
+command CI's ``analysis`` job gates on.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import guards
+from repro.analysis.lint import RULES, format_findings, lint_tree
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Project invariant enforcement (RT001-RT006).")
+    ap.add_argument("--lint", action="store_true",
+                    help="run the AST lint pass (default action)")
+    ap.add_argument("--root", default=None,
+                    help="tree to lint (default: the installed repro package)")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="also write findings as JSON")
+    ap.add_argument("--rules", action="store_true",
+                    help="list the rules and exit")
+    ap.add_argument("--guards", action="store_true",
+                    help="list registered guarded-by declarations and exit")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        for rid in sorted(RULES):
+            print(f"{rid}  {RULES[rid]}")
+        return 0
+    if args.guards:
+        import repro.runtime.engine  # noqa: F401 - populate the registry
+        import repro.cluster.frontend  # noqa: F401
+        for cls, locks in sorted(guards.registered().items()):
+            for lock, fields in sorted(locks.items()):
+                print(f"{cls}: {lock} guards {', '.join(fields)}")
+        return 0
+
+    # default action: lint
+    findings = lint_tree(args.root)
+    if args.json_out:
+        with open(args.json_out, "w", encoding="utf-8") as fh:
+            json.dump([f.__dict__ for f in findings], fh, indent=2)
+    if findings:
+        print(format_findings(findings))
+        return 1
+    print("repro.analysis: clean (0 findings)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

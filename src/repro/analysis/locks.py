@@ -1,0 +1,291 @@
+"""Dynamic lock-order deadlock detector.
+
+Wraps ``threading.Lock``/``threading.RLock`` in tracking proxies that
+record, per thread, which locks are already held whenever another is
+acquired.  Each (held → acquired) pair becomes an edge in a global
+lock-order graph keyed by the lock's *allocation site* (module:line),
+so every instance of e.g. ``DynamicServer._acct_lock`` collapses to one
+node.  A cycle in that graph means two code paths acquire the same two
+lock classes in opposite orders — a potential deadlock — and is
+reported with a representative acquisition stack for each direction.
+
+Two ways in:
+
+* explicit — ``mon = LockMonitor(); lk = mon.lock("my-lock")`` (used by
+  the tests to build deliberate inversions);
+* monkeypatch — ``install()`` swaps ``threading.Lock``/``RLock`` for
+  factories that return tracked locks *only when the allocating frame
+  is a ``repro.*`` module*, so stdlib internals (queue, Event,
+  Condition) keep their native locks.  ``pytest --lock-check`` (see
+  ``tests/conftest.py``) installs this for the whole tier-1 suite and
+  asserts an acyclic graph at session end.
+
+The monitor also flags **locks held across device dispatch**: the
+engine's ``_dispatch`` calls the module-level ``_DISPATCH_NOTE`` hook
+(when set) right before handing a batch to the executable; holding any
+control-plane lock at that point serializes the control plane behind
+device latency.
+
+Canonical project lock order (outermost first) — documented here and in
+the owning modules, enforced by this detector under tier-1:
+
+    Cluster._admin_lock  >  Cluster._lock  >  ResourceArbiter._lock
+        >  DynamicServer locks (_cache_lock/_acct_lock/_wake_lock/_pad_lock)
+        >  Tracer/MetricsRegistry/TraceStreamer internal locks
+"""
+from __future__ import annotations
+
+import threading
+import traceback
+from typing import Dict, List, Optional, Tuple
+
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+
+# Keep a few frames of context; full stacks are noise in reports.
+_STACK_DEPTH = 12
+
+
+def _grab_stack() -> List[str]:
+    frames = traceback.extract_stack()[:-3]  # drop monitor internals
+    frames = frames[-_STACK_DEPTH:]
+    return [f"{f.filename}:{f.lineno} in {f.name}" for f in frames]
+
+
+class _Edge:
+    """First-seen evidence that `src` was held while `dst` was acquired."""
+
+    __slots__ = ("src", "dst", "thread", "stack")
+
+    def __init__(self, src: str, dst: str, thread: str, stack: List[str]):
+        self.src = src
+        self.dst = dst
+        self.thread = thread
+        self.stack = stack
+
+
+class LockMonitor:
+    """Global acquisition-order graph shared by all tracked locks."""
+
+    def __init__(self):
+        self._mu = _REAL_LOCK()
+        self._edges: Dict[Tuple[str, str], _Edge] = {}
+        self._tls = threading.local()
+        self.dispatch_violations: List[Tuple[str, Tuple[str, ...], List[str]]] = []
+
+    # -- per-thread held stack ----------------------------------------------
+
+    def _held(self) -> List[List]:
+        held = getattr(self._tls, "held", None)
+        if held is None:
+            held = []
+            self._tls.held = held
+        return held
+
+    def held_keys(self) -> Tuple[str, ...]:
+        return tuple(entry[0] for entry in self._held())
+
+    def on_acquire(self, key: str, obj: object) -> None:
+        held = self._held()
+        for entry in held:
+            if entry[1] is obj:  # re-entrant acquire of the same instance
+                entry[2] += 1
+                return
+        new_edges = []
+        for src_key, _obj, _n in held:
+            if src_key == key:
+                continue  # two instances of one class: order not comparable
+            if (src_key, key) not in self._edges:
+                new_edges.append(src_key)
+        if new_edges:
+            stack = _grab_stack()
+            tname = threading.current_thread().name
+            with self._mu:
+                for src_key in new_edges:
+                    self._edges.setdefault(
+                        (src_key, key), _Edge(src_key, key, tname, stack))
+        held.append([key, obj, 1])
+
+    def on_release(self, key: str, obj: object) -> None:
+        held = self._held()
+        for i in range(len(held) - 1, -1, -1):
+            if held[i][1] is obj:
+                held[i][2] -= 1
+                if held[i][2] == 0:
+                    del held[i]
+                return
+
+    # -- device-dispatch hook -----------------------------------------------
+
+    def note_dispatch(self) -> None:
+        """Install as ``repro.runtime.engine._DISPATCH_NOTE`` to flag
+        control-plane locks held while a batch is handed to the device."""
+        held = self.held_keys()
+        if held:
+            with self._mu:
+                self.dispatch_violations.append(
+                    (threading.current_thread().name, held, _grab_stack()))
+
+    # -- graph queries -------------------------------------------------------
+
+    def edges(self) -> List[Tuple[str, str]]:
+        with self._mu:
+            return sorted(self._edges.keys())
+
+    def cycles(self) -> List[List[str]]:
+        """Elementary cycles in the order graph (each as [a, b, ..., a])."""
+        with self._mu:
+            adj: Dict[str, List[str]] = {}
+            for (src, dst) in self._edges:
+                adj.setdefault(src, []).append(dst)
+        for outs in adj.values():
+            outs.sort()
+        cycles: List[List[str]] = []
+        seen_sigs = set()
+        # Iterative DFS from every node; the graphs here are tiny (tens of
+        # lock classes), so elementary-cycle enumeration by path DFS is fine.
+        for start in sorted(adj):
+            stack = [(start, [start])]
+            while stack:
+                node, path = stack.pop()
+                for nxt in adj.get(node, ()):  # pragma: no branch
+                    if nxt == start and len(path) > 1:
+                        sig = frozenset(path)
+                        if sig not in seen_sigs:
+                            seen_sigs.add(sig)
+                            cycles.append(path + [start])
+                    elif nxt not in path and nxt > start:
+                        # only explore nodes > start: each cycle found once,
+                        # rooted at its smallest node
+                        stack.append((nxt, path + [nxt]))
+        return cycles
+
+    def report(self) -> str:
+        cycles = self.cycles()
+        lines: List[str] = []
+        if not cycles and not self.dispatch_violations:
+            return "lock-order: OK ({} edge(s), no cycles)".format(
+                len(self.edges()))
+        for cyc in cycles:
+            lines.append("POTENTIAL DEADLOCK: " + " -> ".join(cyc))
+            with self._mu:
+                for a, b in zip(cyc, cyc[1:]):
+                    edge = self._edges.get((a, b))
+                    if edge is None:
+                        continue
+                    lines.append(f"  {a} held while acquiring {b} "
+                                 f"[thread {edge.thread}]")
+                    lines.extend(f"    {frm}" for frm in edge.stack[-6:])
+        for tname, held, stack in self.dispatch_violations:
+            lines.append(
+                f"LOCK HELD ACROSS DEVICE DISPATCH [thread {tname}]: "
+                + ", ".join(held))
+            lines.extend(f"    {frm}" for frm in stack[-6:])
+        return "\n".join(lines)
+
+    def clear(self) -> None:
+        with self._mu:
+            self._edges.clear()
+            self.dispatch_violations.clear()
+
+    # -- explicit construction ----------------------------------------------
+
+    def lock(self, name: str):
+        return TrackedLock(_REAL_LOCK(), name, self)
+
+    def rlock(self, name: str):
+        return TrackedLock(_REAL_RLOCK(), name, self)
+
+
+class TrackedLock:
+    """Proxy around a real Lock/RLock that reports to a LockMonitor."""
+
+    def __init__(self, real, key: str, monitor: LockMonitor):
+        self._real = real
+        self._key = key
+        self._mon = monitor
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        got = self._real.acquire(blocking, timeout)
+        if got:
+            self._mon.on_acquire(self._key, self)
+        return got
+
+    def release(self) -> None:
+        self._mon.on_release(self._key, self)
+        self._real.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def locked(self) -> bool:
+        return self._real.locked() if hasattr(self._real, "locked") else False
+
+    def _is_owned(self) -> bool:
+        """Owned by the current thread (guards + Condition support)."""
+        if hasattr(self._real, "_is_owned"):
+            return self._real._is_owned()
+        held = self._mon._held()
+        return any(entry[1] is self for entry in held)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<TrackedLock {self._key} real={self._real!r}>"
+
+    def __getattr__(self, name):
+        return getattr(self._real, name)
+
+
+# ---------------------------------------------------------------------------
+# Monkeypatch mode
+
+_MONITOR: Optional[LockMonitor] = None
+
+
+def get_monitor() -> Optional[LockMonitor]:
+    return _MONITOR
+
+
+def _make_factory(real_factory, monitor: LockMonitor, prefix: str):
+    import sys
+
+    def factory(*args, **kwargs):
+        real = real_factory(*args, **kwargs)
+        try:
+            frame = sys._getframe(1)
+            mod = frame.f_globals.get("__name__", "")
+            lineno = frame.f_lineno
+        except Exception:  # pragma: no cover - _getframe always works on CPython
+            return real
+        if mod.startswith(prefix) and not mod.startswith("repro.analysis"):
+            return TrackedLock(real, f"{mod}:{lineno}", monitor)
+        return real
+
+    return factory
+
+
+def install(monitor: Optional[LockMonitor] = None,
+            module_prefix: str = "repro") -> LockMonitor:
+    """Swap threading.Lock/RLock for tracking factories (repro.* only).
+
+    Returns the active monitor.  Idempotent; pair with :func:`uninstall`.
+    """
+    global _MONITOR
+    if _MONITOR is not None:
+        return _MONITOR
+    _MONITOR = monitor or LockMonitor()
+    threading.Lock = _make_factory(_REAL_LOCK, _MONITOR, module_prefix)
+    threading.RLock = _make_factory(_REAL_RLOCK, _MONITOR, module_prefix)
+    return _MONITOR
+
+
+def uninstall() -> Optional[LockMonitor]:
+    """Restore the real lock factories; returns the monitor for inspection."""
+    global _MONITOR
+    threading.Lock = _REAL_LOCK
+    threading.RLock = _REAL_RLOCK
+    mon, _MONITOR = _MONITOR, None
+    return mon

@@ -113,7 +113,7 @@ class ChaosController:
             node.chaos_throttle = value
         elif action == ce.PARTITION_ON:
             edges = []
-            for cls_name, placed in list(cluster.placements.items()):
+            for cls_name, placed in cluster.placements_snapshot().items():
                 if nn in placed:
                     cluster.router.set_weight(cls_name, nn, 0.0)
                     edges.append(cls_name)

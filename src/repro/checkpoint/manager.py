@@ -48,7 +48,8 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any, *,
         with open(tmp / "treedef.pkl", "wb") as f:
             pickle.dump(treedef, f)
         (tmp / "meta.json").write_text(json.dumps(
-            {"step": step, "n_leaves": len(leaves), "time": time.time(),
+            {"step": step, "n_leaves": len(leaves),
+             "time": time.time(),  # repro: allow-wallclock(checkpoint metadata timestamp; never read by sim paths)
              "process_count": jax.process_count()}))
         os.replace(tmp, final)  # atomic publish
 

@@ -37,6 +37,20 @@ Duck-types the ``arbiter`` argument of :func:`repro.traffic.drive_live`
 (``start``/``stop``/``summary``) and serves class ports that duck-type
 its ``servers`` dict, so the existing live driver drives a whole
 cluster unchanged.
+
+Lock discipline (enforced by ``pytest --lock-check``, see
+:mod:`repro.analysis.locks`): the canonical project lock order is
+``Cluster._admin_lock > Cluster._lock > ResourceArbiter._lock >
+DynamicServer locks > Tracer/Metrics locks`` — an outer lock may be held
+while taking any lock to its right, never the reverse.  ``_admin_lock``
+serialises lifecycle work (register/drain/fail/rebalance) and nests
+``_lock`` for the brief routing-state flips; ``_lock`` guards
+``placements``/``_classes``/``unplaceable`` and the event logs, and is
+held across router picks (which probe node arbiters — hence
+arbiter locks sit BELOW it).  Arbiter/engine code never calls back into
+the cluster, which is what keeps the order acyclic.  External readers
+snapshot via :meth:`placements_snapshot` instead of touching
+``placements`` raw.
 """
 from __future__ import annotations
 
@@ -46,6 +60,7 @@ import threading
 import time
 from typing import Callable, Deque, Dict, List, Optional, Sequence
 
+from repro.analysis.guards import guarded_by
 from repro.cluster import placement as pl
 from repro.cluster.admission import cluster_admission
 from repro.cluster.node import (DEAD, DRAINED, DRAINING, HEALTH_EPOCHS, UP,
@@ -76,6 +91,8 @@ def _dead_future(reason: str) -> "queue.Queue":
     return fut
 
 
+@guarded_by("_lock", "placements", "_classes", "unplaceable",
+            "health_log", "migration_log", "preempt_log")
 class Cluster:
     def __init__(self, nodes: Sequence[ClusterNode], *,
                  router: str = P2C, router_seed: int = 0,
@@ -109,7 +126,8 @@ class Cluster:
         # event logs are bounded (PR 3 switch_log idiom): a long live run
         # keeps the newest log_cap entries and counts the rest
         self.log_cap = log_cap
-        self.health_log: Deque[str] = collections.deque(maxlen=log_cap)
+        self.health_log: Deque[str] = collections.deque(  # guarded-by: _lock
+            maxlen=log_cap)
         self.health_log_dropped = 0
         self._health_stop = threading.Event()
         self._health_thread: Optional[threading.Thread] = None
@@ -119,17 +137,19 @@ class Cluster:
         self.rebalance_hysteresis = rebalance_hysteresis
         self.replicas = replicas
         # (t, cls, src, dst)
-        self.migration_log: Deque[tuple] = collections.deque(maxlen=log_cap)
+        self.migration_log: Deque[tuple] = collections.deque(  # guarded-by: _lock
+            maxlen=log_cap)
         self.migration_log_dropped = 0
         # (t, victim, node, for_cls)
-        self.preempt_log: Deque[tuple] = collections.deque(maxlen=log_cap)
+        self.preempt_log: Deque[tuple] = collections.deque(  # guarded-by: _lock
+            maxlen=log_cap)
         self.preempt_log_dropped = 0
         self._rebalance_stop = threading.Event()
         self._rebalance_thread: Optional[threading.Thread] = None
         # classes whose re-admission attempt found no feasible node —
         # reported in summary() and answered with explicit `no placement`
         # futures instead of a generic dead-future reason
-        self.unplaceable: set = set()
+        self.unplaceable: set = set()   # guarded-by: _lock
         for n in nodes:
             n.health.epochs = health_epochs
         # _lock guards the routing state (placements, router picks) and is
@@ -139,8 +159,8 @@ class Cluster:
         self._lock = threading.RLock()
         self._admin_lock = threading.RLock()
         # class -> registration info needed to re-place it (migration)
-        self._classes: Dict[str, dict] = {}
-        self.placements: Dict[str, List[str]] = {}
+        self._classes: Dict[str, dict] = {}          # guarded-by: _lock
+        self.placements: Dict[str, List[str]] = {}   # guarded-by: _lock
         self._t0: Optional[float] = None
 
     # --- time / state -------------------------------------------------------
@@ -166,8 +186,9 @@ class Cluster:
         node that can host it and returns the placement list.
         """
         with self._admin_lock:
-            if name in self._classes:
-                raise ValueError(f"class {name!r} already registered")
+            with self._lock:
+                if name in self._classes:
+                    raise ValueError(f"class {name!r} already registered")
             info = dict(lut=lut, target_latency_ms=target_latency_ms,
                         priority=priority, min_accuracy=min_accuracy,
                         make_server=make_server)
@@ -222,9 +243,18 @@ class Cluster:
 
     # --- placement engine (periodic rebalancing + preemption) ---------------
 
+    def placements_snapshot(self) -> Dict[str, List[str]]:
+        """Locked copy of ``{class: [node, ...]}`` — what external readers
+        (chaos controller, tooling) use instead of ``placements`` raw,
+        which drain/fail/rebalance mutate concurrently."""
+        with self._lock:
+            return {name: list(p) for name, p in self.placements.items()}
+
     def _spec_of(self, name: str, info: dict) -> pl.ClassSpec:
         backlog = 0.0
-        for nn in self.placements.get(name, ()):
+        with self._lock:
+            placed = list(self.placements.get(name, ()))
+        for nn in placed:
             node = self.nodes[nn]
             if node.alive and name in node.arbiter.tenants():
                 backlog += node.arbiter.backlog(name)
@@ -245,10 +275,11 @@ class Cluster:
         backlogged higher-priority class shares its node."""
         with self._admin_lock:
             t = self._now()
-            specs = [self._spec_of(n, i) for n, i in self._classes.items()]
-            up_nodes = [n for n in self.nodes.values() if n.routable]
             with self._lock:
+                classes = dict(self._classes)
                 current = {n: list(p) for n, p in self.placements.items()}
+            specs = [self._spec_of(n, i) for n, i in classes.items()]
+            up_nodes = [n for n in self.nodes.values() if n.routable]
             horizon = (self.rebalance_interval_s
                        if self.rebalance_interval_s else 5.0)
             plan = pl.plan_rebalance(specs, up_nodes, current, t=t,
@@ -258,7 +289,7 @@ class Cluster:
             t_plan = (time.perf_counter()
                       if self.tracer is not None else 0.0)
             for mv in plan.moves:
-                info = self._classes[mv.cls]
+                info = classes[mv.cls]
                 t_mv = (time.perf_counter()
                         if self.tracer is not None else 0.0)
                 if mv.dst is not None:
@@ -268,9 +299,10 @@ class Cluster:
                             self.placements[mv.cls].append(mv.dst)
                 if mv.src is not None:
                     self._retire_replica(mv.cls, mv.src)
-                if len(self.migration_log) == self.log_cap:
-                    self.migration_log_dropped += 1  # deque evicts oldest
-                self.migration_log.append((t, mv.cls, mv.src, mv.dst))
+                with self._lock:
+                    if len(self.migration_log) == self.log_cap:
+                        self.migration_log_dropped += 1  # deque evicts oldest
+                    self.migration_log.append((t, mv.cls, mv.src, mv.dst))
                 self.metrics.counter("cluster_migrations_total",
                                      cls=mv.cls).inc()
                 if self.tracer is not None:
@@ -289,9 +321,11 @@ class Cluster:
                 node = self.nodes[ev.node]
                 if ev.for_cls in node.arbiter.tenants():
                     node.arbiter.preempt(ev.for_cls, node.g(t))
-                if len(self.preempt_log) == self.log_cap:
-                    self.preempt_log_dropped += 1    # deque evicts oldest
-                self.preempt_log.append((t, ev.victim, ev.node, ev.for_cls))
+                with self._lock:
+                    if len(self.preempt_log) == self.log_cap:
+                        self.preempt_log_dropped += 1   # deque evicts oldest
+                    self.preempt_log.append(
+                        (t, ev.victim, ev.node, ev.for_cls))
                 self.metrics.counter("cluster_preemptions_total",
                                      cls=ev.victim).inc()
                 if self.tracer is not None:
@@ -377,7 +411,9 @@ class Cluster:
 
     def ports(self) -> Dict[str, _ClassPort]:
         """``{class: submit-proxy}`` — drive_live's ``servers`` dict."""
-        return {name: _ClassPort(self, name) for name in self._classes}
+        with self._lock:
+            names = list(self._classes)
+        return {name: _ClassPort(self, name) for name in names}
 
     # --- lifecycle ----------------------------------------------------------
 
@@ -414,9 +450,10 @@ class Cluster:
                     # outstanding — run the SAME failover path an
                     # operator's fail() would (queued futures resolve
                     # with error payloads, classes re-admit elsewhere)
-                    if len(self.health_log) == self.log_cap:
-                        self.health_log_dropped += 1  # deque evicts oldest
-                    self.health_log.append(node.name)
+                    with self._lock:
+                        if len(self.health_log) == self.log_cap:
+                            self.health_log_dropped += 1  # deque evicts oldest
+                        self.health_log.append(node.name)
                     self.metrics.counter("cluster_health_failed_total",
                                          node=node.name).inc()
                     t_fail = (time.perf_counter()
@@ -495,18 +532,25 @@ class Cluster:
     # --- accounting ---------------------------------------------------------
 
     def summary(self) -> dict:
+        with self._lock:
+            # snapshot routing state; node/arbiter summaries run unlocked
+            # below (they take arbiter locks — below _lock in the order)
+            snap = {
+                "placements": {n: list(p)
+                               for n, p in self.placements.items()},
+                "health_failed": list(self.health_log),
+                "unplaceable": sorted(self.unplaceable),
+                "migrations": list(self.migration_log),
+                "preempted": list(self.preempt_log),
+                "log_dropped": {"health": self.health_log_dropped,
+                                "migrations": self.migration_log_dropped,
+                                "preempted": self.preempt_log_dropped},
+            }
         return {
             "router": self.router.policy,
-            "placements": {n: list(p) for n, p in self.placements.items()},
             "routed": self.router.routed_counts(),
-            "health_failed": list(self.health_log),
-            "unplaceable": sorted(self.unplaceable),
-            "migrations": list(self.migration_log),
-            "preempted": list(self.preempt_log),
-            "log_dropped": {"health": self.health_log_dropped,
-                            "migrations": self.migration_log_dropped,
-                            "preempted": self.preempt_log_dropped},
             "nodes": {nn: {"state": node.state,
                            "arbiter": node.arbiter.summary()}
                       for nn, node in self.nodes.items()},
+            **snap,
         }

@@ -164,7 +164,7 @@ class ClusterNode:
         completions flat, futures outstanding — but it is the arbiter's
         own doing and recovers the moment conditions improve.  The health
         check must not kill it."""
-        last = self.arbiter.last_alloc
+        last = self.arbiter.last_allocations()
         return bool(last) and all(a.point is None for a in last.values())
 
     def check_health(self) -> bool:

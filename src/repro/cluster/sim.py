@@ -462,7 +462,8 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 unplaceable.add(c.name)
 
     events = arr.merge({n: ts for n, ts in streams.items()})
-    queues = {n.name: {c.name: collections.deque() for c in classes}
+    queues = {n.name: {c.name: collections.deque()  # repro: allow-unbounded(per-class work queue, drained every epoch; depth IS the backlog signal)
+                       for c in classes}
               for n in nodes}
     busy_until = {n.name: {c.name: 0.0 for c in classes} for n in nodes}
     arrived_epoch = {n.name: {c.name: 0 for c in classes} for n in nodes}
@@ -634,7 +635,7 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                                 (obs.QUEUE, it.t, t, None)])
                         it = dataclasses.replace(it, first_rid=frid)
                     moved.append(it)
-                queues[home][cn] = collections.deque(
+                queues[home][cn] = collections.deque(  # repro: allow-unbounded(rebuilds an existing drained work queue; size bounded by its contents)
                     sorted(list(queues[home][cn]) + moved,
                            key=lambda r: (r.t, r.t0)))
             q.clear()
@@ -904,7 +905,7 @@ def simulate_cluster(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 # arrival for a class holding no slice on its node:
                 # preempt NOW, mid-cycle, exactly as the single-node path
                 node.arbiter.preempt(cn, node.g(ta))
-                allocs[nn] = node.arbiter.last_alloc
+                allocs[nn] = node.arbiter.last_allocations()
                 svc[nn] = svc_of(allocs[nn])
             if (policy == SLO_POLICY and c.drop_policy == SHED
                     and not brown_on[cn]

@@ -119,6 +119,7 @@ def run_with_restarts(train_fn, *, manager, max_restarts: int = 3,
             restarts += 1
             logger(f"[fault] failure at restart {restarts}: {e!r}")
             if hasattr(manager, "wait"):
-                manager.wait()   # drain in-flight async saves before restore
+                # drain in-flight async saves before restore
+                manager.wait()  # repro: allow-wait(checkpoint drain joins a finite set of in-flight saves, not an Event)
             if restarts > max_restarts:
                 raise

@@ -50,6 +50,16 @@ analytic prior) and the power budget is charged the tenant's MEASURED
 watts — modelled slice power scaled by its observed duty cycle — so the
 energy objective the paper optimises is driven by observed energy, not
 the open-loop ``slice_power_w`` model.
+
+Lock discipline (enforced by ``pytest --lock-check``, see
+:mod:`repro.analysis.locks`): the canonical project lock order is
+``Cluster._admin_lock > Cluster._lock > ResourceArbiter._lock >
+DynamicServer locks > Tracer/Metrics locks`` — outer locks left of inner.
+``ResourceArbiter._lock`` (an RLock) guards ``_workloads`` and
+``last_alloc``; it may be taken while a cluster lock is held (router load
+probes, drain/failover) and may itself be held while taking engine locks
+(``_drive_servers`` pausing/resuming servers), but never the reverse.
+External readers of ``last_alloc`` go through :meth:`last_allocations`.
 """
 from __future__ import annotations
 
@@ -60,6 +70,7 @@ import threading
 import time
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+from repro.analysis.guards import guarded_by
 from repro.core.pareto import OpPoint
 from repro.obs import trace as obs
 from repro.obs.metrics import MetricsRegistry
@@ -166,6 +177,7 @@ class Allocation:
     priced_power_w: float = 0.0
 
 
+@guarded_by("_lock", "_workloads", "last_alloc")
 class ResourceArbiter:
     """Water-filling allocator + shared constraint clock over N workloads."""
 
@@ -179,7 +191,7 @@ class ResourceArbiter:
         # measured watts instead of the raw modelled slice_power_w
         self.calibration = calibration
         self._time_fn = time_fn   # injectable for deterministic tests
-        self._workloads: Dict[str, Workload] = {}
+        self._workloads: Dict[str, Workload] = {}   # guarded-by: _lock
         self._lock = threading.RLock()
         self._stop = threading.Event()
         self._clock: Optional[threading.Thread] = None
@@ -189,7 +201,7 @@ class ResourceArbiter:
         # 20 Hz clock doesn't grow memory without bound
         self.alloc_log: Deque[Dict[str, Allocation]] = collections.deque(
             maxlen=4096)
-        self.last_alloc: Dict[str, Allocation] = {}
+        self.last_alloc: Dict[str, Allocation] = {}   # guarded-by: _lock
         # per-tenant accounting lives in the metrics registry (see
         # _STAT_SERIES); the arbiter owns its registry by default — two
         # nodes can both host a tenant "api", so arbiter registries are
@@ -354,6 +366,16 @@ class ResourceArbiter:
         """One tenant's pending-work signal (cluster routing reads it)."""
         with self._lock:
             return self._backlog(self._workloads[name])
+
+    def last_allocations(self) -> Dict[str, "Allocation"]:
+        """Snapshot of the most recent per-tenant allocations.
+
+        The locked accessor external readers (health checks, drivers,
+        simulators) must use instead of touching ``last_alloc`` directly —
+        ``arbitrate`` rebinds it mid-cycle under ``_lock``.
+        """
+        with self._lock:
+            return dict(self.last_alloc)
 
     def total_backlog(self) -> float:
         """Summed pending work across active tenants — the per-node load
@@ -730,10 +752,12 @@ class ResourceArbiter:
 
         self._clock = threading.Thread(target=loop, daemon=True)
         self._clock.start()
-        for w in self._workloads.values():
-            if w.server is not None and not w.server.is_running:
+        with self._lock:
+            servers = [w.server for w in self._workloads.values()]
+        for server in servers:
+            if server is not None and not server.is_running:
                 # servers run governor-less: the arbiter's clock governs
-                w.server.start()
+                server.start()
 
     def stop(self):
         self._stop.set()
@@ -764,7 +788,10 @@ class ResourceArbiter:
         m = self.metrics
         tenants_seen = {lbl.get("tenant")
                         for lbl in m.labels_of("arbiter_cycles_total")}
-        for name, w in self._workloads.items():
+        with self._lock:
+            # snapshot: register/unregister mutate the dict concurrently
+            workloads = list(self._workloads.items())
+        for name, w in workloads:
             exists = name in tenants_seen
             n = m.value("arbiter_cycles_total", tenant=name)
             if not exists or not n:

@@ -46,6 +46,7 @@ from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
 import jax
 import numpy as np
 
+from repro.analysis.guards import guarded_by
 from repro.core.elastic import spec_to_static
 from repro.core.types import SubnetSpec
 from repro.obs import trace as obs
@@ -55,6 +56,12 @@ from repro.runtime.lut import bucket_ladder
 # queue token that wakes a blocked collector without carrying a request
 # (pause()/stop() enqueue it so the worker never needs a poll timeout)
 _WAKE = object()
+
+# analysis hook: when set (pytest --lock-check), called right before a
+# batch is handed to the device executable; the lock monitor records any
+# control-plane locks still held at that point as violations — holding
+# one serializes arbitration/routing behind device latency
+_DISPATCH_NOTE: Optional[Callable[[], None]] = None
 
 
 @dataclasses.dataclass
@@ -82,6 +89,8 @@ class _InFlight:
     t_disp_ret: float = 0.0    # obs: async dispatch call returned
 
 
+@guarded_by("_wake_lock", "_wake_tokens")
+@guarded_by("_acct_lock", "_outstanding", "_arrivals")
 class DynamicServer:
     def __init__(self, apply_fn: Callable, params, dims: Dict[str, int], *,
                  governor=None, max_batch: int = 8, timeout_ms: float = 5.0,
@@ -168,13 +177,13 @@ class DynamicServer:
         # _WAKE entries in _queue (not real backlog); lock-protected because
         # pause()/stop() (arbiter clock, callers) and the worker all touch
         # it and queue_depth() feeds the arbiter's water-filling
-        self._wake_tokens = 0
+        self._wake_tokens = 0     # guarded-by: _wake_lock
         self._wake_lock = threading.Lock()
         # unresolved futures + arrivals since the last arbiter pull; the
         # cluster layer drains on _outstanding and the arbiter's EWMA
         # feeds off take_arrival_count()
-        self._outstanding = 0
-        self._arrivals = 0
+        self._outstanding = 0     # guarded-by: _acct_lock
+        self._arrivals = 0        # guarded-by: _acct_lock
         self._acct_lock = threading.Lock()
         self._draining = False
         self._fail_reason: Optional[str] = None
@@ -475,6 +484,8 @@ class DynamicServer:
             self._compiled.add(key)
         hw = getattr(self.active_point, "hw_state", None) \
             or hm.HwState(chips=1, freq=1.0)
+        if _DISPATCH_NOTE is not None:
+            _DISPATCH_NOTE()
         t_disp = time.perf_counter()
         out = fn(self.params, buf)       # async: returns before ready
         t_ret = time.perf_counter() if self.tracer is not None else 0.0
@@ -576,7 +587,7 @@ class DynamicServer:
         carry: List[Request] = []    # batch formed, then pause/stop landed
         while not self._stop.is_set():
             if self._paused.is_set():
-                self._resume.wait()      # no spin: resume()/stop() set it
+                self._resume.wait()  # repro: allow-wait(no spin; audited: resume() AND stop() both set _resume)
                 continue
             # serve a carried-over batch first: requests must not be
             # re-queued behind later submissions (FIFO across a pause)

@@ -235,7 +235,7 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
     admitted = _register_classes(arbiter, classes, luts, policy, g_fn(0.0))
 
     events = arr.merge({n: ts for n, ts in streams.items()})
-    queues = {c.name: collections.deque() for c in classes}
+    queues = {c.name: collections.deque() for c in classes}  # repro: allow-unbounded(per-class work queue, drained every epoch; depth IS the backlog signal)
     busy_until = {c.name: 0.0 for c in classes}
     arrived_epoch = {c.name: 0 for c in classes}   # arrivals last epoch
     last_arrival = events[-1][0] if events else 0.0
@@ -285,7 +285,7 @@ def simulate(classes: Sequence[SLOClass], luts: Dict[str, LUT],
                 # eviction of lower-priority tenants must not wait for the
                 # next constraint clock tick
                 arbiter.preempt(name, g_fn(ta))
-                allocs = arbiter.last_alloc
+                allocs = arbiter.last_allocations()
                 svc = svc_of(allocs)
                 if tracer is not None:
                     tracer.decision(obs.PREEMPT, ta, ta, for_cls=name)

@@ -25,11 +25,43 @@ _hypothesis_compat.install()
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: soak tests (traffic etc.) — opt-in via --runslow")
+    if config.getoption("--lock-check"):
+        # Instrument every repro.* Lock/RLock allocated from here on and
+        # hook the engine's device-dispatch point, so the whole suite
+        # doubles as the lock-order corpus (repro.analysis.locks).
+        from repro.analysis import locks
+        from repro.runtime import engine
+        monitor = locks.install()
+        engine._DISPATCH_NOTE = monitor.note_dispatch
+        config._lock_monitor = monitor
 
 
 def pytest_addoption(parser):
     parser.addoption("--runslow", action="store_true", default=False,
                      help="run tests marked slow (traffic soak tests)")
+    parser.addoption("--lock-check", action="store_true", default=False,
+                     help="run under the repro.analysis lock-order "
+                          "detector; fail the session on any cycle or "
+                          "lock held across device dispatch")
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _lock_check_verdict(request):
+    """With --lock-check: assert an acyclic lock-order graph at session
+    end (teardown failure -> nonzero pytest exit, report printed)."""
+    yield
+    monitor = getattr(request.config, "_lock_monitor", None)
+    if monitor is None:
+        return
+    from repro.analysis import locks
+    from repro.runtime import engine
+    locks.uninstall()
+    engine._DISPATCH_NOTE = None
+    report = monitor.report()
+    sys.stderr.write(f"\n[lock-check] {report}\n")
+    assert not monitor.cycles(), f"lock-order cycles detected:\n{report}"
+    assert not monitor.dispatch_violations, \
+        f"locks held across device dispatch:\n{report}"
 
 
 def pytest_collection_modifyitems(config, items):

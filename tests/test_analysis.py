@@ -1,0 +1,484 @@
+"""Tests for repro.analysis: lint rules (RT001-RT006), the lock-order
+detector, and guarded-by runtime assertions."""
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis import guards, locks
+from repro.analysis.lint import (PRAGMA_ALIASES, RULES, format_findings,
+                                 lint_file, lint_tree)
+
+# ---------------------------------------------------------------------------
+# Lint fixtures: one minimal positive + pragma'd negative per rule
+
+FIXTURES = {
+    "RT001": textwrap.dedent("""\
+        import time
+        def now():
+            return time.time()
+        """),
+    "RT002": textwrap.dedent("""\
+        class Node:
+            def __init__(self):
+                self.event_log = []
+        """),
+    "RT003": textwrap.dedent("""\
+        import random
+        def pick():
+            return random.randint(0, 5)
+        """),
+    "RT004": textwrap.dedent("""\
+        from repro.obs import trace as obs
+        def emit(tracer, t0, t1):
+            tracer.decision(obs.MIGRATE, t0, t1, node="n0", src="n1")
+        """),
+    "RT005": textwrap.dedent("""\
+        import threading
+        def spawn(fn):
+            t = threading.Thread(target=fn)
+            t.start()
+        """),
+    "RT006": textwrap.dedent("""\
+        import threading
+        class Stats:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0   # guarded-by: _lock
+            def bump(self):
+                self.count += 1
+            def bump_locked(self):
+                with self._lock:
+                    self.count += 1
+        """),
+}
+
+# the same violation with a reasoned pragma on the offending line
+SUPPRESSED = {
+    "RT001": FIXTURES["RT001"].replace(
+        "time.time()", "time.time()  # repro: allow-wallclock(fixture)"),
+    "RT002": FIXTURES["RT002"].replace(
+        "self.event_log = []",
+        "self.event_log = []  # repro: allow-unbounded(fixture)"),
+    "RT003": FIXTURES["RT003"].replace(
+        "random.randint(0, 5)",
+        "random.randint(0, 5)  # repro: allow-unseeded(fixture)"),
+    "RT004": FIXTURES["RT004"].replace(
+        'src="n1")', 'src="n1")  # repro: allow-span(fixture)'),
+    "RT005": FIXTURES["RT005"].replace(
+        "threading.Thread(target=fn)",
+        "threading.Thread(target=fn)  # repro: allow-thread(fixture)"),
+    "RT006": FIXTURES["RT006"].replace(
+        "self.count += 1\n    def bump_locked",
+        "self.count += 1  # repro: allow-guard(fixture)\n"
+        "    def bump_locked"),
+}
+
+
+def _lint_source(tmp_path, source, name="snippet.py"):
+    p = tmp_path / name
+    p.write_text(source)
+    return lint_file(str(p), name)
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_rule_fires_on_fixture(tmp_path, rule):
+    findings = _lint_source(tmp_path, FIXTURES[rule])
+    assert [f.rule for f in findings] == [rule], format_findings(findings)
+
+
+@pytest.mark.parametrize("rule", sorted(SUPPRESSED))
+def test_reasoned_pragma_suppresses(tmp_path, rule):
+    findings = _lint_source(tmp_path, SUPPRESSED[rule])
+    assert findings == [], format_findings(findings)
+
+
+def test_fixture_tree_reports_exactly_one_per_rule(tmp_path):
+    for rule, src in FIXTURES.items():
+        (tmp_path / f"viol_{rule.lower()}.py").write_text(src)
+    findings = lint_tree(str(tmp_path))
+    assert sorted(f.rule for f in findings) == sorted(FIXTURES)
+
+
+def test_pragma_without_reason_is_a_finding(tmp_path):
+    src = FIXTURES["RT001"].replace(
+        "time.time()", "time.time()  # repro: allow-wallclock()")
+    findings = _lint_source(tmp_path, src)
+    assert [f.rule for f in findings] == ["RT000"]
+    assert "needs a reason" in findings[0].message
+
+
+def test_unused_pragma_is_a_finding(tmp_path):
+    findings = _lint_source(
+        tmp_path, "x = 1  # repro: allow-wallclock(no violation here)\n")
+    assert [f.rule for f in findings] == ["RT000"]
+    assert "suppresses nothing" in findings[0].message
+
+
+def test_unknown_pragma_alias_is_a_finding(tmp_path):
+    findings = _lint_source(
+        tmp_path, "x = 1  # repro: allow-everything(whatever)\n")
+    assert [f.rule for f in findings] == ["RT000"]
+
+
+def test_every_pragma_alias_maps_to_a_rule():
+    assert set(PRAGMA_ALIASES.values()) <= set(RULES)
+
+
+# -- rule edges -------------------------------------------------------------
+
+
+def test_rt001_allows_perf_counter_and_injection(tmp_path):
+    src = textwrap.dedent("""\
+        import time
+        def f(time_fn=time.monotonic):
+            return time.perf_counter(), time_fn()
+        """)
+    assert _lint_source(tmp_path, src) == []
+
+
+def test_rt001_allowlisted_module_is_exempt(tmp_path):
+    sub = tmp_path / "launch"
+    sub.mkdir()
+    (sub / "runner.py").write_text(FIXTURES["RT001"])
+    assert lint_tree(str(tmp_path)) == []
+
+
+def test_rt002_bounded_deque_ok(tmp_path):
+    src = "import collections\nq = collections.deque(maxlen=10)\n"
+    assert _lint_source(tmp_path, src) == []
+
+
+def test_rt003_seeded_rngs_ok(tmp_path):
+    src = textwrap.dedent("""\
+        import random
+        import numpy as np
+        import jax
+        r = random.Random(7)
+        g = np.random.default_rng(7)
+        def f(key):
+            return r.random(), g.random(), jax.random.uniform(key)
+        """)
+    assert _lint_source(tmp_path, src) == []
+
+
+def test_rt003_np_global_rng_fires(tmp_path):
+    src = "import numpy as np\nx = np.random.rand()\n"
+    findings = _lint_source(tmp_path, src)
+    assert [f.rule for f in findings] == ["RT003"]
+
+
+def test_rt004_unknown_kind_fires(tmp_path):
+    src = 'def emit(tracer):\n    tracer.decision("bogus_kind", 0, 1)\n'
+    findings = _lint_source(tmp_path, src)
+    assert [f.rule for f in findings] == ["RT004"]
+    assert "unknown span kind" in findings[0].message
+
+
+def test_rt004_spans_kwarg_literal_dict(tmp_path):
+    src = textwrap.dedent("""\
+        from repro.obs import trace as obs
+        def emit(tracer):
+            tracer.finish_request(1, "c", 0.0, 1.0, spans=[
+                (obs.DEVICE, 0.0, 1.0, {"bucket": 1, "n": 2})])
+        """)
+    findings = _lint_source(tmp_path, src)
+    assert [f.rule for f in findings] == ["RT004"]
+    assert "subnet" in findings[0].message
+
+
+def test_rt004_complete_emission_ok(tmp_path):
+    src = textwrap.dedent("""\
+        from repro.obs import trace as obs
+        def emit(tracer, t0, t1):
+            tracer.decision(obs.MIGRATE, t0, t1, src="n1", cost_s=0.2)
+            attrs = {"bucket": 1, "subnet": "s", "n": 2}
+            tracer.finish_request(1, "c", 0.0, 1.0, spans=[
+                (obs.DEVICE, 0.0, 1.0, attrs),
+                (obs.QUEUE, 0.0, 0.5, None)])
+        """)
+    assert _lint_source(tmp_path, src) == []
+
+
+def test_rt005_wait_in_loop_and_bare_except(tmp_path):
+    src = textwrap.dedent("""\
+        def pump(ev):
+            while True:
+                ev.wait()
+        def risky(f):
+            try:
+                f()
+            except:
+                pass
+        """)
+    findings = _lint_source(tmp_path, src)
+    assert sorted(f.rule for f in findings) == ["RT005", "RT005"]
+
+
+def test_rt005_daemon_thread_and_timed_wait_ok(tmp_path):
+    src = textwrap.dedent("""\
+        import threading
+        def spawn(fn, ev):
+            t = threading.Thread(target=fn, daemon=True)
+            t.start()
+            while not ev.wait(0.1):
+                pass
+        """)
+    assert _lint_source(tmp_path, src) == []
+
+
+def test_rt006_locked_write_ok(tmp_path):
+    src = FIXTURES["RT006"].replace(
+        "    def bump(self):\n        self.count += 1\n", "")
+    assert _lint_source(tmp_path, src) == []
+
+
+# -- the real tree must be clean --------------------------------------------
+
+
+def test_repro_tree_is_clean():
+    findings = lint_tree()
+    assert findings == [], format_findings(findings)
+
+
+# ---------------------------------------------------------------------------
+# Lock-order detector
+
+
+def test_lock_order_cycle_detected_with_stacks():
+    mon = locks.LockMonitor()
+    a, b = mon.lock("A"), mon.lock("B")
+    with a:
+        with b:
+            pass
+    with b:
+        with a:
+            pass
+    cycles = mon.cycles()
+    assert len(cycles) == 1
+    assert set(cycles[0]) == {"A", "B"}
+    report = mon.report()
+    assert "POTENTIAL DEADLOCK" in report
+    # both acquisition stacks are attached
+    assert "A held while acquiring B" in report
+    assert "B held while acquiring A" in report
+    assert "test_analysis.py" in report
+
+
+def test_consistent_order_is_acyclic():
+    mon = locks.LockMonitor()
+    a, b, c = mon.lock("A"), mon.lock("B"), mon.lock("C")
+    for _ in range(3):
+        with a, b, c:
+            pass
+        with a, c:
+            pass
+    assert mon.cycles() == []
+    assert "OK" in mon.report()
+
+
+def test_rlock_reentrancy_no_self_edge():
+    mon = locks.LockMonitor()
+    r = mon.rlock("R")
+    with r:
+        with r:
+            pass
+    assert mon.edges() == []
+    assert mon._held() == []    # bookkeeping drained
+
+
+def test_two_instances_same_class_not_an_edge():
+    mon = locks.LockMonitor()
+    a1, a2 = mon.lock("A"), mon.lock("A")
+    with a1:
+        with a2:
+            pass
+    assert mon.edges() == []
+
+
+def test_cross_thread_edges_merge():
+    mon = locks.LockMonitor()
+    a, b = mon.lock("A"), mon.lock("B")
+
+    def forward():
+        with a:
+            with b:
+                pass
+
+    def backward():
+        with b:
+            with a:
+                pass
+
+    t1 = threading.Thread(target=forward, daemon=True)
+    t2 = threading.Thread(target=backward, daemon=True)
+    t1.start(); t1.join()
+    t2.start(); t2.join()
+    assert len(mon.cycles()) == 1
+
+
+def test_dispatch_note_flags_held_locks():
+    mon = locks.LockMonitor()
+    lk = mon.lock("ctl")
+    mon.note_dispatch()                       # nothing held: clean
+    assert mon.dispatch_violations == []
+    with lk:
+        mon.note_dispatch()
+    assert len(mon.dispatch_violations) == 1
+    thread, held, _stack = mon.dispatch_violations[0]
+    assert held == ("ctl",)
+    assert "DEVICE DISPATCH" in mon.report()
+
+
+def test_tracked_lock_behaves_like_a_lock():
+    mon = locks.LockMonitor()
+    lk = mon.lock("L")
+    assert lk.acquire()
+    assert lk.locked()
+    assert lk._is_owned()
+    lk.release()
+    assert not lk.locked()
+    assert not lk._is_owned()
+    assert lk.acquire(False)
+    lk.release()
+
+
+def test_monkeypatch_tracks_only_prefixed_modules(subproc):
+    out = subproc(textwrap.dedent("""\
+        import threading, types
+        from repro.analysis import locks
+        mon = locks.install()
+        fake = types.ModuleType("repro.fakemod")
+        exec("import threading\\n"
+             "def make():\\n"
+             "    return threading.Lock()\\n", fake.__dict__)
+        tracked = fake.make()
+        assert isinstance(tracked, locks.TrackedLock), type(tracked)
+        assert "repro.fakemod" in tracked._key
+        plain = threading.Lock()            # __main__: left native
+        assert not isinstance(plain, locks.TrackedLock)
+        import queue
+        q = queue.Queue()                   # stdlib internals left native
+        assert not isinstance(q.mutex, locks.TrackedLock)
+        assert locks.uninstall() is mon
+        assert not isinstance(threading.Lock(), locks.TrackedLock)
+        print("MONKEYPATCH-OK")
+        """), n_devices=1)
+    assert "MONKEYPATCH-OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Guarded-by runtime assertions
+
+
+def _fresh_guarded_class():
+    @guards.guarded_by("_lock", "x")
+    class T:
+        def __init__(self):
+            self.x = 0              # first bind precedes the lock: allowed
+            self._lock = threading.RLock()
+
+        def locked_bump(self):
+            with self._lock:
+                self.x += 1
+    return T
+
+
+def test_guards_fire_when_enabled_and_free_when_off():
+    guards.disable_guards()
+    T = _fresh_guarded_class()
+    t = T()
+    t.x = 1                          # disabled: plain attribute
+    assert "x" not in T.__dict__     # zero instrumentation installed
+    guards.enable_guards()
+    try:
+        with pytest.raises(guards.GuardViolation):
+            t.x = 2
+        with pytest.raises(guards.GuardViolation):
+            _ = t.x
+        t.locked_bump()              # value handed off seamlessly
+        with t._lock:
+            assert t.x == 2
+    finally:
+        guards.disable_guards()
+    assert "x" not in T.__dict__
+    t.x = 5                          # free again
+    assert t.x == 5
+
+
+def test_guards_allow_construction_before_lock_exists():
+    guards.enable_guards()
+    try:
+        T = _fresh_guarded_class()
+        t = T()                      # must not raise mid-__init__
+        with t._lock:
+            assert t.x == 0
+    finally:
+        guards.disable_guards()
+
+
+def test_guard_violation_names_field_lock_and_thread():
+    guards.enable_guards()
+    try:
+        t = _fresh_guarded_class()()
+        with pytest.raises(guards.GuardViolation) as exc:
+            t.x = 9
+        msg = str(exc.value)
+        assert "T.x" in msg and "_lock" in msg and "thread" in msg
+    finally:
+        guards.disable_guards()
+
+
+def test_registered_introspection_covers_hot_classes():
+    import repro.cluster.frontend    # noqa: F401 — populate registry
+    import repro.runtime.arbiter     # noqa: F401
+    reg = guards.registered()
+    assert "_outstanding" in reg["DynamicServer"]["_acct_lock"]
+    assert "last_alloc" in reg["ResourceArbiter"]["_lock"]
+    assert "placements" in reg["Cluster"]["_lock"]
+
+
+def test_env_var_enables_guards_in_fresh_process(subproc, monkeypatch):
+    monkeypatch.setenv(guards.ENV_VAR, "1")
+    out = subproc(textwrap.dedent("""\
+        import threading
+        from repro.analysis import guards
+        assert guards.guards_enabled()
+        @guards.guarded_by("_lock", "x")
+        class T:
+            def __init__(self):
+                self.x = 0
+                self._lock = threading.RLock()
+        t = T()
+        try:
+            t.x = 1
+            raise SystemExit("guard did not fire")
+        except guards.GuardViolation:
+            print("GUARD-FIRED")
+        """), n_devices=1)
+    assert "GUARD-FIRED" in out
+
+
+def test_live_arbiter_clean_under_guards():
+    """A real arbiter exercised end to end with guards on: every internal
+    access is lock-disciplined, and the locked accessor keeps external
+    readers clean too."""
+    from repro.core.types import ElasticSpace
+    from repro.runtime import (GlobalConstraints, ResourceArbiter, model_lut)
+    from repro.runtime import hwmodel as hm
+
+    space = ElasticSpace(width_mults=(0.5, 1.0), ffn_mults=(1.0,),
+                         depth_mults=(1.0,))
+    terms = hm.RooflineTerms(t_compute=0.02, t_memory=0.008,
+                             t_collective=0.004)
+    lut = model_lut(space.enumerate(), full_terms=terms, full_chips=256)
+    guards.enable_guards()
+    try:
+        arb = ResourceArbiter(interval_s=0.01)
+        arb.register("api", lut, target_latency_ms=500.0, priority=1)
+        g = GlobalConstraints(total_chips=4, power_budget_w=200.0)
+        arb.arbitrate(g)
+        assert "api" in arb.last_allocations()
+        assert "api" in arb.summary()
+    finally:
+        guards.disable_guards()
